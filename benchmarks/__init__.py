@@ -1,0 +1,2 @@
+"""Benchmark harness: one module per paper figure/table (GraftDB Figs 6-12)
+plus the dry-run/roofline artifacts consumed by EXPERIMENTS.md."""

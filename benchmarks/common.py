@@ -1,0 +1,142 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+All experiments run every system on IDENTICAL per-client query-instance
+sequences and identical arrival traces (paper §6.1). Virtual time
+(WorkClock) uses the calibrated single-worker cost model, making the
+hour-scale open-loop sweeps deterministic and fast; the work-model counters
+(rows/bytes) are clock-independent. fig6 additionally runs wall-clock.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import GraftEngine, Runner
+from repro.core.scheduler import WallClock, WorkClock
+from repro.relational import queries, tpch
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+SYSTEMS = ["isolated", "qpipe_osp", "graft"]
+ALL_SYSTEMS = ["isolated", "scan_sharing", "qpipe_osp", "residual", "graft"]
+
+DEFAULT_SF = 0.05
+MORSEL = 16384
+
+
+def get_db(sf: float = DEFAULT_SF):
+    return tpch.get_database(sf)
+
+
+def client_sequences(db, n_clients: int, n_per: int, seed: int, zipf_alpha: float = 1.0):
+    """Identical per-client query-instance sequences across systems: a list
+    of (template, params) per client (plans are rebuilt per run so query ids
+    stay unique)."""
+    seqs = []
+    for c in range(n_clients):
+        rng = np.random.default_rng(seed * 10_000 + c)
+        seq = []
+        for _ in range(n_per):
+            q = queries.sample_query(db, rng, zipf_alpha=zipf_alpha)
+            seq.append((q.template, q.params))
+        seqs.append(seq)
+    return seqs
+
+
+def run_closed_loop(db, mode: str, seqs, wall: bool = False) -> Dict:
+    """Closed loop: each client has one outstanding query; submits the next
+    on completion (paper §6.3). Returns throughput/latency/counters."""
+    eng = GraftEngine(db, mode=mode, morsel_size=MORSEL)
+    runner = Runner(eng, clock=WallClock() if wall else WorkClock())
+    idx = {c: 0 for c in range(len(seqs))}
+    owner: Dict[int, int] = {}
+    arrivals = []
+    for c, seq in enumerate(seqs):
+        t, p = seq[0]
+        q = queries.make_query(db, t, p, arrival=0.0)
+        idx[c] = 1
+        owner[q.qid] = c
+        arrivals.append(q)
+
+    def on_complete(h):
+        c = owner.pop(h.qid, None)
+        if c is None or idx[c] >= len(seqs[c]):
+            return None
+        t, p = seqs[c][idx[c]]
+        idx[c] += 1
+        q = queries.make_query(db, t, p, arrival=runner.clock.now)
+        owner[q.qid] = c
+        return q
+
+    done = runner.run(arrivals, on_complete=on_complete)
+    elapsed = runner.clock.now
+    lats = np.array([h.t_complete - h.query.arrival for h in done])
+    return {
+        "mode": mode,
+        "completed": len(done),
+        "elapsed_s": elapsed,
+        "throughput_qph": len(done) / elapsed * 3600 if elapsed > 0 else 0.0,
+        "median_latency_s": float(np.median(lats)),
+        "p95_latency_s": float(np.percentile(lats, 95)),
+        "latencies": lats.tolist(),
+        "counters": {k: float(v) for k, v in eng.counters.items()},
+    }
+
+
+def run_open_loop(
+    db,
+    mode: str,
+    offered_qph: float,
+    measure_s: float = 60.0,
+    warm_qph: float = 1000.0,
+    warm_s: float = 120.0,
+    seed: int = 11,
+) -> Dict:
+    """Open loop (paper §6.5): Poisson arrivals at the offered load; the run
+    drains after the measurement phase. Response time = scheduled arrival ->
+    completion. All systems replay the same trace."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    t = 0.0
+    while t < warm_s:
+        t += rng.exponential(3600.0 / warm_qph)
+        if t < warm_s:
+            trace.append(t)
+    t = warm_s
+    end = warm_s + measure_s
+    measured_from = len(trace)
+    while t < end:
+        t += rng.exponential(3600.0 / offered_qph)
+        if t < end:
+            trace.append(t)
+    qrng = np.random.default_rng(seed + 1)
+    arrivals = [
+        queries.sample_query(db, qrng, arrival=at) for at in trace
+    ]
+    eng = GraftEngine(db, mode=mode, morsel_size=MORSEL)
+    runner = Runner(eng, clock=WorkClock())
+    done = runner.run(arrivals)
+    by_qid = {h.qid: h for h in done}
+    lats = np.array(
+        [by_qid[q.qid].t_complete - q.arrival for q in arrivals[measured_from:]]
+    )
+    return {
+        "mode": mode,
+        "offered_qph": offered_qph,
+        "n_measured": len(lats),
+        "p95_s": float(np.percentile(lats, 95)) if len(lats) else float("nan"),
+        "median_s": float(np.median(lats)) if len(lats) else float("nan"),
+    }
+
+
+def save(name: str, obj) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+def emit(rows: List[tuple]) -> None:
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)

@@ -1,0 +1,36 @@
+"""Fig. 11: throughput at fixed 8-client concurrency as template skew
+increases (paper §6.6). Zipf alpha 0.0 -> 1.6; parameters stay uniform over
+large domains. Paper anchor: GraftDB 1.34x Isolated at alpha=0, 1.60x at 1.6."""
+
+from __future__ import annotations
+
+from .common import client_sequences, emit, get_db, run_closed_loop, save
+
+SYSTEMS = ["isolated", "qpipe_osp", "graft"]
+ALPHAS = [0.0, 0.4, 0.8, 1.2, 1.6]
+
+
+def run(sf: float = 0.05, n_clients: int = 8, seed: int = 5):
+    db = get_db(sf)
+    data = []
+    rows = [("fig11", "zipf_alpha", "mode", "throughput_qph", "x_isolated")]
+    for alpha in ALPHAS:
+        seqs = client_sequences(db, n_clients, 20, seed, zipf_alpha=alpha)
+        base = None
+        for mode in SYSTEMS:
+            r = run_closed_loop(db, mode, seqs)
+            r.pop("latencies")
+            r["alpha"] = alpha
+            data.append(r)
+            if mode == "isolated":
+                base = r["throughput_qph"]
+            rows.append(
+                ("fig11", alpha, mode, round(r["throughput_qph"], 1), round(r["throughput_qph"] / base, 3))
+            )
+    save("fig11_skew", data)
+    emit(rows)
+    return data
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Fig. 12: workload completion time as data scale grows (paper §6.6).
+
+Fixed 8-client closed-loop workload shape across scale factors. Paper
+anchor: GraftDB completes in 0.72-0.74x Isolated time across SF1-SF30.
+(Scale factors here span this container's memory budget; the ratio, not the
+absolute SF, is the reproduction target.)
+"""
+
+from __future__ import annotations
+
+from .common import client_sequences, emit, run_closed_loop, save
+from repro.relational import tpch
+
+SYSTEMS = ["isolated", "qpipe_osp", "graft"]
+SFS = [0.02, 0.05, 0.1]
+
+
+def run(n_clients: int = 8, seed: int = 7):
+    data = []
+    rows = [("fig12", "sf", "mode", "completion_s", "x_isolated")]
+    for sf in SFS:
+        db = tpch.get_database(sf)
+        seqs = client_sequences(db, n_clients, 20, seed)
+        base = None
+        for mode in SYSTEMS:
+            r = run_closed_loop(db, mode, seqs)
+            r.pop("latencies")
+            r["sf"] = sf
+            data.append(r)
+            if mode == "isolated":
+                base = r["elapsed_s"]
+            rows.append(
+                ("fig12", sf, mode, round(r["elapsed_s"], 2), round(r["elapsed_s"] / base, 3))
+            )
+    save("fig12_scale", data)
+    emit(rows)
+    return data
+
+
+if __name__ == "__main__":
+    run()

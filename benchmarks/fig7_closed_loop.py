@@ -1,0 +1,59 @@
+"""Fig. 7 + Fig. 8: closed-loop throughput and per-query latency as
+concurrency increases (paper §6.3).
+
+Clients {1,2,4,8,16,32}, 20 query instances each, one outstanding query per
+client, identical per-client sequences across systems. Paper anchors:
+GraftDB ~0.99x Isolated at 1 client, 2.17x at 32 clients; median latency
+0.48x Isolated at 32 clients.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import client_sequences, emit, get_db, run_closed_loop, save
+
+SYSTEMS = ["isolated", "qpipe_osp", "graft"]
+CLIENTS = [1, 2, 4, 8, 16, 32]
+N_PER = 20
+
+
+def run(sf: float = 0.05, seed: int = 3):
+    db = get_db(sf)
+    data = []
+    rows = [("fig7", "clients", "mode", "throughput_qph", "median_lat_s", "p95_lat_s", "x_isolated")]
+    for n in CLIENTS:
+        seqs = client_sequences(db, n, N_PER, seed)
+        base = None
+        for mode in SYSTEMS:
+            r = run_closed_loop(db, mode, seqs)
+            r["clients"] = n
+            lat = r.pop("latencies")
+            r["latency_hist"] = list(np.percentile(lat, [5, 25, 50, 75, 95]))
+            data.append(r)
+            if mode == "isolated":
+                base = r["throughput_qph"]
+            rows.append(
+                (
+                    "fig7",
+                    n,
+                    mode,
+                    round(r["throughput_qph"], 1),
+                    round(r["median_latency_s"], 3),
+                    round(r["p95_latency_s"], 3),
+                    round(r["throughput_qph"] / base, 3),
+                )
+            )
+    save("fig7_closed_loop", data)
+    emit(rows)
+    at32 = {d["mode"]: d for d in data if d["clients"] == CLIENTS[-1]}
+    iso, gr = at32["isolated"], at32["graft"]
+    print(
+        f"# fig7@{CLIENTS[-1]}: graft {gr['throughput_qph']/iso['throughput_qph']:.2f}x isolated "
+        f"(paper 2.17x); median lat {gr['median_latency_s']/iso['median_latency_s']:.2f}x (paper 0.48x)"
+    )
+    return data
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Concurrent analytical workload: 16 closed-loop clients over the default
+Zipf template mix, comparing Isolated / QPipe-OSP / GraftDB on identical
+per-client sequences (paper §6.3 shape).
+
+  PYTHONPATH=src python examples/concurrent_workload.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import client_sequences, get_db, run_closed_loop
+
+
+def main():
+    db = get_db(0.05)
+    seqs = client_sequences(db, n_clients=16, n_per=10, seed=3)
+    base = None
+    for mode in ("isolated", "qpipe_osp", "graft"):
+        r = run_closed_loop(db, mode, seqs)
+        if base is None:
+            base = r["throughput_qph"]
+        print(
+            f"{mode:12s} throughput {r['throughput_qph']:9.0f} q/h "
+            f"({r['throughput_qph']/base:4.2f}x) median latency {r['median_latency_s']:6.3f}s "
+            f"p95 {r['p95_latency_s']:6.3f}s"
+        )
+
+
+if __name__ == "__main__":
+    main()

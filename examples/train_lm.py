@@ -1,0 +1,39 @@
+"""End-to-end training driver example: train a ~25M-parameter dense LM
+(reduced stablelm family) for a few hundred steps on CPU with checkpointing
+— the same code path the production launcher uses on a TPU mesh.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Loss falls from ~ln(V) toward the entropy of the structured synthetic
+bigram stream. Interrupt and re-run to exercise restart-from-checkpoint.
+"""
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    # ~25M params: a genuinely-training reduced config (not the 3B target)
+    T.main(
+        [
+            "--arch", "stablelm-3b", "--smoke",
+            "--steps", str(args.steps),
+            "--batch", "16", "--seq", "128", "--lr", "3e-3",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

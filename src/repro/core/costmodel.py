@@ -1,0 +1,59 @@
+"""Work-clock cost-model calibration.
+
+The default constants (engine.DEFAULT_COST_MODEL) model the paper's
+~100 ns/row single-worker row engine. ``calibrate()`` measures THIS host's
+vectorized data plane instead (numpy filter / sort-probe / insert / segment
+sum throughput) and returns a cost model for wall-clock-faithful virtual
+time. Benchmarks use the fixed defaults so results are machine-independent;
+calibration is exposed for deployments that want host-accurate queueing.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from .engine import DEFAULT_COST_MODEL
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def calibrate(n: int = 1 << 20, seed: int = 0) -> Dict[str, float]:
+    rng = np.random.default_rng(seed)
+    col = rng.uniform(0, 1000, n)
+    keys = rng.integers(0, n, n)
+    skeys = np.sort(rng.choice(2 * n, n // 4, replace=False))
+    vals = rng.normal(size=n)
+    gids = rng.integers(0, 1024, n)
+
+    t_scan = _time(lambda: col.copy()) / n
+    t_filter = _time(lambda: (col > 500.0) & (col < 900.0)) / n
+    t_probe = _time(lambda: np.searchsorted(skeys, keys)) / n
+    idx = np.searchsorted(skeys, keys).clip(0, len(skeys) - 1)
+    t_match = _time(lambda: skeys[idx] == keys) / n
+    t_insert = _time(lambda: np.sort(keys[: n // 4], kind="stable")) / (n // 4)
+    t_agg = _time(lambda: np.bincount(gids, weights=vals, minlength=1024)) / n
+
+    return {
+        "scan": max(t_scan, 1e-10),
+        "filter": max(t_filter, 1e-10),
+        "probe": max(t_probe, 1e-10),
+        "match": max(t_match, 1e-10),
+        "insert": max(t_insert * 2, 1e-10),  # insert ~= sort share + dict upkeep
+        "mark": max(t_match * 2, 1e-10),
+        "agg": max(t_agg, 1e-10),
+    }
+
+
+def scaled_default(target_row_ns: float = 100.0) -> Dict[str, float]:
+    """DEFAULT_COST_MODEL rescaled so 'scan' hits target ns/row."""
+    k = target_row_ns * 1e-9 / DEFAULT_COST_MODEL["scan"]
+    return {name: v * k for name, v in DEFAULT_COST_MODEL.items()}

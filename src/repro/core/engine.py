@@ -1,0 +1,328 @@
+"""GraftEngine: the multi-query execution engine facade.
+
+Execution modes (paper §6.1 / §6.4):
+
+* ``isolated``     — same engine, all sharing disabled (private scans,
+                     private pipelines, private states).
+* ``qpipe_osp``    — QPipe's on-demand simultaneous pipelining: shared
+                     scans + in-flight operator merge under *identical*
+                     operator profiles (predicates included) with zero
+                     progress; no coverage-based observation of built state.
+* ``scan_sharing`` — shared cyclic scans only (+Scan Sharing variant).
+* ``residual``     — + residual production into common shared state
+                     (+Residual Production variant).
+* ``graft``        — + represented-extent attachment through per-query
+                     state lenses (full GraftDB).
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..relational.table import Database
+from .descriptors import StateSignature, aggregate_signature
+from .grafting import all_boundaries, estimate_demand, plan_spine, resolve_boundary
+from .plans import Aggregate, OrderBy, Query
+from .predicates import TRUE
+from .runtime import AggGate, AggSink, Member, Pipeline, ProbeOp, ScanNode
+from .state import SharedAggregateState, SharedHashBuildState
+
+
+@dataclass(frozen=True)
+class Mode:
+    name: str
+    share_scans: bool = False
+    share_pipelines: bool = False
+    share_state: bool = False
+    allow_residual: bool = False
+    allow_represented: bool = False
+    agg_share: str = "none"  # 'none' | 'qpipe' | 'live' | 'full'
+    qpipe: bool = False
+
+
+MODES: Dict[str, Mode] = {
+    "isolated": Mode("isolated"),
+    "scan_sharing": Mode("scan_sharing", share_scans=True),
+    "qpipe_osp": Mode("qpipe_osp", share_scans=True, qpipe=True, agg_share="qpipe"),
+    "residual": Mode(
+        "residual",
+        share_scans=True,
+        share_pipelines=True,
+        share_state=True,
+        allow_residual=True,
+        agg_share="live",
+    ),
+    "graft": Mode(
+        "graft",
+        share_scans=True,
+        share_pipelines=True,
+        share_state=True,
+        allow_residual=True,
+        allow_represented=True,
+        agg_share="full",
+    ),
+}
+
+# Modeled per-row costs (seconds) of the paper's single-worker row engine
+# (~100ns/row class, consistent with Q3@SF10 ≈ 14s in paper Fig.6);
+# core/costmodel.py can recalibrate against the host. Ratios between engine
+# modes come from row counts, not from these constants.
+DEFAULT_COST_MODEL: Dict[str, float] = {
+    "scan": 100e-9,
+    "filter": 80e-9,
+    "probe": 200e-9,
+    "match": 150e-9,
+    "insert": 600e-9,
+    "mark": 250e-9,
+    "agg": 400e-9,
+}
+
+
+class QueryHandle:
+    def __init__(self, query: Query, t_submit: float):
+        self.qid = query.qid
+        self.query = query
+        self.t_submit = t_submit
+        self.t_complete: Optional[float] = None
+        self.attached_states: List[SharedHashBuildState] = []
+        self.members: List[Member] = []
+        self.agg_state: Optional[SharedAggregateState] = None
+        self.agg_gate: Optional[AggGate] = None
+        self.orderby: Optional[OrderBy] = None
+        self.result: Optional[Dict[str, np.ndarray]] = None
+        self.done = False
+
+    @property
+    def latency(self) -> float:
+        return (self.t_complete or 0.0) - self.query.arrival
+
+
+class GraftEngine:
+    def __init__(
+        self,
+        db: Database,
+        mode: str = "graft",
+        morsel_size: int = 65536,
+        cost_model: Optional[Dict[str, float]] = None,
+        zone_maps: bool = False,
+    ):
+        self.db = db
+        self.mode = MODES[mode]
+        self.morsel_size = morsel_size
+        self.cost_model = dict(cost_model or DEFAULT_COST_MODEL)
+        self.zone_maps = zone_maps  # beyond-paper morsel skipping (§Perf)
+
+        self.scans: Dict[object, ScanNode] = {}
+        self.pipelines: Dict[object, Pipeline] = {}
+        self.state_index: Dict[StateSignature, List[SharedHashBuildState]] = {}
+        self.agg_index: Dict[StateSignature, SharedAggregateState] = {}
+        self.qpipe_registry: Dict[object, Tuple[Member, SharedHashBuildState]] = {}
+        self.handles: Dict[int, QueryHandle] = {}
+        self.active_handles: List[QueryHandle] = []
+        self.completed: List[QueryHandle] = []
+        self.counters: Dict[str, float] = defaultdict(float)
+        self.demand_cache: Dict = {}
+        self._domains: Dict[str, int] = {}
+        self._next_state_id = 0
+        self._agg_producers: Dict[int, SharedAggregateState] = {}  # member.mid -> agg
+
+        # clock is attached by the scheduler
+        self.clock = None
+
+    # -- helpers -------------------------------------------------------------
+    def get_scan(self, table: str, qid: int) -> ScanNode:
+        key = table if self.mode.share_scans else (table, qid)
+        node = self.scans.get(key)
+        if node is None:
+            node = ScanNode(self.db[table], self.morsel_size, zone_maps=self.zone_maps)
+            self.scans[key] = node
+        return node
+
+    def new_hash_state(self, sig, join, did_domain: int) -> SharedHashBuildState:
+        self._next_state_id += 1
+        return SharedHashBuildState(
+            self._next_state_id, sig, tuple(join.build_keys), tuple(join.payload), did_domain
+        )
+
+    # -- submission (query grafting, §5.2) ------------------------------------
+    def submit(self, query: Query) -> QueryHandle:
+        now = self.clock.now if self.clock is not None else query.arrival
+        handle = QueryHandle(query, now)
+        self.handles[query.qid] = handle
+        self.active_handles.append(handle)
+        self.counters["submitted"] += 1
+
+        scan, joins, agg, orderby = plan_spine(query.plan)
+        handle.orderby = orderby
+
+        # -- aggregate identity: observe or live-share one aggregate state
+        agg_sig = aggregate_signature(agg)
+        if agg_sig is not None and self.mode.agg_share != "none":
+            existing = self.agg_index.get(agg_sig)
+            if existing is not None and self._agg_attachable(existing):
+                existing.attach(handle.qid)
+                handle.agg_state = existing
+                handle.agg_gate = AggGate(existing)
+                self.counters["agg_attaches"] += 1
+                for b in all_boundaries(query.plan):
+                    d = estimate_demand(self, b.build)
+                    self.counters["demand_rows"] += d
+                    self.counters["eliminated_rows"] += d
+                self._maybe_complete(handle)
+                return handle
+
+        # -- per-boundary grafting admission (Algorithm 1), bottom-up
+        ops: List[ProbeOp] = []
+        gates = []
+        stage_filters: Dict[int, List] = {}
+        for stage, j in enumerate(joins):
+            att = resolve_boundary(self, handle, j)
+            gates.append(att.gate)
+            out_names = j.payload_as if j.payload_as is not None else j.payload
+            ops.append(
+                ProbeOp(att.state, tuple(j.probe_keys), tuple(j.payload), tuple(out_names))
+            )
+            if j.post_filter is not TRUE:
+                stage_filters.setdefault(stage, []).append(j.post_filter)
+
+        # -- aggregate state (private; becomes shared under its identity)
+        self._next_state_id += 1
+        agg_state = SharedAggregateState(
+            self._next_state_id, agg_sig, tuple(agg.group_keys), tuple(agg.aggs)
+        )
+        agg_state.attach(handle.qid)
+        handle.agg_state = agg_state
+        handle.agg_gate = AggGate(agg_state)
+        if agg_sig is not None and self.mode.agg_share != "none":
+            self.agg_index[agg_sig] = agg_state
+
+        # -- main (state-consuming) pipeline + member
+        pkey = ("main", scan.table, tuple(op.state.state_id for op in ops))
+        if not self.mode.share_pipelines:
+            pkey = pkey + (handle.qid,)
+        pipeline = self.pipelines.get(pkey)
+        if pipeline is None:
+            pipeline = Pipeline(pkey, self.get_scan(scan.table, handle.qid), ops)
+            self.pipelines[pkey] = pipeline
+        member = Member(
+            handle.qid,
+            scan.pred,
+            gates,
+            sink=AggSink(agg_state, tuple(agg.group_keys), tuple(agg.aggs)),
+            stage_filters=stage_filters,
+            kind="main",
+        )
+        member.pipeline = pipeline
+        pipeline.add_member(member)
+        handle.members.append(member)
+        self._agg_producers[member.mid] = agg_state
+
+        self.check_activations()
+        return handle
+
+    def _agg_attachable(self, agg_state: SharedAggregateState) -> bool:
+        share = self.mode.agg_share
+        if share == "full":
+            return True
+        if share == "live":
+            return not agg_state.complete
+        if share == "qpipe":
+            return agg_state.rows_consumed == 0 and not agg_state.complete
+        return False
+
+    # -- events ----------------------------------------------------------------
+    def on_member_finished(self, pipeline: Pipeline, m: Member) -> None:
+        pipeline.slots.release(m.mid)
+        if pipeline.build_target is not None:
+            pipeline.build_target.state.complete_extent(m.eid)
+            for g in m.waiting_gates:
+                g.pending.discard(m)
+        else:
+            agg = self._agg_producers.get(m.mid)
+            if agg is not None:
+                agg.complete = True
+        if pipeline.all_done():
+            self.pipelines.pop(pipeline.key, None)
+            pipeline.source.detach(pipeline)
+        self._dirty = True
+
+    _dirty = False
+
+    def check_activations(self) -> None:
+        for pipeline in list(self.pipelines.values()):
+            for m in pipeline.members:
+                if m.activatable():
+                    m.active = True
+                    m.received = 0
+                    m.need = pipeline.source.n_morsels
+
+    def sweep_completions(self) -> List[QueryHandle]:
+        done: List[QueryHandle] = []
+        for h in list(self.active_handles):
+            if self._maybe_complete(h):
+                done.append(h)
+        return done
+
+    def _maybe_complete(self, handle: QueryHandle) -> bool:
+        if handle.done or handle.agg_gate is None or not handle.agg_gate.open():
+            return False
+        result = handle.agg_state.result()
+        if handle.orderby is not None:
+            result = _apply_orderby(result, handle.orderby)
+        handle.result = result
+        handle.t_complete = self.clock.now if self.clock is not None else 0.0
+        handle.done = True
+        self.active_handles.remove(handle)
+        self.completed.append(handle)
+        self.counters["completed"] += 1
+        self._release(handle)
+        return True
+
+    def _release(self, handle: QueryHandle) -> None:
+        """Retention policy of the evaluated prototype: release operator
+        state once no query in the shared execution references it."""
+        for s in handle.attached_states:
+            s.detach(handle.qid)
+            if not s.refs:
+                lst = self.state_index.get(s.sig)
+                if lst and s in lst:
+                    lst.remove(s)
+                # drop stale qpipe registry entries targeting this state
+                for k, (m, st) in list(self.qpipe_registry.items()):
+                    if st is s:
+                        self.qpipe_registry.pop(k, None)
+        agg = handle.agg_state
+        if agg is not None:
+            agg.detach(handle.qid)
+            if not agg.refs and agg.sig is not None and self.agg_index.get(agg.sig) is agg:
+                self.agg_index.pop(agg.sig, None)
+
+    # -- introspection -----------------------------------------------------------
+    def has_active_work(self) -> bool:
+        return bool(self.active_handles)
+
+    def stats(self) -> Dict[str, float]:
+        out = dict(self.counters)
+        out["live_states"] = sum(len(v) for v in self.state_index.values())
+        return out
+
+
+def _apply_orderby(result: Dict[str, np.ndarray], ob: OrderBy) -> Dict[str, np.ndarray]:
+    if not result:
+        return result
+    n = len(next(iter(result.values())))
+    if n == 0:
+        return result
+    cols = []
+    for k, asc in zip(reversed(ob.keys), reversed(ob.ascending)):
+        c = result[k]
+        cols.append(c if asc else -c)
+    order = np.lexsort(cols) if cols else np.arange(n)
+    if ob.limit is not None:
+        order = order[: ob.limit]
+    return {k: v[order] for k, v in result.items()}

@@ -1,0 +1,454 @@
+"""Operational runtime objects for state-centric execution.
+
+The shared execution DAG (§5.1) is realized by three kinds of live objects:
+
+* ``ScanNode`` — a cyclic shared scan over one base table (§4.4). One
+  cursor; every attached pipeline receives each emitted morsel. Paths
+  attach mid-cycle and complete when the cursor wraps back to their start.
+* ``Pipeline`` — a producer or consumer path: source scan -> zero or more
+  hash-probe ops -> sink (build into shared state / per-query aggregates).
+  One physical pipeline serves many queries ("members"): per-row packed
+  visibility bitmasks route every row to exactly the queries whose
+  predicates and state lenses admit it (§4.2, §4.6).
+* ``Gate`` — a state-readiness gate (§5.3) guarding a member's activation:
+  open when the selected state covers the member's assigned extent and all
+  residual producer members installed for it have completed.
+
+Morsels are the TPU adaptation of the paper's row fragments (DESIGN.md §2):
+every step is a vectorized column-batch operation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..relational.table import Table
+from .plans import AggSpec, expr_eval
+from .predicates import AttrConstraint, Conjunction, Pred, TRUE, evaluate
+from .state import ALL_EXTENTS, SharedAggregateState, SharedHashBuildState
+from .visibility import SlotAllocator, bit_of
+
+U64_1 = np.uint64(1)
+
+
+def _member_conj(m: "Member"):
+    """Cached canonical conjunction of a member's source predicate (None
+    when outside the prover fragment)."""
+    if not hasattr(m, "_conj_cache"):
+        m._conj_cache = Conjunction.from_pred(m.pred)
+    return m._conj_cache
+
+
+# ---------------------------------------------------------------------------
+# Key encoding: composite equi-join keys -> single int64 (mixed radix)
+# ---------------------------------------------------------------------------
+
+
+KEY_RADIX = np.int64(1 << 21)  # per-component domain bound (asserted in datagen scale)
+
+
+def encode_keys(cols: Dict[str, np.ndarray], attrs: Sequence[str]) -> np.ndarray:
+    code = np.asarray(cols[attrs[0]], dtype=np.int64)
+    for a in attrs[1:]:
+        code = code * KEY_RADIX + np.asarray(cols[a], dtype=np.int64)
+    return code
+
+
+# ---------------------------------------------------------------------------
+# Gates (§5.3)
+# ---------------------------------------------------------------------------
+
+
+class Gate:
+    """State-readiness gate for one admitted state-ref edge r=(q, b, v).
+
+    open iff stateReady(S, r, R): the selected state covers the assigned
+    extent (coverage restricted to the grant's allowed provenance extents
+    when the attachment is represented) and every residual producer member
+    installed for this edge has completed."""
+
+    def __init__(
+        self,
+        state: SharedHashBuildState,
+        conj: Optional[Conjunction],
+        allowed_emask: Optional[np.uint64] = None,
+    ):
+        self.state = state
+        self.conj = conj
+        self.allowed_emask = allowed_emask
+        self.pending: set = set()  # producer Member objects still owed
+        self._open_cache = False
+
+    def open(self) -> bool:
+        if self._open_cache:
+            return True
+        if self.pending:
+            return False
+        if self.conj is not None and self.allowed_emask is not None:
+            if not self.state.covers_with(self.conj, self.allowed_emask):
+                return False
+        self._open_cache = True
+        return True
+
+
+class AggGate:
+    """Readiness of a shared aggregate state under exact identity (§4.5)."""
+
+    def __init__(self, agg_state: SharedAggregateState):
+        self.agg_state = agg_state
+
+    def open(self) -> bool:
+        return self.agg_state.complete
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BuildTarget:
+    """Pipeline-level sink: insert produced rows into a shared hash-build
+    state, with visibility + extent provenance combined across members."""
+
+    state: SharedHashBuildState
+    key_attrs: Tuple[str, ...]
+
+
+@dataclass
+class AggSink:
+    """Per-member sink: fold the member's visible rows into (possibly
+    shared) aggregate state."""
+
+    agg_state: SharedAggregateState
+    group_keys: Tuple[str, ...]
+    aggs: Tuple[AggSpec, ...]
+
+
+# ---------------------------------------------------------------------------
+# Members
+# ---------------------------------------------------------------------------
+
+
+class Member:
+    """One query's participation in a pipeline (an active node-query pair in
+    Algorithm 2's sense). ``beneficiaries`` supports QPipe-style merged
+    identical profiles: one physical member tagging several queries."""
+
+    _next_id = 0
+
+    def __init__(
+        self,
+        qid: int,
+        pred: Pred,
+        gates: List[Gate],
+        sink: Optional[AggSink] = None,
+        stage_filters: Optional[Dict[int, List[Pred]]] = None,
+        kind: str = "main",  # 'main' | 'ordinary' | 'residual'
+        eid: int = -1,
+        conj: Optional[Conjunction] = None,
+        beneficiaries: Optional[List[int]] = None,
+    ):
+        Member._next_id += 1
+        self.mid = Member._next_id
+        self.qid = qid
+        self.pred = pred
+        self.gates = gates
+        self.sink = sink
+        self.stage_filters = stage_filters or {}
+        self.kind = kind
+        self.eid = eid
+        self.conj = conj
+        self.beneficiaries = beneficiaries or [qid]
+
+        self.active = False
+        self.done = False
+        self.received = 0
+        self.need = 0
+        self.slot = -1  # pipeline-local bit slot
+        self.rows_sunk = 0
+        self.waiting_gates: List[Gate] = []  # gates whose pending set holds us
+        self.pipeline: Optional["Pipeline"] = None
+
+    @property
+    def bitval(self) -> np.uint64:
+        return U64_1 << np.uint64(self.slot)
+
+    def activatable(self) -> bool:
+        return (not self.active) and (not self.done) and all(g.open() for g in self.gates)
+
+
+# ---------------------------------------------------------------------------
+# Probe op
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ProbeOp:
+    state: SharedHashBuildState
+    probe_attrs: Tuple[str, ...]
+    payload: Tuple[str, ...]  # entry attrs (canonical names in the state)
+    out_names: Tuple[str, ...] = ()  # names in the row stream (renames)
+
+    def __post_init__(self):
+        if not self.out_names:
+            self.out_names = tuple(self.payload)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    _next_id = 0
+
+    def __init__(
+        self,
+        key,
+        source: "ScanNode",
+        ops: List[ProbeOp],
+        build_target: Optional[BuildTarget] = None,
+        compose_did: bool = False,
+    ):
+        Pipeline._next_id += 1
+        self.pid = Pipeline._next_id
+        self.key = key
+        self.source = source
+        self.ops = ops
+        self.build_target = build_target
+        self.compose_did = compose_did
+        self.members: List[Member] = []
+        self.slots = SlotAllocator()
+        source.attach(self)
+
+    # -- membership ---------------------------------------------------------
+    def add_member(self, m: Member) -> None:
+        m.slot = self.slots.get(m.mid)
+        self.members.append(m)
+
+    def active_members(self) -> List[Member]:
+        return [m for m in self.members if m.active and not m.done]
+
+    def progress(self) -> int:
+        return max((m.received for m in self.members), default=0)
+
+    def all_done(self) -> bool:
+        return all(m.done for m in self.members)
+
+    # -- execution ----------------------------------------------------------
+    def process(self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray) -> float:
+        """Run one morsel through the pipeline for all active members.
+        Returns the modeled cost (seconds) of the work performed."""
+        act = self.active_members()
+        if not act:
+            return 0.0
+        n = len(row_ids)
+        cm = engine.cost_model
+        cost = 0.0
+
+        # per-member source predicate -> packed row bitmask
+        bits = np.zeros(n, dtype=np.uint64)
+        for m in act:
+            mask = evaluate(m.pred, cols)
+            bits |= np.where(mask, m.bitval, np.uint64(0))
+        cost += cm["filter"] * n * len(act)
+
+        keep = np.flatnonzero(bits)
+        cols = {k: v[keep] for k, v in cols.items()}
+        bits = bits[keep]
+        did = row_ids[keep].astype(np.int64)
+
+        # hash-probe ops (§4.3: one physical probe step serves all queries
+        # whose visibility check succeeds)
+        for stage, op in enumerate(self.ops):
+            if len(did) == 0:
+                break
+            keycodes = encode_keys(cols, op.probe_attrs)
+            probe_idx, entry_idx = op.state.probe(keycodes)
+            cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
+            engine.counters["probe_rows"] += len(keycodes)
+            bits_in = bits[probe_idx]
+            new_bits = np.zeros(len(probe_idx), dtype=np.uint64)
+            for m in act:
+                vis = op.state.visible_mask(m.qid, entry_idx)
+                bm = bit_of(bits_in, m.slot) & vis
+                new_bits |= np.where(bm, m.bitval, np.uint64(0))
+            cols = {k: v[probe_idx] for k, v in cols.items()}
+            for a, out in zip(op.payload, op.out_names):
+                cols[out] = op.state.cols[a].data[entry_idx]
+            if self.compose_did:
+                did = did[probe_idx] * np.int64(op.state.did_domain) + op.state.did.data[entry_idx]
+            else:
+                did = did[probe_idx]
+            bits = new_bits
+            # member post-join filters at this stage
+            for m in act:
+                for p in m.stage_filters.get(stage, ()):  # e.g. Q5 ColEq
+                    bm = bit_of(bits, m.slot) & evaluate(p, cols)
+                    bits = (bits & ~m.bitval) | np.where(bm, m.bitval, np.uint64(0))
+            keep = np.flatnonzero(bits)
+            if len(keep) != len(bits):
+                cols = {k: v[keep] for k, v in cols.items()}
+                did = did[keep]
+                bits = bits[keep]
+
+        # sinks
+        if self.build_target is not None and len(did) > 0:
+            bt = self.build_target
+            vismask = np.zeros(len(did), dtype=np.uint64)
+            emask = np.zeros(len(did), dtype=np.uint64)
+            member_rows: List[Tuple[Member, int]] = []
+            for m in act:
+                sel = bit_of(bits, m.slot)
+                nsel = int(sel.sum())
+                if nsel:
+                    for b in m.beneficiaries:
+                        vismask[sel] |= bt.state.slots.mask(b)
+                    if m.eid >= 0:
+                        emask[sel] |= U64_1 << np.uint64(m.eid)
+                member_rows.append((m, nsel))
+            any_rows = vismask != 0
+            idx = np.flatnonzero(any_rows)
+            if len(idx):
+                keycodes = encode_keys(cols, bt.key_attrs)
+                ins, mrk = bt.state.insert_or_mark(
+                    did[idx],
+                    keycodes[idx],
+                    {a: cols[a][idx] for a in bt.state.retained_attrs},
+                    vismask[idx],
+                    emask[idx],
+                )
+                cost += cm["insert"] * ins + cm["mark"] * mrk
+            for m, nsel in member_rows:
+                m.rows_sunk += nsel
+                key = "residual_build_rows" if m.kind == "residual" else "ordinary_build_rows"
+                engine.counters[key] += nsel * len(m.beneficiaries)
+        else:
+            for m in act:
+                if m.sink is None:
+                    continue
+                sel = bit_of(bits, m.slot)
+                nsel = int(sel.sum())
+                if nsel == 0:
+                    continue
+                sink = m.sink
+                scols = {k: v[sel] for k, v in cols.items()}
+                key_cols = [scols[k] for k in sink.group_keys]
+                vals = [
+                    expr_eval(a.expr, scols) if a.expr is not None else None
+                    for a in sink.aggs
+                ]
+                vals = [
+                    np.broadcast_to(np.asarray(v, dtype=np.float64), (nsel,))
+                    if v is not None
+                    else None
+                    for v in vals
+                ]
+                sink.agg_state.update(key_cols, vals, nsel)
+                m.rows_sunk += nsel
+                cost += cm["agg"] * nsel
+                engine.counters["agg_rows"] += nsel
+
+        # morsel accounting
+        finished: List[Member] = []
+        for m in act:
+            m.received += 1
+            if m.received >= m.need:
+                m.done = True
+                m.active = False
+                finished.append(m)
+        for m in finished:
+            engine.on_member_finished(self, m)
+        return cost
+
+
+# ---------------------------------------------------------------------------
+# Scan node (§4.4 shared cyclic scans)
+# ---------------------------------------------------------------------------
+
+
+class ScanNode:
+    _next_id = 0
+
+    def __init__(self, table: Table, morsel_size: int, zone_maps: bool = False):
+        ScanNode._next_id += 1
+        self.sid = ScanNode._next_id
+        self.table = table
+        self.morsel_size = morsel_size
+        self.n_morsels = max(1, math.ceil(table.nrows / morsel_size))
+        self.cursor = 0
+        self.pipelines: List[Pipeline] = []
+        self.row_bytes = table.nbytes() / max(table.nrows, 1)
+        self.zone_maps = zone_maps
+
+    def attach(self, p: Pipeline) -> None:
+        self.pipelines.append(p)
+
+    def has_active_work(self) -> bool:
+        return any(p.active_members() for p in self.pipelines)
+
+    def _zone_skip(self, morsel_idx: int) -> bool:
+        """Beyond-paper: skip the physical read when no active member's
+        canonical predicate can match this morsel's [min,max] zones. The
+        morsel still counts toward every member's delivery cycle (zero rows
+        pass their filters by construction)."""
+        zm = self.table.zone_map(self.morsel_size)
+        for p in self.pipelines:
+            for m in p.active_members():
+                conj = _member_conj(m)
+                if conj is None:
+                    return False  # unprovable predicate -> must read
+                possible = True
+                for attr, c in conj.constraints.items():
+                    if attr not in zm:
+                        continue
+                    lo, hi = zm[attr][0][morsel_idx], zm[attr][1][morsel_idx]
+                    probe = AttrConstraint(lo=float(lo), hi=float(hi))
+                    if c.intersect(probe).is_empty():
+                        possible = False
+                        break
+                if possible:
+                    return False
+        return True
+
+    def advance(self, engine) -> float:
+        """Emit the next morsel to every attached pipeline with active
+        members. Physical read counted once (shared scan)."""
+        idx = self.cursor
+        if self.zone_maps and self._zone_skip(idx):
+            engine.counters["morsels_skipped"] += 1
+            cost = engine.cost_model["scan"] * 8  # zone check, not a read
+            for p in list(self.pipelines):
+                finished = []
+                for m in p.active_members():
+                    m.received += 1
+                    if m.received >= m.need:
+                        m.done = True
+                        m.active = False
+                        finished.append(m)
+                for m in finished:
+                    engine.on_member_finished(p, m)
+            self.cursor = (self.cursor + 1) % self.n_morsels
+            return cost
+        start = idx * self.morsel_size
+        cols = self.table.morsel(start, self.morsel_size)
+        n = len(next(iter(cols.values())))
+        row_ids = np.arange(start, start + n, dtype=np.int64)
+
+        engine.counters["scan_rows"] += n
+        engine.counters["scan_bytes"] += n * self.row_bytes
+        cost = engine.cost_model["scan"] * n
+
+        for p in list(self.pipelines):
+            cost += p.process(engine, cols, row_ids)
+        self.cursor = (self.cursor + 1) % self.n_morsels
+        return cost
+
+    def detach(self, p: Pipeline) -> None:
+        if p in self.pipelines:
+            self.pipelines.remove(p)

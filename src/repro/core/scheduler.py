@@ -1,0 +1,204 @@
+"""Ready-fragment extraction (Algorithm 2) and the single-worker executor.
+
+The evaluated prototype (paper §6.1) uses one worker thread: inter-query
+concurrency comes from interleaving ready fragments of the shared execution
+DAG. We reproduce that model — the executor repeatedly extracts ready
+fragments and advances one shared cyclic scan by one morsel, which pushes
+the morsel through every attached pipeline for every active node-query pair.
+
+Clocks:
+
+* ``WorkClock`` — virtual time advanced by the modeled cost of each executed
+  fragment (calibrated per-row constants). Makes the paper's hour-long
+  open-loop sweeps reproducible in seconds, deterministically.
+* ``WallClock`` — real time (used by the fig.6 two-query experiment).
+
+Work-model counters (rows scanned / built / probed) are clock-independent.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from .engine import GraftEngine, QueryHandle
+from .plans import Query
+from .runtime import Member, Pipeline, ScanNode
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+
+class WorkClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def tick(self, cost: float) -> None:
+        self.now += cost
+
+    def advance_to(self, t: float) -> None:
+        if t > self.now:
+            self.now = t
+
+
+class WallClock:
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    @property
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def tick(self, cost: float) -> None:
+        pass  # real work took real time
+
+    def advance_to(self, t: float) -> None:
+        dt = t - self.now
+        if dt > 0:
+            time.sleep(dt)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — ExtractReadyFragments
+# ---------------------------------------------------------------------------
+
+
+def producer_inactive(n: Pipeline, m: Member) -> bool:
+    """Lines 22-25: a state-producing node-query pair is inactive once no
+    producer work assigned to q remains pending."""
+    if n.build_target is None:
+        return False
+    return m.done or m.received >= m.need > 0
+
+
+def state_consumer_blocked(m: Member) -> bool:
+    """Lines 26-32: a state-consuming node-query pair passes only when every
+    state-ref gate entering it is open."""
+    return any(not g.open() for g in m.gates)
+
+
+def active_at_node(n: Pipeline) -> List[Member]:
+    """Lines 13-21 over one operator node (pipeline)."""
+    out = []
+    for m in n.members:
+        if m.done:
+            continue
+        if producer_inactive(n, m):
+            continue
+        if state_consumer_blocked(m):
+            continue
+        if not m.active:
+            # gate newly opened — activation assigns the delivery cycle
+            continue
+        out.append(m)
+    return out
+
+
+def extract_ready_fragments(engine: GraftEngine) -> List[ScanNode]:
+    """Restrict the DAG to active node-query pairs, prune by data-edge
+    reachability (a pipeline is reachable iff its source scan can still
+    deliver morsels to it), group into weak components (pipelines sharing a
+    source scan), and order along data edges (scan -> pipelines). Each
+    fragment is executable by advancing its scan one morsel."""
+    frags: List[ScanNode] = []
+    for node in engine.scans.values():
+        for p in node.pipelines:
+            if active_at_node(p):
+                frags.append(node)
+                break
+    frags.sort(key=lambda s: s.sid)
+    return frags
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+class Runner:
+    """Drives one GraftEngine over an arrival trace.
+
+    ``on_complete(handle) -> Optional[Query]`` implements closed-loop
+    clients: returning a query enqueues it (arrival = completion time).
+    """
+
+    def __init__(self, engine: GraftEngine, clock=None):
+        self.engine = engine
+        self.clock = clock or WorkClock()
+        engine.clock = self.clock
+        self._rr = 0
+        self._seq = 0
+        self._heap: List[Tuple[float, int, Query]] = []
+
+    def add_arrival(self, query: Query) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (query.arrival, self._seq, query))
+
+    def run(
+        self,
+        arrivals: Iterable[Query] = (),
+        on_complete: Optional[Callable[[QueryHandle], Optional[Query]]] = None,
+        max_steps: int = 50_000_000,
+    ) -> List[QueryHandle]:
+        engine = self.engine
+        for q in arrivals:
+            self.add_arrival(q)
+        steps = 0
+        while self._heap or engine.has_active_work():
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("executor exceeded max_steps — livelock?")
+            # admit due arrivals (query grafting happens at submit)
+            while self._heap and self._heap[0][0] <= self.clock.now:
+                _, _, q = heapq.heappop(self._heap)
+                engine.submit(q)
+                self._after_events(on_complete)
+            frags = extract_ready_fragments(engine)
+            if not frags:
+                if self._heap:
+                    self.clock.advance_to(self._heap[0][0])
+                    continue
+                if engine.has_active_work():
+                    # all remaining handles must be completable observers
+                    done = engine.sweep_completions()
+                    if done:
+                        self._after_events(on_complete, done)
+                        continue
+                    raise RuntimeError(
+                        f"deadlock: {len(engine.active_handles)} active queries, no ready fragments"
+                    )
+                break
+            # round-robin over ready fragments
+            node = None
+            for cand in frags:
+                if cand.sid > self._rr:
+                    node = cand
+                    break
+            if node is None:
+                node = frags[0]
+            self._rr = node.sid
+            cost = node.advance(engine)
+            self.clock.tick(cost)
+            self._after_events(on_complete)
+        return engine.completed
+
+    def _after_events(self, on_complete, pre_done: Optional[List[QueryHandle]] = None) -> None:
+        engine = self.engine
+        engine.check_activations()
+        done = list(pre_done or ())
+        done += engine.sweep_completions()
+        while done:
+            h = done.pop()
+            if on_complete is not None:
+                nxt = on_complete(h)
+                if nxt is not None:
+                    self.add_arrival(nxt)
+                    # admit immediately if due (closed loop)
+                    while self._heap and self._heap[0][0] <= self.clock.now:
+                        _, _, q = heapq.heappop(self._heap)
+                        engine.submit(q)
+            engine.check_activations()
+            done += engine.sweep_completions()

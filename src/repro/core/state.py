@@ -1,0 +1,420 @@
+"""Shared operator state: hash-build tables and aggregate accumulators.
+
+State-centric execution (§3.1) treats this state as shared — any compatible
+query may observe it through a per-query state lens or contribute to it
+through an admitted producer path. A hash-build state records:
+
+* its signature (exact non-predicate identity, descriptors.py),
+* an *extent registry*: every producer path that contributes to the state
+  registers the canonical predicate extent it delivers; entry-level
+  provenance bitmasks record which extents produced/marked each entry,
+* coverage = the union of completed extents (this is what makes no-match
+  results meaningful, §4.3),
+* entries with derivation identifiers, per-query visibility bitmasks, and
+  extent provenance masks,
+* extent-scoped state-level visibility grants (§4.3: a later query observing
+  an already-represented extent does not rewrite existing entries — the lens
+  combines extent provenance with a retained-attribute predicate).
+
+Soundness of represented-extent observation (see DESIGN.md): a grant for
+query q is (allowed_extents, B_ret) where B_ret is the retained-attribute
+part of B_q and allowed_extents are completed extents whose predicate
+implies the non-retained part of B_q. The state-readiness gate requires the
+allowed extents alone to cover B_q; since insert-or-mark ORs provenance for
+every extent that delivers a derivation, every entry of B_q then carries an
+allowed bit — matches are complete, and absence is meaningful. When
+FV(B_q) ⊆ RetainedAttrs(S) the provenance check degenerates to evaluating
+B_q on the entry (allowed = ALL).
+
+Layout is columnar SoA (TPU adaptation — DESIGN.md §2): dense append-only
+arrays + a sort-based probe index rebuilt lazily when a lens observation
+opens. The Pallas `hash_probe` kernel consumes the same SoA layout.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .descriptors import StateSignature
+from .predicates import Conjunction, Coverage, evaluate_conj
+from .visibility import SlotAllocator, bit_of
+
+ALL_EXTENTS = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+# ---------------------------------------------------------------------------
+
+
+class GrowArray:
+    """Amortized-append numpy array."""
+
+    __slots__ = ("_buf", "n")
+
+    def __init__(self, dtype, capacity: int = 1024):
+        self._buf = np.empty(capacity, dtype=dtype)
+        self.n = 0
+
+    def append(self, values: np.ndarray) -> None:
+        m = len(values)
+        if self.n + m > len(self._buf):
+            cap = max(len(self._buf) * 2, self.n + m)
+            nb = np.empty(cap, dtype=self._buf.dtype)
+            nb[: self.n] = self._buf[: self.n]
+            self._buf = nb
+        self._buf[self.n : self.n + m] = values
+        self.n += m
+
+    @property
+    def data(self) -> np.ndarray:
+        return self._buf[: self.n]
+
+
+# ---------------------------------------------------------------------------
+
+
+class SharedHashBuildState:
+    """A shared hash-build state (§4.3): signature + coverage + SoA entries.
+
+    Entries are identified by derivation id; insert-or-mark keeps one
+    physical entry per derivation and ORs visibility/provenance bits (§4.3
+    "GraftDB stores one build entry and records the visibility needed by
+    those queries")."""
+
+    def __init__(
+        self,
+        state_id: int,
+        sig: StateSignature,
+        key_attrs: Tuple[str, ...],
+        payload: Tuple[str, ...],
+        did_domain: int = 1 << 62,
+    ):
+        self.state_id = state_id
+        self.sig = sig
+        self.key_attrs = tuple(key_attrs)
+        self.payload = tuple(payload)
+        self.retained_attrs = frozenset(self.payload) | frozenset(self.key_attrs)
+        self.did_domain = did_domain
+
+        self.keycode = GrowArray(np.int64)
+        self.did = GrowArray(np.int64)
+        self.vis = GrowArray(np.uint64)
+        self.emask = GrowArray(np.uint64)
+        self.cols: Dict[str, GrowArray] = {a: GrowArray(np.float64) for a in self.retained_attrs}
+
+        self._did_index: Dict[int, int] = {}
+        self.slots = SlotAllocator()
+
+        # extent registry: eid -> (conj | None, complete)
+        self.extents: Dict[int, Tuple[Optional[Conjunction], bool]] = {}
+        self._next_eid = 0
+
+        # grants: qid -> list of (allowed_emask, retained_pred_conj)
+        self.grants: Dict[int, List[Tuple[np.uint64, Conjunction]]] = {}
+        self.refs: set = set()
+
+        # probe index (sorted keycode + permutation), rebuilt lazily
+        self._index_built_upto = -1
+        self._order: Optional[np.ndarray] = None
+        self._sorted_keys: Optional[np.ndarray] = None
+
+        # counters
+        self.rows_inserted = 0
+        self.rows_marked = 0
+
+    # -- extent registry -----------------------------------------------------
+    def register_extent(self, conj: Optional[Conjunction]) -> int:
+        """Register a producer extent; returns its provenance bit id.
+        Returns -1 when provenance bits are exhausted (the extent still
+        contributes rows via per-query visibility bits — only represented
+        attachment against it is lost, never safety)."""
+        if self._next_eid >= 64:
+            return -1
+        eid = self._next_eid
+        self._next_eid += 1
+        self.extents[eid] = (conj, False)
+        return eid
+
+    def complete_extent(self, eid: int) -> None:
+        if eid >= 0:
+            conj, _ = self.extents[eid]
+            self.extents[eid] = (conj, True)
+
+    def coverage(self) -> Coverage:
+        """Coverage metadata = union of completed extents (§4.3)."""
+        return Coverage(c for c, done in self.extents.values() if done and c is not None)
+
+    def covers_with(self, conj: Conjunction, allowed_emask: np.uint64) -> bool:
+        """Coverage restricted to the allowed provenance extents."""
+        cov = Coverage(
+            c
+            for eid, (c, done) in self.extents.items()
+            if done and c is not None and (np.uint64(1) << np.uint64(eid)) & allowed_emask
+        )
+        return cov.covers(conj)
+
+    def allowed_extents_for(self, nonret: Conjunction) -> np.uint64:
+        """Completed extents whose predicate implies the non-retained part of
+        a query's build predicate."""
+        mask = np.uint64(0)
+        for eid, (c, done) in self.extents.items():
+            if done and c is not None and c.implies(nonret):
+                mask |= np.uint64(1) << np.uint64(eid)
+        return mask
+
+    # -- producer side -----------------------------------------------------
+    def insert_or_mark(
+        self,
+        dids: np.ndarray,
+        keycodes: np.ndarray,
+        cols: Dict[str, np.ndarray],
+        vismask: np.ndarray,
+        emask: np.ndarray,
+    ) -> Tuple[int, int]:
+        """Insert rows absent by derivation id; OR visibility/provenance on
+        present ones. Returns (inserted, marked)."""
+        if len(dids) == 0:
+            return 0, 0
+        idx_map = self._did_index
+        pos = np.empty(len(dids), dtype=np.int64)
+        is_new = np.zeros(len(dids), dtype=bool)
+        for i, d in enumerate(dids.tolist()):
+            j = idx_map.get(d, -1)
+            if j < 0:
+                is_new[i] = True
+            else:
+                pos[i] = j
+        n_marked = 0
+        old = ~is_new
+        if old.any():
+            p = pos[old]
+            np.bitwise_or.at(self.vis.data, p, vismask[old])
+            np.bitwise_or.at(self.emask.data, p, emask[old])
+            n_marked = int(old.sum())
+            self.rows_marked += n_marked
+        n_inserted = 0
+        if is_new.any():
+            sel_all = np.flatnonzero(is_new)
+            nd = dids[sel_all]
+            uniq, first = np.unique(nd, return_index=True)
+            sel = sel_all[np.sort(first)]
+            if len(uniq) != len(sel_all):
+                # OR together vis/emask of duplicate dids within the batch
+                vis_new = np.zeros(len(sel), dtype=np.uint64)
+                em_new = np.zeros(len(sel), dtype=np.uint64)
+                order = {int(d): k for k, d in enumerate(dids[sel].tolist())}
+                for i in sel_all.tolist():
+                    k = order[int(dids[i])]
+                    vis_new[k] |= vismask[i]
+                    em_new[k] |= emask[i]
+            else:
+                vis_new = vismask[sel]
+                em_new = emask[sel]
+            base = self.did.n
+            self.did.append(dids[sel])
+            self.keycode.append(keycodes[sel])
+            self.vis.append(vis_new)
+            self.emask.append(em_new)
+            for a in self.retained_attrs:
+                self.cols[a].append(np.asarray(cols[a][sel], dtype=np.float64))
+            for k, d in enumerate(dids[sel].tolist()):
+                idx_map[int(d)] = base + k
+            n_inserted = len(sel)
+            self.rows_inserted += n_inserted
+        return n_inserted, n_marked
+
+    # -- grants ---------------------------------------------------------------
+    def add_grant(self, qid: int, allowed_emask: np.uint64, retained_conj: Conjunction) -> None:
+        self.slots.get(qid)
+        self.grants.setdefault(qid, []).append((allowed_emask, retained_conj))
+
+    def grant_evaluable(self, conj: Conjunction) -> bool:
+        """FV(P) ⊆ RetainedAttrs(S) (§4.2 evaluability)."""
+        return conj.attrs() <= self.retained_attrs
+
+    def count_granted(self, allowed_emask: np.uint64, retained_conj: Conjunction) -> int:
+        """Entries currently observable through a grant (counters only)."""
+        if self.did.n == 0:
+            return 0
+        m = (self.emask.data & allowed_emask) != 0
+        if retained_conj.attrs():
+            cols = {a: self.cols[a].data for a in retained_conj.attrs()}
+            m = m & evaluate_conj(retained_conj, cols)
+        return int(m.sum())
+
+    # -- consumer side -------------------------------------------------------
+    def _ensure_index(self) -> None:
+        if self._index_built_upto == self.keycode.n and self._order is not None:
+            return
+        keys = self.keycode.data
+        self._order = np.argsort(keys, kind="stable")
+        self._sorted_keys = keys[self._order]
+        self._index_built_upto = self.keycode.n
+
+    def probe(self, probe_keycodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized probe: returns (probe_row_idx, entry_idx) match pairs
+        — before any visibility filtering."""
+        if self.keycode.n == 0 or len(probe_keycodes) == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        self._ensure_index()
+        sk, order = self._sorted_keys, self._order
+        lo = np.searchsorted(sk, probe_keycodes, side="left")
+        hi = np.searchsorted(sk, probe_keycodes, side="right")
+        counts = hi - lo
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        probe_idx = np.repeat(np.arange(len(probe_keycodes), dtype=np.int64), counts)
+        starts = np.repeat(lo, counts)
+        offs = np.arange(total, dtype=np.int64) - np.repeat(
+            np.concatenate(([0], np.cumsum(counts)[:-1])), counts
+        )
+        entry_idx = order[starts + offs]
+        return probe_idx, entry_idx
+
+    def visible_mask(self, qid: int, entry_idx: np.ndarray) -> np.ndarray:
+        """Per-query state lens on entries: per-entry visibility bit OR an
+        extent-scoped grant the entry's provenance+retained attrs satisfy."""
+        slot = self.slots.peek(qid)
+        if slot is None:
+            vis = np.zeros(len(entry_idx), dtype=bool)
+        else:
+            vis = bit_of(self.vis.data[entry_idx], slot)
+        for allowed_emask, conj in self.grants.get(qid, ()):
+            g = (self.emask.data[entry_idx] & allowed_emask) != 0
+            if conj.attrs():
+                cols = {a: self.cols[a].data[entry_idx] for a in conj.attrs()}
+                g = g & evaluate_conj(conj, cols)
+            vis |= g
+        return vis
+
+    def entry_cols(self, entry_idx: np.ndarray, attrs: Sequence[str]) -> Dict[str, np.ndarray]:
+        return {a: self.cols[a].data[entry_idx] for a in attrs}
+
+    # -- lifecycle ------------------------------------------------------------
+    def attach(self, qid: int) -> None:
+        self.refs.add(qid)
+        self.slots.get(qid)
+
+    def detach(self, qid: int) -> None:
+        self.refs.discard(qid)
+        self.slots.release(qid)
+        self.grants.pop(qid, None)
+
+    @property
+    def n_entries(self) -> int:
+        return self.did.n
+
+    def nbytes(self) -> int:
+        per_entry = 8 * (3 + len(self.retained_attrs)) + 8
+        return self.did.n * per_entry
+
+
+# ---------------------------------------------------------------------------
+
+
+class SharedAggregateState:
+    """Shared aggregate state under exact aggregate identity (§4.5).
+
+    Input occurrences collapse into group accumulators, so the state cannot
+    be repartitioned under a different predicate/grouping — sharing is
+    all-or-nothing per identity, enforced by the signature. Supports
+    sum/count/avg/min/max and count(distinct expr) via a seen-set."""
+
+    def __init__(self, state_id: int, sig: Optional[StateSignature], group_keys: Tuple[str, ...], aggs):
+        self.state_id = state_id
+        self.sig = sig
+        self.group_keys = tuple(group_keys)
+        self.aggs = tuple(aggs)
+
+        self._gid_of: Dict[Tuple, int] = {}
+        self.group_cols: List[GrowArray] = [GrowArray(np.float64) for _ in self.group_keys]
+        self._acc: List[GrowArray] = [GrowArray(np.float64) for _ in self.aggs]
+        self._counts = GrowArray(np.float64)
+        self._distinct_seen: List[set] = [set() if a.distinct else None for a in self.aggs]
+
+        self.complete = False
+        self.refs: set = set()
+        self.rows_consumed = 0
+
+    def _group_ids(self, keys: List[np.ndarray], n: int) -> np.ndarray:
+        if not keys:
+            # global aggregate: single group
+            if not self._gid_of:
+                self._gid_of[()] = 0
+                for acc, spec in zip(self._acc, self.aggs):
+                    init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
+                    acc.append(np.array([init]))
+                self._counts.append(np.zeros(1))
+            return np.zeros(n, dtype=np.int64)
+        stacked = np.stack(keys, axis=1)
+        uniq, inv = np.unique(stacked, axis=0, return_inverse=True)
+        gids = np.empty(len(uniq), dtype=np.int64)
+        for i, row in enumerate(uniq):
+            t = tuple(row.tolist())
+            g = self._gid_of.get(t)
+            if g is None:
+                g = len(self._gid_of)
+                self._gid_of[t] = g
+                for k, gc in enumerate(self.group_cols):
+                    gc.append(np.array([row[k]], dtype=np.float64))
+                for acc, spec in zip(self._acc, self.aggs):
+                    init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
+                    acc.append(np.array([init]))
+                self._counts.append(np.zeros(1))
+            gids[i] = g
+        return gids[np.asarray(inv).ravel()]
+
+    def update(self, key_cols: List[np.ndarray], agg_values: List[Optional[np.ndarray]], n: int) -> None:
+        """Fold one morsel of rows into the accumulators (segment reduce)."""
+        if n == 0:
+            return
+        gids = self._group_ids(key_cols, n)
+        ngroups = len(self._gid_of)
+        self.rows_consumed += n
+        cnt = np.bincount(gids, minlength=ngroups).astype(np.float64)
+        self._counts.data[:] += cnt
+        for j, (acc, spec) in enumerate(zip(self._acc, self.aggs)):
+            vals = agg_values[j]
+            if spec.distinct:
+                # count(distinct expr): dedupe (group, value) pairs
+                pairs = np.stack([gids.astype(np.float64), vals], axis=1)
+                uniq = np.unique(pairs, axis=0)
+                seen = self._distinct_seen[j]
+                for g, v in uniq.tolist():
+                    if (g, v) not in seen:
+                        seen.add((g, v))
+                        acc.data[int(g)] += 1.0
+            elif spec.func == "count":
+                acc.data[:] += cnt
+            elif spec.func in ("sum", "avg"):
+                acc.data[:] += np.bincount(gids, weights=vals, minlength=ngroups)
+            elif spec.func == "min":
+                np.minimum.at(acc.data, gids, vals)
+            elif spec.func == "max":
+                np.maximum.at(acc.data, gids, vals)
+            else:
+                raise ValueError(spec.func)
+
+    def result(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {}
+        for k, name in enumerate(self.group_keys):
+            out[name] = self.group_cols[k].data.copy()
+        for acc, spec in zip(self._acc, self.aggs):
+            if spec.func == "avg":
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    out[spec.name] = acc.data / np.maximum(self._counts.data, 1e-300)
+            else:
+                out[spec.name] = acc.data.copy()
+        return out
+
+    def attach(self, qid: int) -> None:
+        self.refs.add(qid)
+
+    def detach(self, qid: int) -> None:
+        self.refs.discard(qid)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self._gid_of)

@@ -1,0 +1,59 @@
+"""Per-query visibility metadata (§4.2).
+
+Rows and state entries carry per-query visibility as packed uint64 bitmasks.
+A per-state slot allocator maps attached query ids to bit positions; slots
+are recycled on query completion. One physical row/entry therefore serves
+every attached query whose bit (or extent-scoped grant, see state.py) is set
+— the runtime never materializes per-query copies.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+MAX_SLOTS = 64
+
+
+class SlotAllocator:
+    """query id -> bit slot, with recycling. Capacity 64 concurrent queries
+    per state; the engine serializes admission beyond that (never reached in
+    the evaluated workloads — 32 clients max)."""
+
+    def __init__(self):
+        self._slot_of: Dict[int, int] = {}
+        self._free: List[int] = list(range(MAX_SLOTS - 1, -1, -1))
+
+    def get(self, qid: int) -> int:
+        if qid in self._slot_of:
+            return self._slot_of[qid]
+        if not self._free:
+            raise RuntimeError("visibility slots exhausted (>64 concurrent queries on one state)")
+        s = self._free.pop()
+        self._slot_of[qid] = s
+        return s
+
+    def peek(self, qid: int):
+        return self._slot_of.get(qid)
+
+    def release(self, qid: int) -> None:
+        s = self._slot_of.pop(qid, None)
+        if s is not None:
+            self._free.append(s)
+
+    def mask(self, qid: int) -> np.uint64:
+        return np.uint64(1) << np.uint64(self.get(qid))
+
+    def attached(self) -> List[int]:
+        return list(self._slot_of)
+
+
+def bit_of(mask: np.ndarray, slot: int) -> np.ndarray:
+    """Extract one query's visibility bit from a packed mask array."""
+    return (mask >> np.uint64(slot)) & np.uint64(1) != 0
+
+
+def or_bit(mask: np.ndarray, rows: np.ndarray, slot: int) -> None:
+    """Set one query's bit on the selected rows, in place."""
+    np.bitwise_or.at(mask, rows, np.uint64(1) << np.uint64(slot))

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention.
+
+Online-softmax tiling: q blocks of BLOCK_Q x d_head live in VMEM; the KV
+sequence is the innermost grid dim, revisiting per-q-block accumulators
+(m, l, acc) held in VMEM scratch. Causal/window masking is positional;
+fully-masked KV blocks still iterate (structural dry-run target — the
+skip-block optimization is a §Perf variant).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, window, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [BQ, dh]
+    k = k_ref[0]  # [BK, dh]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+    qpos = qi * BLOCK_Q + jax.lax.iota(jnp.int32, BLOCK_Q)[:, None]
+    kpos = ki * BLOCK_K + jax.lax.iota(jnp.int32, BLOCK_K)[None, :]
+    ok = qpos >= kpos
+    if window is not None:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # [BH, S, dh]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window=None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, s, dh = q.shape
+    assert s % BLOCK_Q == 0 and s % BLOCK_K == 0, "seq must be tile-aligned"
+    scale = 1.0 / math.sqrt(dh)
+    n_q, n_k = s // BLOCK_Q, s // BLOCK_K
+    grid = (bh, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, window=window, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: chunked first-order linear recurrence.
+
+h_t = a_t * h_{t-1} + b_t  (elementwise over channels) — the RG-LRU /
+gated-linear-recurrence primitive (recurrentgemma; also the inter-chunk
+carry of RWKV6).
+
+TPU adaptation: grid (B, D/BLOCK_D, S/BLOCK_S) with the sequence chunks as
+the innermost (sequential) dim. Each kernel instance scans its
+[BLOCK_S, BLOCK_D] tile with a log-depth doubling scan (dense VPU ops, no
+serial loop), then composes with the cross-chunk carry held in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 256
+BLOCK_D = 128
+
+
+def _linrec_kernel(a_ref, b_ref, o_ref, h_ref, *, n_chunks: int, block_s: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)  # [S, D]
+    b = b_ref[0].astype(jnp.float32)
+
+    # inclusive doubling scan of the affine composition
+    # (A,B)[t] <- (A,B)[t-k] ∘ (A,B)[t]:  A'=A*A_shift, B'=B+A*B_shift
+    A, B = a, b
+    k = 1
+    while k < block_s:
+        A_shift = jnp.concatenate([jnp.ones((k, A.shape[1]), A.dtype), A[:-k]], axis=0)
+        B_shift = jnp.concatenate([jnp.zeros((k, B.shape[1]), B.dtype), B[:-k]], axis=0)
+        B = B + A * B_shift
+        A = A * A_shift
+        k *= 2
+
+    h0 = h_ref[...]
+    h = A * h0[None, :] + B
+    o_ref[0] = h.astype(o_ref.dtype)
+    h_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def linrec(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """a, b: [B, S, D] -> h: [B, S, D] with h_t = a_t h_{t-1} + b_t, h_0=0."""
+    Bn, S, D = a.shape
+    assert S % BLOCK_S == 0 and D % BLOCK_D == 0, "tile-aligned shapes required"
+    n_chunks = S // BLOCK_S
+    grid = (Bn, D // BLOCK_D, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_linrec_kernel, n_chunks=n_chunks, block_s=BLOCK_S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_S, BLOCK_D), lambda bb, dd, cc: (bb, cc, dd)),
+            pl.BlockSpec((1, BLOCK_S, BLOCK_D), lambda bb, dd, cc: (bb, cc, dd)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_S, BLOCK_D), lambda bb, dd, cc: (bb, cc, dd)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BLOCK_D,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute via ``interpret=True`` (the kernel
+body runs in Python for correctness validation); on TPU set
+``interpret=False`` (or rely on the platform default) for the compiled
+VMEM-tiled versions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import flash_attention
+from .hash_probe import EMPTY, hash_probe_lens
+from .linrec import linrec
+from .seg_aggregate import seg_aggregate
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def build_hash_table(keys: np.ndarray, vis: np.ndarray, load: float = 0.5):
+    """Host-side open-addressing build (the engine's build path is
+    append-only; the probe kernel consumes this SoA layout). Returns
+    (table_keys, table_vis, table_entry_idx)."""
+    n = len(keys)
+    cap = 1 << max(int(np.ceil(np.log2(max(n / load, 8)))), 3)
+    mask = cap - 1
+    tk = np.full(cap, int(EMPTY), np.int32)
+    tv = np.zeros(cap, np.uint32)
+    te = np.full(cap, -1, np.int32)
+    pos = (keys.astype(np.uint64) * np.uint64(2654435761)).astype(np.int64) & mask
+    for i in range(n):
+        p = int(pos[i])
+        while tk[p] != int(EMPTY):
+            p = (p + 1) & mask
+        tk[p] = keys[i]
+        tv[p] = vis[i]
+        te[p] = i
+    return jnp.asarray(tk), jnp.asarray(tv), jnp.asarray(te)
+
+
+def probe(probe_keys, table_keys, table_vis, query_mask, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return hash_probe_lens(
+        jnp.asarray(probe_keys, jnp.int32),
+        table_keys,
+        table_vis,
+        jnp.asarray(query_mask, jnp.uint32).reshape(1),
+        interpret=interpret,
+    )
+
+
+def segmented_sum(codes, values, n_groups, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return seg_aggregate(
+        jnp.asarray(codes, jnp.int32), jnp.asarray(values), n_groups, interpret=interpret
+    )
+
+
+def attention(q, k, v, window=None, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, window=window, interpret=interpret)
+
+
+def linear_recurrence(a, b, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return linrec(a, b, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, sharding rules, multi-pod dry-run, roofline
+analysis, training and serving drivers."""

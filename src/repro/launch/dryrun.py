@@ -1,0 +1,329 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first init, and the dry-run needs 512 placeholder host devices to build
+# the production meshes. Never set this globally — smoke tests and benches
+# see the single real device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective statistics.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k --multi-pod both
+
+Results append incrementally to benchmarks/results/dryrun.json so a long
+sweep is resumable. Failures (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system — recorded, not swallowed.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, cells, get_config  # noqa: E402
+from ..models import model as M  # noqa: E402
+from ..train.optim import abstract_opt_state  # noqa: E402
+from ..train.train_step import make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from . import sharding as SH  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun.json"
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+SHAPE_RE = re.compile(r"\b(f32|bf16|f16|s32|u32|s64|u64|pred|s8|u8|f64)\[([0-9,]*)\]")
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "pred": 1, "s8": 1, "u8": 1, "f64": 8,
+}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-operand sizes of every collective op in optimized HLO."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # result shape(s): first type annotation(s) on the lhs
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = 0
+        for sm in SHAPE_RE.finditer(lhs):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        ent = out.setdefault(kind, {"count": 0, "bytes": 0})
+        ent["count"] += 1
+        ent["bytes"] += nbytes
+    return out
+
+
+def _tree_bytes_per_device(abstract, specs, mesh) -> float:
+    """Analytic bytes/device given shardings (fallback when the backend's
+    memory_analysis is unavailable on CPU)."""
+    total = 0.0
+    flat_a = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    for a, s in zip(flat_a, flat_s):
+        shards = 1
+        for ax in s:
+            if ax is None:
+                continue
+            for name in (ax if isinstance(ax, tuple) else (ax,)):
+                shards *= mesh.shape[name]
+        total += a.size * a.dtype.itemsize / shards
+    return total
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..models.shardctx import set_shard_hints
+
+    set_shard_hints(mesh)  # layer-internal constraints (MoE dispatch etc.)
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+
+    ap = M.abstract_params(cfg, jnp.bfloat16)
+    pspecs = SH.param_specs(cfg, mesh, ap)
+    psh = SH.to_shardings(mesh, pspecs)
+    batch = M.input_specs(cfg, shape)
+    bspecs = SH.batch_specs(mesh, batch)
+    bsh = SH.to_shardings(mesh, bspecs)
+
+    if kind == "train":
+        aopt = abstract_opt_state(ap, cfg.optimizer)
+        ospecs = SH.opt_specs(cfg, mesh, aopt, pspecs)
+        osh = SH.to_shardings(mesh, ospecs)
+        aspec = SH.act_spec(cfg, mesh, S)
+        step = make_train_step(cfg, act_spec=aspec)
+        with mesh:
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, None),
+            )
+            lowered = jitted.lower(ap, aopt, batch)
+        args_bytes = (
+            _tree_bytes_per_device(ap, pspecs, mesh)
+            + _tree_bytes_per_device(aopt, ospecs, mesh)
+            + _tree_bytes_per_device(batch, bspecs, mesh)
+        )
+    elif kind == "prefill":
+        aspec = SH.act_spec(cfg, mesh, S)
+
+        def fn(params, b):
+            return M.prefill(cfg, params, b, act_spec=aspec)
+
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=(psh, bsh))
+            lowered = jitted.lower(ap, batch)
+        args_bytes = _tree_bytes_per_device(ap, pspecs, mesh) + _tree_bytes_per_device(
+            batch, bspecs, mesh
+        )
+    else:  # decode
+        acache = M.abstract_cache(cfg, B, S)
+        cspecs = SH.cache_specs(cfg, mesh, acache)
+        csh = SH.to_shardings(mesh, cspecs)
+
+        def fn(params, cache, b):
+            return M.decode_step(cfg, params, cache, b["token"], b["pos"])
+
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=(psh, csh, bsh), out_shardings=(None, csh))
+            lowered = jitted.lower(ap, acache, batch)
+        args_bytes = (
+            _tree_bytes_per_device(ap, pspecs, mesh)
+            + _tree_bytes_per_device(acache, cspecs, mesh)
+        )
+    return lowered, args_bytes, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    t0 = time.time()
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+    }
+    try:
+        lowered, args_bytes, mesh = build_cell(arch, shape_name, multi_pod)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+            print(f"memory_analysis[{arch}/{shape_name}]: {rec['memory_analysis']}")
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = f"unavailable: {e}"
+        rec["analytic_bytes_per_device"] = int(args_bytes)
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["cost_analysis"] = {
+                k: float(v)
+                for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals", "utilization operand")
+                or k.startswith("bytes accessed")
+            }
+            print(f"cost_analysis[{arch}/{shape_name}]: flops={rec['cost_analysis'].get('flops')}")
+        except Exception as e:
+            rec["cost_analysis"] = f"unavailable: {e}"
+        try:
+            hlo = compiled.as_text()
+            rec["collectives"] = parse_collectives(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            # trip-count-aware static analysis (cost_analysis counts while
+            # bodies once — see hlo_analysis.py)
+            from .hlo_analysis import analyze
+
+            st = analyze(hlo)
+            rec["hlo_stats"] = {
+                "flops_per_device": st.flops,
+                "mem_bytes_per_device": st.mem_bytes,
+                "coll_bytes_per_device": st.coll_bytes,
+                "coll_count": st.coll_count,
+            }
+        except Exception as e:
+            rec["collectives"] = f"unavailable: {e}"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def load_results() -> list:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return []
+
+
+def save_results(res: list) -> None:
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(res, indent=1))
+
+
+def run_db_plane(multi_pod: bool) -> dict:
+    """Lower+compile the distributed GraftDB data plane (shard_map
+    partitioned hash join + aggregate) on the production mesh — proves the
+    paper's engine itself shards across the pod (DESIGN.md §4)."""
+    import jax.numpy as jnp
+
+    from ..relational.distributed import make_partitioned_aggregate, make_partitioned_join
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    nd = mesh.shape["data"] * (mesh.shape.get("pod", 1) if multi_pod else 1)
+    rec = {"arch": "graftdb-dataplane", "shape": "join_64M", "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok"}
+    try:
+        rows = 1 << 26  # 64M rows global
+        join = make_partitioned_join(mesh, build_width=2, probe_width=3, capacity=2 * rows // mesh.shape["data"] // max(mesh.shape["data"], 1))
+        sds = jax.ShapeDtypeStruct
+        bk = sds((rows,), jnp.int64)
+        bv = sds((rows, 2), jnp.float32)
+        pk = sds((rows,), jnp.int64)
+        pv = sds((rows, 3), jnp.float32)
+        lowered = join.lower(bk, bv, pk, pv)
+        compiled = lowered.compile()
+        from .hlo_analysis import analyze
+
+        st = analyze(compiled.as_text())
+        rec["hlo_stats"] = {
+            "flops_per_device": st.flops,
+            "mem_bytes_per_device": st.mem_bytes,
+            "coll_bytes_per_device": st.coll_bytes,
+            "coll_count": st.coll_count,
+        }
+        agg = make_partitioned_aggregate(mesh, n_groups=256, width=4)
+        agg.lower(sds((rows,), jnp.int32), sds((rows, 4), jnp.float32)).compile()
+        rec["aggregate"] = "ok"
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"], default="off")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--redo", action="store_true")
+    ap.add_argument("--db-plane", action="store_true")
+    args = ap.parse_args()
+
+    if args.db_plane:
+        results = load_results()
+        pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+        for mp in pods:
+            rec = run_db_plane(mp)
+            key = (rec["arch"], rec["shape"], rec["mesh"])
+            results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+            results.append(rec)
+            save_results(results)
+            print(f"db-plane {rec['mesh']}: {rec['status']} "
+                  f"coll={rec.get('hlo_stats',{}).get('coll_count')}", flush=True)
+        return
+
+    todo = []
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+    for a, s in cells():
+        if args.arch and a != args.arch:
+            continue
+        if args.shape and s != args.shape:
+            continue
+        for mp in pods:
+            todo.append((a, s, mp))
+
+    results = load_results()
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r["status"] == "ok"}
+    for a, s, mp in todo:
+        key = (a, s, "2x16x16" if mp else "16x16")
+        if key in done and not args.redo:
+            print(f"skip {key} (cached)")
+            continue
+        print(f"=== dry-run {key} ===", flush=True)
+        rec = run_cell(a, s, mp)
+        results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
+        results.append(rec)
+        save_results(results)
+        print(
+            f"--> {rec['status']} lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+            + (f" err={rec.get('error')}" if rec["status"] != "ok" else ""),
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

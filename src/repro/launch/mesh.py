@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The dry-run process sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+everything else (tests, benches) sees the single real device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """Single-device mesh with the production axis names — lets the same
+    sharding rules run in tests on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The compound FSDP/data-parallel axis: ('pod','data') on the multi-pod
+    mesh, ('data',) on a single pod."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

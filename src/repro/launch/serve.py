@@ -1,0 +1,115 @@
+"""Serving driver: continuous batching with dynamic KV-prefix folding.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+      --requests 16
+
+Runs a REAL reduced model end-to-end: prefix states hold actual KV caches
+(models.model prefill), folded requests fork from the shared prefix cache
+and decode greedily; the isolated baseline re-prefills every prompt.
+Demonstrates that folding preserves outputs exactly while skipping
+represented prefill work.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke_config
+from ..models import model as M
+
+
+class RealExecutor:
+    """Tiny-model executor: actual prefill/decode with KV-cache forking."""
+
+    def __init__(self, cfg, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.prefill_tokens_computed = 0
+        self._step = jax.jit(
+            lambda params, cache, tok, pos: M.decode_step(cfg, params, cache, tok, pos)
+        )
+
+    def prefill_cache(self, tokens: np.ndarray, cache=None, start: int = 0):
+        """Sequential decode-mode prefill from position ``start`` (reusing a
+        forked cache below ``start``). Returns (cache, last_logits)."""
+        if cache is None:
+            cache = M.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
+        logits = None
+        for t in range(start, len(tokens)):
+            tok = jnp.asarray(tokens[t : t + 1][None], jnp.int32)
+            logits, cache = self._step(self.params, cache, tok, jnp.int32(t))
+            self.prefill_tokens_computed += 1
+        return cache, logits
+
+    def decode(self, cache, last_logits, start_pos: int, n: int) -> List[int]:
+        out = []
+        logits = last_logits
+        for i in range(n):
+            tok = int(jnp.argmax(logits[0, -1]))
+            out.append(tok)
+            logits, cache = self._step(
+                self.params, cache, jnp.asarray([[tok]], jnp.int32), jnp.int32(start_pos + i)
+            )
+        return out
+
+
+def fork(cache):
+    return jax.tree.map(lambda x: x, cache)  # jax arrays are immutable — zero-copy fork
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prefix-len", type=int, default=48)
+    ap.add_argument("--suffix-len", type=int, default=8)
+    ap.add_argument("--decode", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rng = np.random.default_rng(0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    shared = rng.integers(0, cfg.vocab, args.prefix_len)
+    prompts = [
+        np.concatenate([shared, rng.integers(0, cfg.vocab, args.suffix_len)])
+        for _ in range(args.requests)
+    ]
+
+    # isolated: full prefill per request
+    ex = RealExecutor(cfg, params)
+    t0 = time.time()
+    iso_out = []
+    for p in prompts:
+        cache, logits = ex.prefill_cache(p)
+        iso_out.append(ex.decode(cache, logits, len(p), args.decode))
+    iso_tokens, iso_t = ex.prefill_tokens_computed, time.time() - t0
+
+    # folded: prefill the shared prefix once, fork + suffix per request
+    ex2 = RealExecutor(cfg, params)
+    t0 = time.time()
+    prefix_cache, _ = ex2.prefill_cache(shared)
+    fold_out = []
+    for p in prompts:
+        cache, logits = ex2.prefill_cache(p, cache=fork(prefix_cache), start=len(shared))
+        fold_out.append(ex2.decode(cache, logits, len(p), args.decode))
+    fold_tokens, fold_t = ex2.prefill_tokens_computed, time.time() - t0
+
+    match = iso_out == fold_out
+    print(f"outputs identical: {match}")
+    print(f"isolated: {iso_tokens} prefill tokens, {iso_t:.1f}s")
+    print(f"folded:   {fold_tokens} prefill tokens, {fold_t:.1f}s "
+          f"({iso_tokens/max(fold_tokens,1):.1f}x fewer)")
+    if not match:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

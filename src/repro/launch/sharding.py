@@ -1,0 +1,206 @@
+"""Sharding rules: name-pattern PartitionSpecs for params, optimizer state,
+batches, and decode caches (DESIGN.md §4).
+
+Scheme: 2-D FSDP x TP. The tensor-parallel ('model') axis shards heads /
+d_ff / experts / vocab; the FSDP axis ('data', or ('pod','data') multi-pod)
+shards the complementary dim of every weight. KV projections stay replicated
+over 'model' when kv_heads isn't divisible (GQA/MQA); the decode KV cache
+then shards its *sequence* dim instead (split-KV decode). Any dim not
+divisible by its axis size falls back to replication (never a compile
+failure) — the roofline report makes the cost of such fallbacks visible.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .mesh import data_axes
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _spec(mesh: Mesh, shape: Tuple[int, ...], axes: Tuple) -> P:
+    """PartitionSpec with divisibility fallback to replication per dim."""
+    out = []
+    for size, ax in zip(shape, axes):
+        if ax is not None and size % _axsize(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# leaf name -> (axes per dim, by ndim excluding the leading stack dim)
+def _param_axes(name: str, ndim_tail: int, dp) -> Optional[Tuple]:
+    mp = "model"
+    table = {
+        "embed": (mp, dp),
+        "lm_head": (dp, mp),
+        "wq": (dp, mp, None),
+        "wk": (dp, None, None),
+        "wv": (dp, None, None),
+        "wo": (mp, None, dp),
+        "cwq": (dp, mp, None),
+        "cwk": (dp, None, None),
+        "cwv": (dp, None, None),
+        "cwo": (mp, None, dp),
+        "router": (dp, None),
+        "shared_gate": (dp, mp),
+        "shared_up": (dp, mp),
+        "shared_down": (mp, dp),
+        "w_recept": (dp, mp),
+        "w_gate_in": (dp, mp),
+        "w_rec_in": (dp, mp),
+        "w_out": (mp, dp),
+        "w_a": (dp, mp),
+        "w_x": (dp, mp),
+        "conv_w": (None, mp),
+        "conv_b": (mp,),
+        "lam": (mp,),
+        "w_r": (dp, mp),
+        "w_k": (dp, mp),
+        "w_v": (dp, mp),
+        "w_g": (dp, mp),
+        "w_o": (mp, dp),
+        "w_dec0": (mp,),
+        "w_dec1": (dp, None),
+        "w_dec2": (None, mp),
+        "u": (mp,),
+        "ln_w": (mp, None),
+        "ln_b": (mp, None),
+    }
+    if name in ("w_gate", "w_up", "w_down"):
+        if ndim_tail == 3:  # MoE expert-stacked [E, D, F] / [E, F, D]
+            return ("model", dp, None) if name != "w_down" else ("model", None, dp)
+        return (dp, "model") if name != "w_down" else ("model", dp)
+    return table.get(name)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, abstract) -> Any:
+    """Spec tree matching the (abstract) param tree."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        stacked = _is_stacked(path)
+        tail = leaf.ndim - (1 if stacked else 0)
+        axes = _param_axes(name, tail, dp)
+        if axes is None:
+            return P()  # norms etc: replicate
+        full = ((None,) + tuple(axes)) if stacked else tuple(axes)
+        full = full[: leaf.ndim] + (None,) * (leaf.ndim - len(full))
+        return _spec(mesh, leaf.shape, full)
+
+    return _tree_map_with_path(one, abstract)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, abstract_opt, pspecs) -> Any:
+    """Optimizer state shards exactly like its parameter (ZeRO-3)."""
+
+    def one(path, leaf):
+        if _leaf_name(path) == "step" or leaf.ndim == 0:
+            return P()
+        # path = opt_state[kind][...param path...]; strip the leading key
+        sub = pspecs
+        for k in path[1:]:
+            key = k.key if hasattr(k, "key") else k.idx
+            sub = sub[key]
+        return sub
+
+    return _tree_map_with_path(one, abstract_opt)
+
+
+def batch_specs(mesh: Mesh, abstract_batch) -> Any:
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        axes = (dp,) + (None,) * (leaf.ndim - 1)
+        return _spec(mesh, leaf.shape, axes)
+
+    return _tree_map_with_path(one, abstract_batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, abstract_cache) -> Any:
+    """KV cache: batch over FSDP axis; heads over 'model' when divisible,
+    otherwise the sequence dim (split-KV decode). Recurrent states shard
+    their channel dim over 'model'."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    mp = "model"
+    kv_div = cfg.n_kv_heads % _axsize(mesh, mp) == 0
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k", "v", "ck", "cv"):  # [n, B, T, KV, dh]
+            axes = (None, dp, None, mp, None) if kv_div else (None, dp, mp, None, None)
+        elif name == "pos":
+            axes = (None, None)
+        elif name == "S":  # [n, B, H, dh, dh]
+            axes = (None, dp, mp, None, None)
+        elif name == "h":  # [n, B, R]
+            axes = (None, dp, mp)
+        elif name == "conv":  # [n, B, W-1, R]
+            axes = (None, dp, None, mp)
+        elif name == "x_prev":  # [n, B, D]
+            axes = (None, dp, None)
+        else:
+            axes = (None,) * leaf.ndim
+        return _spec(mesh, leaf.shape, axes)
+
+    return _tree_map_with_path(one, abstract_cache)
+
+
+def act_spec(cfg: ModelConfig, mesh: Mesh, seq_len: int) -> Optional[P]:
+    """Residual-stream constraint between layers: sequence-sharded over
+    'model' (Megatron sequence parallelism) when divisible."""
+    if not cfg.seq_shard_activations:
+        return None
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    if seq_len % _axsize(mesh, "model") != 0:
+        return P(dp, None, None)
+    return P(dp, "model", None)
+
+
+def to_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# -- tree helpers ------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return str(k.key)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    return any(hasattr(k, "key") and k.key in ("groups", "enc_groups") for k in path)
+
+
+def _tree_map_with_path(fn, tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(treedef, [fn(p, l) for p, l in flat])

@@ -1,0 +1,121 @@
+"""Training driver.
+
+Production path: build the mesh, shard params/opt/batches by the rules in
+launch/sharding.py, jit the train step, stream the deterministic data
+pipeline, checkpoint every --ckpt-every steps (async, atomic), restore
+(elastically) from --ckpt-dir if present.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+--smoke uses the reduced same-family config so the driver runs end-to-end
+on this CPU container; on TPU the same code path takes the full config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke_config
+from ..models import model as M
+from ..models.shardctx import set_shard_hints
+from ..train import checkpoint as CKPT
+from ..train.data import Pipeline, batch_at
+from ..train.optim import init_opt_state
+from ..train.train_step import make_train_step
+from .mesh import make_smoke_mesh, make_production_mesh
+from . import sharding as SH
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--structured-data", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_production_mesh() if args.production_mesh else make_smoke_mesh()
+    set_shard_hints(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key, dtype=jnp.float32)
+    opt = init_opt_state(params, cfg.optimizer)
+    pspecs = SH.param_specs(cfg, mesh, params)
+    ospecs = SH.opt_specs(cfg, mesh, opt, pspecs)
+    psh = SH.to_shardings(mesh, pspecs)
+    osh = SH.to_shardings(mesh, ospecs)
+    params = jax.device_put(params, psh)
+    opt = jax.device_put(opt, osh)
+
+    start_step = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        params, opt, manifest = CKPT.restore(
+            args.ckpt_dir, target_params=params, target_opt=opt, shardings=(psh, osh)
+        )
+        start_step = manifest["step"]
+        print(f"restored step {start_step} from {args.ckpt_dir} (mesh was {manifest['mesh_shape']})")
+
+    step_fn = make_train_step(cfg, act_spec=None, n_microbatches=args.microbatches, lr=args.lr)
+    with mesh:
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        pipe = Pipeline(
+            args.seed + 1, args.batch, args.seq, cfg.vocab, start_step=start_step,
+            structured=args.structured_data,
+        )
+        t0 = time.time()
+        writer = None
+        for step in range(start_step, args.steps):
+            raw = next(pipe)
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            params, opt, metrics = jit_step(params, opt, batch)
+            if step % 10 == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                print(
+                    f"step {step:5d} loss {loss:8.4f} |grad| {gn:8.3f} "
+                    f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)",
+                    flush=True,
+                )
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                if writer is not None:
+                    writer.join()
+                writer = CKPT.save(
+                    args.ckpt_dir,
+                    step + 1,
+                    params,
+                    opt,
+                    data_cursor=pipe.cursor,
+                    rng_key=key,
+                    mesh_shape=tuple(mesh.devices.shape),
+                    async_write=True,
+                )
+        if writer is not None:
+            writer.join()
+        if args.ckpt_dir:
+            CKPT.save(
+                args.ckpt_dir, args.steps, params, opt,
+                data_cursor=pipe.cursor, rng_key=key,
+                mesh_shape=tuple(mesh.devices.shape),
+            )
+    return params, opt
+
+
+if __name__ == "__main__":
+    main()

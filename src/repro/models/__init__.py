@@ -1,0 +1,11 @@
+"""Model zoo for the 10 assigned architectures: dense GQA/SWA transformers,
+MoE (top-k, shared experts), RG-LRU hybrid, RWKV6, encoder-decoder, and
+VLM/audio backbones with stub modality frontends."""
+
+from .model import (
+    abstract_params,
+    forward_train,
+    init_params,
+    input_specs,
+    loss_fn,
+)

@@ -1,0 +1,192 @@
+"""Common transformer layers: RMSNorm, (partial) RoPE, GQA attention with
+optional sliding window and KV cache, and gated MLPs.
+
+All matmul-heavy paths are plain jnp (XLA fuses them onto the MXU); the
+optional Pallas kernels in repro.kernels provide the hand-tiled variants and
+are validated against these as oracles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# chunk length for memory-bounded (flash-style) attention on long sequences:
+# scores materialize per q-chunk only ([B, H_shard, QCHUNK, S] fp32), which
+# keeps 4k-train and 32k-prefill peaks inside v5e HBM (EXPERIMENTS.md §Perf)
+QCHUNK_THRESHOLD = 2048
+QCHUNK = 1024
+
+
+def rms_norm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial rotary supported: stablelm 25%, chatglm 50%)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, frac: float, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, dh]; positions: [B, S] (int). Rotates the first
+    ``frac * dh`` dims, passes the rest through."""
+    dh = x.shape[-1]
+    rot = int(dh * frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freqs  # [B,S,1,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool, window: Optional[int]):
+    """[Sq, Sk] additive bias in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cfg,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    positions: Optional[jnp.ndarray] = None,
+    kv_source: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training/prefill). GQA: H query heads grouped
+    over KV heads; KV stays replicated across the model axis (DESIGN.md §4).
+    Sequences beyond QCHUNK_THRESHOLD use query-chunked online softmax."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads, cfg.d_head
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kv_in = x if kv_source is None else kv_source
+    Sk = kv_in.shape[1]
+    kv_positions = (
+        positions
+        if kv_source is None
+        else jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    )
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", kv_in, p["wv"])
+    if use_rope and kv_source is None:
+        q = rope(q, positions, cfg.rope_frac, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_frac, cfg.rope_theta)
+
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, dh)
+    scale = 1.0 / math.sqrt(dh)
+
+    def block(q_blk, qpos_blk):
+        s = jnp.einsum("bqgrk,btgk->bgrqt", q_blk, k).astype(jnp.float32) * scale
+        bias = _mask_bias(qpos_blk, kv_positions[0], causal and kv_source is None, window)
+        s = s + bias[None, None, None]
+        a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bgrqt,btgk->bqgrk", a, v)
+
+    if S <= QCHUNK_THRESHOLD:
+        o = block(qg, positions[0])
+    else:
+        nchunk = S // QCHUNK
+        qg_c = qg.reshape(B, nchunk, QCHUNK, KV, rep, dh).transpose(1, 0, 2, 3, 4, 5)
+        pos_c = positions[0].reshape(nchunk, QCHUNK)
+
+        def step(_, qc):
+            q_blk, qpos = qc
+            return None, block(q_blk, qpos)
+
+        _, o_c = jax.lax.scan(step, None, (qg_c, pos_c))
+        o = o_c.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, rep, dh)
+
+    o = o.reshape(B, S, H, dh)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_decode(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,
+    cfg,
+    *,
+    window: Optional[int] = None,
+    cross: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode against a KV cache. cache: {'k','v'}: [B, Smax, KV, dh].
+    ``pos`` is the current position (scalar int32). For cross-attention the
+    cache is the (precomputed) encoder memory and is not updated."""
+    B, S1, D = x.shape  # S1 == 1
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    posb = jnp.broadcast_to(pos[None, None].astype(jnp.int32), (B, 1))
+    if not cross:
+        k_new = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+        q = rope(q, posb, cfg.rope_frac, cfg.rope_theta)
+        k_new = rope(k_new, posb, cfg.rope_frac, cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+    else:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    Smax = k.shape[1]
+    rep = H // KV
+    qg = q.reshape(B, 1, KV, rep, dh)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqgrk,btgk->bgrqt", qg, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(Smax, dtype=jnp.int32)
+    ok = kpos[None] <= pos if not cross else jnp.ones((1, Smax), dtype=bool)
+    if window is not None and not cross:
+        ok = ok & (pos - kpos[None] < window)
+    s = s + jnp.where(ok, 0.0, -1e30)[:, None, None, None, :]
+    a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgrqt,btgk->bqgrk", a, v).reshape(B, 1, H, dh)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp(p: Dict[str, jnp.ndarray], x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+    if kind == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if kind == "rwkv_cm":  # rwkv channel-mix: squared-relu key, receptance gate
+        kx = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        kx = jnp.square(jax.nn.relu(kx))
+        r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_recept"]))
+        return r * jnp.einsum("bsf,fd->bsd", kx, p["w_down"])
+    raise ValueError(kind)

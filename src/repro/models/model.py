@@ -1,0 +1,569 @@
+"""Model assembly: parameter trees, training forward, prefill, and decode.
+
+Layers are stacked per repetition group (scan-over-layers) so HLO size and
+compile time are O(1) in depth. A "group" is one repetition pattern — e.g.
+recurrentgemma's ("rec", "rec", "attn") period — whose parameters carry a
+leading repetition dim; `jax.lax.scan` + `jax.checkpoint` iterate it.
+
+Modes:
+* forward_train: full-sequence, remat per period, optional sequence-sharded
+  residual stream (Megatron-style sequence parallelism via sharding
+  constraints),
+* prefill: full-sequence, also returns the per-layer KV/recurrent caches,
+* decode_step: one token against ring-buffer KV caches / recurrent states.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import attention, attention_decode, mlp, rms_norm
+from .moe import moe_ffn
+from .recurrent import (
+    recurrent_block,
+    recurrent_block_decode,
+    rwkv_time_mix,
+    rwkv_time_mix_decode,
+)
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(pattern, n_repetitions)] covering cfg.n_layers decoder layers."""
+    pattern = cfg.block_pattern or ("attn",)
+    period = len(pattern)
+    n_full, rem = divmod(cfg.n_layers, period)
+    groups = []
+    if n_full:
+        groups.append((tuple(pattern), n_full))
+    if rem:
+        groups.append((tuple(pattern[:rem]), 1))
+    return groups
+
+
+def _block_kinds(cfg: ModelConfig, pattern: Tuple[str, ...], cross: bool) -> List[str]:
+    return [f"{k}{i}" for i, k in enumerate(pattern)]
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _attn_defs(cfg, cross=False):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads_padded, cfg.n_kv_heads, cfg.d_head
+    pre = "c" if cross else ""
+    return {
+        f"{pre}wq": (D, H, dh),
+        f"{pre}wk": (D, KV, dh),
+        f"{pre}wv": (D, KV, dh),
+        f"{pre}wo": (H, dh, D),
+    }
+
+
+def _ffn_defs(cfg, moe_layer: bool):
+    D, F = cfg.d_model, cfg.d_ff
+    if moe_layer:
+        mc = cfg.moe
+        E, Fe = mc.n_experts, mc.d_ff_expert
+        d = {
+            "router": (D, E),
+            "w_gate": (E, D, Fe),
+            "w_up": (E, D, Fe),
+            "w_down": (E, Fe, D),
+        }
+        if mc.n_shared:
+            d.update(
+                shared_gate=(D, Fe * mc.n_shared),
+                shared_up=(D, Fe * mc.n_shared),
+                shared_down=(Fe * mc.n_shared, D),
+            )
+        return d
+    if cfg.mlp_kind == "swiglu":
+        return {"w_gate": (D, F), "w_up": (D, F), "w_down": (F, D)}
+    if cfg.mlp_kind == "gelu":
+        return {"w_up": (D, F), "w_down": (F, D)}
+    if cfg.mlp_kind == "rwkv_cm":
+        return {"w_up": (D, F), "w_down": (F, D), "w_recept": (D, D)}
+    raise ValueError(cfg.mlp_kind)
+
+
+def _block_defs(cfg, kind: str, cross: bool) -> Dict[str, Tuple[int, ...]]:
+    D, R = cfg.d_model, cfg.lru_dim
+    if kind.startswith("attn"):
+        moe_layer = cfg.moe is not None and not kind.startswith("attn_dense")
+        d = {"ln1": (D,), "ln2": (D,)}
+        d.update(_attn_defs(cfg))
+        d.update(_ffn_defs(cfg, moe_layer))
+        if cross:
+            d["ln_cross"] = (D,)
+            d.update(_attn_defs(cfg, cross=True))
+        return d
+    if kind.startswith("rec"):
+        d = {
+            "ln1": (D,),
+            "ln2": (D,),
+            "w_gate_in": (D, R),
+            "w_rec_in": (D, R),
+            "conv_w": (cfg.conv_width, R),
+            "conv_b": (R,),
+            "w_a": (R, R),
+            "w_x": (R, R),
+            "lam": (R,),
+            "w_out": (R, D),
+        }
+        d.update(_ffn_defs(cfg, False))
+        return d
+    if kind.startswith("rwkv"):
+        K = cfg.n_heads * cfg.rwkv_head_dim
+        d = {
+            "ln1": (D,),
+            "ln2": (D,),
+            "w_r": (D, K),
+            "w_k": (D, K),
+            "w_v": (D, K),
+            "w_g": (D, K),
+            "w_o": (K, D),
+            "w_dec0": (K,),
+            "w_dec1": (D, 64),
+            "w_dec2": (64, K),
+            "u": (K,),
+            "ln_w": (cfg.n_heads, cfg.rwkv_head_dim),
+            "ln_b": (cfg.n_heads, cfg.rwkv_head_dim),
+            "mu_r": (D,),
+            "mu_k": (D,),
+            "mu_v": (D,),
+            "mu_g": (D,),
+            "mu_w": (D,),
+        }
+        d.update(_ffn_defs(cfg, False))
+        return d
+    raise ValueError(kind)
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Shape tree (tuples) for the whole model."""
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    cross = cfg.n_encoder_layers > 0
+    tree: Dict[str, Any] = {"embed": (Vp, D), "final_norm": (D,)}
+    if not cfg.tied_embeddings:
+        tree["lm_head"] = (D, Vp)
+    groups = []
+    for pattern, n_rep in layer_groups(cfg):
+        g = {}
+        for name, kind in zip(_block_kinds(cfg, pattern, cross), pattern):
+            g[name] = {
+                k: (n_rep,) + shape for k, shape in _block_defs(cfg, kind, cross).items()
+            }
+        groups.append(g)
+    tree["groups"] = groups
+    if cross:
+        eg = {
+            "attn0": {
+                k: (cfg.n_encoder_layers,) + s
+                for k, s in _block_defs(cfg, "attn", False).items()
+            }
+        }
+        tree["enc_groups"] = [eg]
+        tree["enc_final_norm"] = (D,)
+    return tree
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, dtype),
+        param_defs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    paths = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+
+    def init_one(path, shape, k):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name.startswith(("ln", "final_norm", "enc_final_norm", "conv_b", "w_dec0")):
+            return jnp.zeros(shape, dtype)
+        if name.startswith("mu"):
+            return jnp.full(shape, 0.5, dtype)
+        if name == "lam":
+            # init so the decay a = exp(-c*softplus(lam)) ~ U(0.9, 0.99)
+            return jnp.asarray(
+                jax.random.uniform(k, shape, jnp.float32, -4.0, -2.0), dtype
+            )
+        if name == "u":
+            return jnp.asarray(jax.random.normal(k, shape) * 0.1, dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 0.02 if name in ("embed",) else 1.0 / math.sqrt(max(fan_in, 1))
+        return jnp.asarray(jax.random.normal(k, shape) * scale, dtype)
+
+    out = [init_one(p, s, k) for (p, s), k in zip(paths, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(cfg, p, x):
+    if cfg.moe is not None and "router" in p:
+        return moe_ffn(p, x, cfg)
+    return mlp(p, x, cfg.mlp_kind)
+
+
+def _block_apply(cfg, kind: str, p, x, *, causal=True, memory=None, act_spec=None):
+    if kind.startswith("attn"):
+        window = cfg.attn_window if causal else None
+        x = x + attention(p, rms_norm(p["ln1"], x), cfg, causal=causal, window=window)
+        if memory is not None:
+            cp = {"wq": p["cwq"], "wk": p["cwk"], "wv": p["cwv"], "wo": p["cwo"]}
+            x = x + attention(
+                cp, rms_norm(p["ln_cross"], x), cfg, causal=False, kv_source=memory, use_rope=False
+            )
+        x = x + _ffn_apply(cfg, p, rms_norm(p["ln2"], x))
+    elif kind.startswith("rec"):
+        x = x + recurrent_block(p, rms_norm(p["ln1"], x), cfg)
+        x = x + mlp(p, rms_norm(p["ln2"], x), cfg.mlp_kind)
+    elif kind.startswith("rwkv"):
+        x = x + rwkv_time_mix(p, rms_norm(p["ln1"], x), cfg)
+        x = x + mlp(p, rms_norm(p["ln2"], x), cfg.mlp_kind)
+    else:
+        raise ValueError(kind)
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    return x
+
+
+def _run_groups(cfg, groups_params, patterns, x, *, causal, memory, act_spec, remat):
+    for (pattern, n_rep), gp in zip(patterns, groups_params):
+        kinds = _block_kinds(cfg, pattern, memory is not None)
+
+        def period(xc, pp):
+            for name, kind in zip(kinds, pattern):
+                xc = _block_apply(
+                    cfg, kind, pp[name], xc, causal=causal, memory=memory, act_spec=act_spec
+                )
+            return xc, None
+
+        body = jax.checkpoint(period) if remat else period
+        x, _ = jax.lax.scan(body, x, gp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Public forward passes
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, params, tokens):
+    return params["embed"][tokens]
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], act_spec=None):
+    """-> final hidden states [B, S, D]."""
+    x = embed_tokens(cfg, params, batch["tokens"]).astype(params["embed"].dtype)
+    if cfg.frontend == "vision_stub":
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    memory = None
+    if cfg.n_encoder_layers:
+        m = batch["src_embeds"].astype(x.dtype)
+        m = _run_groups(
+            cfg,
+            params["enc_groups"],
+            [(("attn",), cfg.n_encoder_layers)],
+            m,
+            causal=False,
+            memory=None,
+            act_spec=act_spec,
+            remat=cfg.remat,
+        )
+        memory = rms_norm(params["enc_final_norm"], m)
+    x = _run_groups(
+        cfg,
+        params["groups"],
+        layer_groups(cfg),
+        x,
+        causal=True,
+        memory=memory,
+        act_spec=act_spec,
+        remat=cfg.remat,
+    )
+    return rms_norm(params["final_norm"], x)
+
+
+def lm_head_weight(cfg, params):
+    if cfg.tied_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params, batch, act_spec=None, chunk: int = 1024):
+    """Chunked softmax cross-entropy (the [B,S,V] logits tensor never
+    materializes — §Dry-run memory)."""
+    hidden = forward_train(cfg, params, batch, act_spec=act_spec)
+    targets = batch["targets"]
+    S = targets.shape[1]
+    hidden = hidden[:, -S:]  # vlm: loss over the text suffix only
+    W = lm_head_weight(cfg, params)
+    chunk = min(chunk, S)
+    n = S // chunk
+    hs = hidden[:, : n * chunk].reshape(hidden.shape[0], n, chunk, -1).swapaxes(0, 1)
+    ts = targets[:, : n * chunk].reshape(targets.shape[0], n, chunk).swapaxes(0, 1)
+
+    def step(acc, xs):
+        h, t = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, W).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ts))
+    return total / (targets.shape[0] * n * chunk)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill & decode
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Shape/dtype tree of the decode cache (ring-buffer KV / recurrent)."""
+    KV, dh, R, D = cfg.n_kv_heads, cfg.d_head, cfg.lru_dim, cfg.d_model
+    H = cfg.n_heads
+    cross = cfg.n_encoder_layers > 0
+    groups = []
+    for pattern, n_rep in layer_groups(cfg):
+        g = {}
+        for name, kind in zip(_block_kinds(cfg, pattern, cross), pattern):
+            if kind.startswith("attn"):
+                cap = cache_len if cfg.attn_window is None else min(cache_len, cfg.attn_window)
+                ent = {
+                    "k": ((n_rep, batch, cap, KV, dh), dtype),
+                    "v": ((n_rep, batch, cap, KV, dh), dtype),
+                    "pos": ((n_rep, cap), jnp.int32),
+                }
+                if cross:
+                    src = max(cache_len // 4, 1)
+                    ent["ck"] = ((n_rep, batch, src, KV, dh), dtype)
+                    ent["cv"] = ((n_rep, batch, src, KV, dh), dtype)
+                g[name] = ent
+            elif kind.startswith("rec"):
+                g[name] = {
+                    "h": ((n_rep, batch, R), jnp.float32),
+                    "conv": ((n_rep, batch, cfg.conv_width - 1, R), dtype),
+                }
+            elif kind.startswith("rwkv"):
+                g[name] = {
+                    "S": ((n_rep, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                    "x_prev": ((n_rep, batch, D), dtype),
+                }
+        groups.append(g)
+    return groups
+
+
+def abstract_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(*sd),
+        cache_defs(cfg, batch, cache_len, dtype),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+    )
+
+
+def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    def mk(sd):
+        shape, dt = sd
+        if dt == jnp.int32:
+            return jnp.full(shape, -(1 << 30), jnp.int32)  # invalid positions
+        return jnp.zeros(shape, dt)
+
+    return jax.tree.map(
+        mk,
+        cache_defs(cfg, batch, cache_len, dtype),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+    )
+
+
+def _block_decode(cfg, kind, p, c, x, pos):
+    if kind.startswith("attn"):
+        window = cfg.attn_window
+        attn_out, c2 = _attn_ring_decode(p, rms_norm(p["ln1"], x), c, pos, cfg, window)
+        x = x + attn_out
+        new_c = dict(c)
+        new_c.update(c2)
+        if "ck" in c:  # cross-attention against precomputed encoder memory
+            cp = {"wq": p["cwq"], "wk": p["cwk"], "wv": p["cwv"], "wo": p["cwo"]}
+            o, _ = attention_decode(
+                cp, rms_norm(p["ln_cross"], x), {"k": c["ck"], "v": c["cv"]}, pos, cfg, cross=True
+            )
+            x = x + o
+        x = x + _ffn_apply(cfg, p, rms_norm(p["ln2"], x))
+        return x, new_c
+    if kind.startswith("rec"):
+        o, st = recurrent_block_decode(p, rms_norm(p["ln1"], x), c, cfg)
+        x = x + o
+        x = x + mlp(p, rms_norm(p["ln2"], x), cfg.mlp_kind)
+        return x, st
+    if kind.startswith("rwkv"):
+        o, st = rwkv_time_mix_decode(p, rms_norm(p["ln1"], x), c, cfg)
+        x = x + o
+        x = x + mlp(p, rms_norm(p["ln2"], x), cfg.mlp_kind)
+        return x, st
+    raise ValueError(kind)
+
+
+def _attn_ring_decode(p, x, c, pos, cfg, window):
+    """Ring-buffer KV decode: slot = pos % capacity, masked by stored pos."""
+    import jax.numpy as jnp
+
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads, cfg.d_head
+    cap = c["k"].shape[1]
+    slot = jax.lax.rem(pos, cap)
+    from .layers import rope
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    posb = jnp.broadcast_to(pos[None, None].astype(jnp.int32), (B, 1))
+    k_new = rope(jnp.einsum("bsd,dgk->bsgk", x, p["wk"]), posb, cfg.rope_frac, cfg.rope_theta)
+    v_new = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    q = rope(q, posb, cfg.rope_frac, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(c["k"], k_new.astype(c["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(c["v"], v_new.astype(c["v"].dtype), (0, slot, 0, 0))
+    posbuf = jax.lax.dynamic_update_slice(c["pos"], pos[None].astype(jnp.int32), (slot,))
+    rep = H // KV
+    qg = q.reshape(B, 1, KV, rep, dh)
+    s = jnp.einsum("bqgrk,btgk->bgrqt", qg, k).astype(jnp.float32) / math.sqrt(dh)
+    ok = (posbuf >= 0) & (posbuf <= pos)
+    if window is not None:
+        ok &= pos - posbuf < window
+    s = s + jnp.where(ok, 0.0, -1e30)[None, None, None, None, :]
+    a = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgrqt,btgk->bqgrk", a, v).reshape(B, 1, H, dh)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v, "pos": posbuf}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """One decode step. token: [B, 1] int32; pos: scalar int32.
+    Returns (logits [B, 1, Vp], new_cache)."""
+    x = embed_tokens(cfg, params, token).astype(params["embed"].dtype)
+    cross = cfg.n_encoder_layers > 0
+    new_groups = []
+    for (pattern, n_rep), gp, gc in zip(layer_groups(cfg), params["groups"], cache):
+        kinds = _block_kinds(cfg, pattern, cross)
+
+        def step(xc, pc):
+            pp, cc = pc
+            new_cc = {}
+            for name, kind in zip(kinds, pattern):
+                xc, new_cc[name] = _block_decode(cfg, kind, pp[name], cc[name], xc, pos)
+            return xc, new_cc
+
+        x, new_gc = jax.lax.scan(step, x, (gp, gc))
+        new_groups.append(new_gc)
+    x = rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, lm_head_weight(cfg, params)).astype(jnp.float32)
+    return logits, new_groups
+
+
+def prefill(cfg: ModelConfig, params, batch, act_spec=None):
+    """Full-sequence forward that also returns the populated KV cache and
+    the last-position logits. (Recurrent/rwkv caches are produced by a final
+    decode-style pass in serving; for the dry-run the attention KV cache is
+    the memory-dominant artifact.)"""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens).astype(params["embed"].dtype)
+    cross = cfg.n_encoder_layers > 0
+    memory = None
+    if cross:
+        m = batch["src_embeds"].astype(x.dtype)
+        m = _run_groups(
+            cfg,
+            params["enc_groups"],
+            [(("attn",), cfg.n_encoder_layers)],
+            m,
+            causal=False,
+            memory=None,
+            act_spec=act_spec,
+            remat=False,
+        )
+        memory = rms_norm(params["enc_final_norm"], m)
+
+    caches = []
+    for (pattern, n_rep), gp in zip(layer_groups(cfg), params["groups"]):
+        kinds = _block_kinds(cfg, pattern, cross)
+
+        def step(xc, pp):
+            cc = {}
+            for name, kind in zip(kinds, pattern):
+                if kind.startswith("attn"):
+                    p = pp[name]
+                    h = rms_norm(p["ln1"], xc)
+                    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+                    from .layers import rope as _rope
+
+                    k = _rope(
+                        jnp.einsum("bsd,dgk->bsgk", h, p["wk"]),
+                        positions,
+                        cfg.rope_frac,
+                        cfg.rope_theta,
+                    )
+                    v = jnp.einsum("bsd,dgk->bsgk", h, p["wv"])
+                    cc[name] = {"k": k, "v": v}
+                xc = _block_apply(
+                    cfg, kind, pp[name], xc, causal=True, memory=memory, act_spec=act_spec
+                )
+            return xc, cc
+
+        x, gc = jax.lax.scan(step, x, gp)
+        caches.append(gc)
+    x = rms_norm(params["final_norm"], x)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], lm_head_weight(cfg, params)).astype(jnp.float32)
+    return logits, caches
+
+
+def input_specs(cfg: ModelConfig, shape: Dict, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given workload
+    shape — weak-type-correct, shardable, no device allocation."""
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    sds = jax.ShapeDtypeStruct
+    if kind == "train":
+        n_text = S - cfg.n_prefix_embeds if cfg.frontend == "vision_stub" else S
+        out = {
+            "tokens": sds((B, n_text), jnp.int32),
+            "targets": sds((B, n_text), jnp.int32),
+        }
+        if cfg.frontend == "vision_stub":
+            out["prefix_embeds"] = sds((B, cfg.n_prefix_embeds, cfg.d_model), dtype)
+        if cfg.n_encoder_layers:
+            out["src_embeds"] = sds((B, max(S // 4, 1), cfg.d_model), dtype)
+        return out
+    if kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["prefix_embeds"] = sds((B, cfg.n_prefix_embeds, cfg.d_model), dtype)
+        if cfg.n_encoder_layers:
+            out["src_embeds"] = sds((B, max(S // 4, 1), cfg.d_model), dtype)
+        return out
+    if kind == "decode":
+        return {
+            "token": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+        }
+    raise ValueError(kind)

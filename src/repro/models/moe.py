@@ -1,0 +1,102 @@
+"""Mixture-of-experts FFN: top-k routing with capacity-bounded
+scatter/gather dispatch (no dense one-hot einsum — dispatch is pure data
+movement, expert matmuls are the only FLOPs).
+
+Experts are sharded over the 'model' mesh axis (EP); tokens are grouped per
+batch row, so dispatch stays within the data shard and XLA inserts the
+expert all-to-all only where the sharding demands it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp
+from .shardctx import constrain
+
+
+def moe_ffn(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D]."""
+    mc = cfg.moe
+    B, S, D = x.shape
+    E, K = mc.n_experts, mc.top_k
+    C = max(1, int(math.ceil(S * K / E * mc.capacity_factor)))
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, K)  # [B,S,K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # keep routing tensors batch-sharded: without these constraints GSPMD
+    # replicates the combine gather across the data axis, producing
+    # [GLOBAL_B, S, K, D] fp32 all-reduces (dry-run: ~120 GiB each on dbrx;
+    # EXPERIMENTS.md §Perf iteration 2)
+    topw = constrain(topw, "dp", None, None)
+    topi = constrain(topi, "dp", None, None)
+
+    # position-in-expert via cumulative count of earlier assignments.
+    # The [B, S*K, E] routing intermediates are the memory hot spot of MoE
+    # dispatch — sharding E over 'model' keeps them O(S*K*E/16) per device
+    # (dry-run: dbrx temp 152 GiB -> ~10 GiB; see EXPERIMENTS.md §Perf).
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int8)  # [B,S,K,E]
+    onehot = constrain(onehot, "dp", None, None, "mp")
+    flat = onehot.reshape(B, S * K, E)
+    pos_flat = jnp.cumsum(flat, axis=1, dtype=jnp.int32) - flat  # count before slot
+    pos_flat = constrain(pos_flat, "dp", None, "mp")
+    pos = (pos_flat.reshape(B, S, K, E) * onehot).sum(-1)  # [B,S,K]
+    pos = constrain(pos, "dp", None, None)
+    keep = pos < C  # capacity drop
+
+    s_idx = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, K))
+    safe_pos = jnp.where(keep, pos, 0)
+    # flat slot index into [E*C] — all gathers/scatters below are expressed
+    # with an explicit leading batch dim (take_along_axis / vmapped scatter)
+    # so GSPMD keeps B sharded over the data axis. The naive 3-index-array
+    # formulation made XLA replicate the combine across data shards
+    # ([GLOBAL_B,S,K,D] fp32 all-reduces — EXPERIMENTS.md §Perf iteration 2).
+    slot_flat = topi * C + safe_pos  # [B,S,K]
+    flat_src = jnp.where(keep, s_idx, S)  # S = out-of-range -> dropped
+
+    def scat_src(idx, val):
+        return jnp.zeros((E * C,), jnp.int32).at[idx.reshape(-1)].set(val.reshape(-1), mode="drop")
+
+    def scat_used(idx, val):
+        return jnp.zeros((E * C,), x.dtype).at[idx.reshape(-1)].max(val.reshape(-1), mode="drop")
+
+    slot_src = jax.vmap(scat_src)(jnp.where(keep, slot_flat, E * C), flat_src)  # [B, E*C]
+    slot_used = jax.vmap(scat_used)(
+        jnp.where(keep, slot_flat, E * C), keep.astype(x.dtype)
+    )
+    slot_src = constrain(slot_src.reshape(B, E, C), "dp", "mp", None).reshape(B, E * C)
+    slot_used = constrain(slot_used.reshape(B, E, C), "dp", "mp", None).reshape(B, E * C)
+
+    # dispatch: gather tokens into [B, E, C, D] (batched along-axis gather;
+    # out-of-range index S is dropped to zero via the used mask)
+    xd = jnp.take_along_axis(x, jnp.minimum(slot_src, S - 1)[..., None], axis=1)
+    xd = xd.reshape(B, E, C, D) * slot_used.reshape(B, E, C, 1)
+    xd = constrain(xd, "dp", "mp", None, None)
+
+    # expert FFN (swiglu), experts sharded over 'model'
+    g = jnp.einsum("becd,edf->becf", xd, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xd, p["w_up"])
+    yd = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, p["w_down"])
+    yd = constrain(yd, "dp", "mp", None, None)
+
+    # combine: each (token, k) gathers its slot output, weighted
+    y = jnp.take_along_axis(
+        yd.reshape(B, E * C, D), slot_flat.reshape(B, S * K, 1), axis=1
+    ).reshape(B, S, K, D)
+    y = constrain(y, "dp", None, None, None)
+    w = (topw.astype(x.dtype) * keep.astype(x.dtype))[..., None]
+    out = constrain((y * w).sum(axis=2), "dp", None, None)
+
+    if mc.n_shared:
+        out = out + mlp(
+            {"w_gate": p["shared_gate"], "w_up": p["shared_up"], "w_down": p["shared_down"]},
+            x,
+            "swiglu",
+        )
+    return out

@@ -1,0 +1,254 @@
+"""Recurrent blocks: RG-LRU (recurrentgemma/Griffin) and RWKV6 (Finch).
+
+RG-LRU: real-gated linear recurrent unit. h_t = a_t * h_{t-1} +
+sqrt(1-a_t^2) * (i_t * x_t), a_t = exp(-c * softplus(L) * r_t). The scan is
+a first-order elementwise linear recurrence -> jax.lax.associative_scan
+(log-depth on TPU).
+
+RWKV6: data-dependent per-channel decay linear attention. Per head,
+S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] v_t[j];
+o_t[j] = sum_i r_t[i] (S_{t-1}[i,j] + u[i] k_t[i] v_t[j]).
+Computed chunk-parallel (intra-chunk matmuls on the MXU + inter-chunk state
+carry) — the same algorithm as the Pallas `linrec` kernel, which treats this
+implementation's ref as its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+RG_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def _rg_lru_gates(p, x):
+    r = jax.nn.sigmoid(jnp.einsum("bsr,ro->bso", x, p["w_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,ro->bso", x, p["w_x"]))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, gated
+
+
+RG_CHUNK = 512
+
+
+def rg_lru(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, R] -> [B, S, R].
+
+    Chunked: a sequential scan over S/RG_CHUNK chunks carrying h [B, R],
+    with a log-depth associative scan inside each chunk. Bounds peak memory
+    to O(B * chunk * R) instead of the O(B * S * R) working set of a
+    full-sequence associative scan (dry-run: recurrentgemma train temp
+    19.6 GiB -> fits; see EXPERIMENTS.md §Perf). Same algorithm as the
+    Pallas `linrec` kernel."""
+    B, S, R = x.shape
+    a, b = _rg_lru_gates(p, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if S <= RG_CHUNK or S % RG_CHUNK != 0:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h.astype(x.dtype)
+
+    n = S // RG_CHUNK
+    ac = a.reshape(B, n, RG_CHUNK, R).swapaxes(0, 1)
+    bc = b.reshape(B, n, RG_CHUNK, R).swapaxes(0, 1)
+
+    def chunk_step(h0, ab):
+        ai, bi = ab
+        A, Bv = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        h = A * h0[:, None] + Bv
+        return h[:, -1], h
+
+    h0 = jnp.zeros((B, R), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    return hs.swapaxes(0, 1).reshape(B, S, R).astype(x.dtype)
+
+
+def rg_lru_decode(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, h: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step recurrence. x: [B, 1, R]; h: [B, R]."""
+    a, b = _rg_lru_gates(p, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+def causal_conv1d(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width W. x: [B,S,R]; p['conv_w']: [W, R]."""
+    W = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def causal_conv1d_decode(p, x, buf):
+    """x: [B,1,R], buf: [B, W-1, R] previous inputs."""
+    W = p["conv_w"].shape[0]
+    win = jnp.concatenate([buf, x], axis=1)  # [B, W, R]
+    out = jnp.einsum("bwr,wr->br", win, p["conv_w"]) + p["conv_b"]
+    return out[:, None], win[:, 1:]
+
+
+def recurrent_block(p, x, cfg):
+    """Griffin recurrent block: (gelu gate branch) * (conv -> RG-LRU branch)."""
+    g = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_in"]))
+    y = jnp.einsum("bsd,dr->bsr", x, p["w_rec_in"])
+    y = causal_conv1d(p, y)
+    y = rg_lru(p, y)
+    return jnp.einsum("bsr,rd->bsd", g * y, p["w_out"])
+
+
+def recurrent_block_decode(p, x, state, cfg):
+    g = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_in"]))
+    y = jnp.einsum("bsd,dr->bsr", x, p["w_rec_in"])
+    y, conv_buf = causal_conv1d_decode(p, y, state["conv"])
+    y, h = rg_lru_decode(p, y, state["h"])
+    out = jnp.einsum("bsr,rd->bsd", g * y, p["w_out"])
+    return out, {"conv": conv_buf, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix (chunked linear attention with data-dependent decay)
+# ---------------------------------------------------------------------------
+
+
+def _rwkv_proj(p, x, cfg):
+    """Token-shift mixing + r/k/v/g and data-dependent decay w."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.rwkv_head_dim
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # previous token
+
+    def mix(mu):
+        return x * mu + xx * (1.0 - mu)
+
+    r = jnp.einsum("bsd,dk->bsk", mix(p["mu_r"]), p["w_r"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dk->bsk", mix(p["mu_k"]), p["w_k"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,dk->bsk", mix(p["mu_v"]), p["w_v"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,dk->bsk", mix(p["mu_g"]), p["w_g"]))
+    # Finch: data-dependent decay via low-rank MLP
+    dd = jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mu_w"]), p["w_dec1"]))
+    wlog = p["w_dec0"] + jnp.einsum("bsl,lk->bsk", dd, p["w_dec2"])
+    # decay floor: exp(wlog) <= 5 bounds the per-chunk exponent so the
+    # chunked relative-decay factorization stays inside fp32 range
+    # (5 * chunk(16) = 80 < log(fp32_max) ~ 88).
+    wlog = jnp.clip(wlog.astype(jnp.float32), None, 1.609)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, dh)  # in (0, 1)
+    return r, k, v, g, w
+
+
+def rwkv_time_mix(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg) -> jnp.ndarray:
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.rwkv_head_dim
+    r, k, v, g, w = _rwkv_proj(p, x, cfg)
+    u = p["u"].reshape(H, dh)
+
+    T = cfg.rwkv_chunk
+    n = S // T if S % T == 0 else None
+    if n is None:  # pad to chunk multiple
+        pad = T - S % T
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        n = (S + pad) // T
+    rc = r.reshape(B, n, T, H, dh).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(B, n, T, H, dh).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, n, T, H, dh).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = w.reshape(B, n, T, H, dh).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    def chunk_step(S_carry, inp):
+        rc_, kc_, vc_, wc_ = inp  # [B,H,T,dh]
+        logw = jnp.log(jnp.maximum(wc_, 1e-30))
+        cw = jnp.cumsum(logw, axis=2)  # inclusive cumulative log-decay
+        Wtot = jnp.exp(cw[:, :, -1])  # [B,H,dh]
+        # decay from chunk start to just before t:
+        decay_to_t = jnp.exp(cw - logw)  # prod_{tau < t}
+        # matmul inputs in bf16 (fp32 accumulation): halves the HBM traffic
+        # of the chunk tensors, which dominates rwkv's memory roofline term
+        # (§Perf iteration 9); the decay factorization stays fp32.
+        bf = jnp.bfloat16
+        r_in = (rc_ * decay_to_t).astype(bf)
+        # inter-chunk: o_inter[t] = (r_t * decay_to_t) @ S
+        o_inter = jnp.einsum(
+            "bhtk,bhkv->bhtv", r_in, S_carry.astype(bf), preferred_element_type=jnp.float32
+        )
+        # intra-chunk: A[t,s] = sum_i r_t[i] k_s[i] prod_{s<tau<t} w_tau[i], s<t
+        k_out = (kc_ * jnp.exp(cw[:, :, -1:] - cw)).astype(bf)
+        # A via relative decays: r~_t = r_t*exp(cw_{t-1}), k~_s = k_s*exp(-cw_s)
+        k_rel = (kc_ * jnp.exp(-cw)).astype(bf)
+        A = jnp.einsum(
+            "bhtk,bhsk->bhts", r_in, k_rel, preferred_element_type=jnp.float32
+        )
+        tri = jnp.tril(jnp.ones((rc_.shape[2], rc_.shape[2]), jnp.float32), -1)
+        A = A * tri
+        vb = vc_.astype(bf)
+        o_intra = jnp.einsum("bhts,bhsv->bhtv", A.astype(bf), vb, preferred_element_type=jnp.float32)
+        # diagonal bonus term: u * k_t
+        diag = jnp.einsum("bhtk,bhtk->bht", rc_, kc_ * u[None, :, None, :])
+        o_diag = diag[..., None] * vc_
+        # state update: S' = S * Wtot + sum_s k_s (prod_{s<tau<=end} w) v_s
+        S_new = S_carry * Wtot[..., None] + jnp.einsum(
+            "bhsk,bhsv->bhkv", k_out, vb, preferred_element_type=jnp.float32
+        )
+        return S_new, o_inter + o_intra + o_diag
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, oc = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, -1, H, dh)[:, :S]
+    o = _rwkv_groupnorm(p, o).astype(x.dtype) * g.reshape(B, S, H, dh)
+    return jnp.einsum("bsk,kd->bsd", o.reshape(B, S, H * dh), p["w_o"])
+
+
+def _rwkv_groupnorm(p, o):
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    return (o - mean) * jax.lax.rsqrt(var + 64e-5) * p["ln_w"].reshape(
+        1, 1, *p["ln_w"].shape
+    ) + p["ln_b"].reshape(1, 1, *p["ln_b"].shape)
+
+
+def rwkv_time_mix_decode(p, x, state, cfg):
+    """One step. state['S']: [B,H,dh,dh] fp32."""
+    B, S1, D = x.shape
+    H, dh = cfg.n_heads, cfg.rwkv_head_dim
+    # token-shift uses the previous input stored in state
+    x_prev = state["x_prev"]
+    xx = x_prev[:, None]
+
+    def mix(mu):
+        return x * mu + xx * (1.0 - mu)
+
+    r = jnp.einsum("bsd,dk->bsk", mix(p["mu_r"]), p["w_r"]).reshape(B, H, dh)
+    k = jnp.einsum("bsd,dk->bsk", mix(p["mu_k"]), p["w_k"]).reshape(B, H, dh)
+    v = jnp.einsum("bsd,dk->bsk", mix(p["mu_v"]), p["w_v"]).reshape(B, H, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,dk->bsk", mix(p["mu_g"]), p["w_g"]))
+    dd = jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(p["mu_w"]), p["w_dec1"]))
+    wlog = jnp.clip(
+        (p["w_dec0"] + jnp.einsum("bsl,lk->bsk", dd, p["w_dec2"])).astype(jnp.float32),
+        None,
+        1.609,
+    )
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, H, dh)
+    u = p["u"].reshape(H, dh)
+
+    Sm = state["S"]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    bonus = (u[None] * kf)[..., None] * vf[:, :, None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", rf, Sm + bonus)
+    S_new = Sm * w[..., None] + kf[..., None] * vf[:, :, None, :]
+    o = _rwkv_groupnorm(p, o[:, None].reshape(B, 1, H, dh))[:, 0]
+    o = (o * g.reshape(B, H, dh)).reshape(B, 1, H * dh).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", o, p["w_o"])
+    return out, {"S": S_new, "x_prev": x[:, 0]}

@@ -1,0 +1,63 @@
+"""Sharding-hint context: lets layer internals place GSPMD constraints on
+large intermediates (MoE dispatch tensors, attention scores) without
+threading mesh objects through every call.
+
+The dry-run / train / serve drivers call ``set_shard_hints(mesh)``; layer
+code calls ``constrain(x, 'dp', None, 'mp', ...)`` which resolves the
+logical axes to the mesh's axis names and applies
+``with_sharding_constraint`` — skipping any dim that is not divisible (a
+fallback to replication, never a failure). Outside a mesh context the calls
+are no-ops, so smoke tests on CPU are unaffected.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_HINTS = {"mesh": None, "dp": None, "mp": None}
+
+
+def set_shard_hints(mesh) -> None:
+    if mesh is None:
+        _HINTS.update(mesh=None, dp=None, mp=None)
+        return
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    _HINTS.update(mesh=mesh, dp=dp if len(dp) > 1 else dp[0], mp="model")
+
+
+def clear_shard_hints() -> None:
+    set_shard_hints(None)
+
+
+def _axsize(mesh, ax) -> int:
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def constrain(x, *axes):
+    """axes: 'dp' | 'mp' | None per dim."""
+    mesh = _HINTS["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for size, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        resolved = _HINTS[ax]
+        if resolved is None or size % _axsize(mesh, resolved) != 0:
+            spec.append(None)
+        else:
+            spec.append(resolved)
+    # NamedSharding (not bare PartitionSpec): carries its mesh, so callers
+    # never need an ambient mesh context at trace time
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,2 @@
+"""Relational substrate: columnar tables, TPC-H-derived data generation,
+query templates, and vectorized operators."""

@@ -1,0 +1,3 @@
+"""Serving substrate: continuous batching, decode driver, and dynamic
+folding of concurrent requests over shared KV-prefix state (the paper's
+mechanism transferred to LM serving — DESIGN.md §6)."""

@@ -1,0 +1,209 @@
+"""Dynamic folding for LM serving: GraftDB's mechanism over KV-prefix state.
+
+Mapping (DESIGN.md §6, beyond-paper):
+
+| GraftDB (paper)                  | serving (here)                         |
+|----------------------------------|----------------------------------------|
+| shared hash-build state          | KV cache of a token prefix             |
+| state signature (exact identity) | (model, weights-version)               |
+| coverage metadata                | number of prefix tokens prefilled      |
+| derivation-identified occurrence | token position in the prefix           |
+| represented extent               | matched prefix already prefilled       |
+| residual extent                  | matched portion a RUNNING prefill will |
+|                                  | still produce (request waits on gate)  |
+| unattached extent                | the request's unique suffix (ordinary  |
+|                                  | prefill work)                          |
+| per-query state lens             | request may read cache[0:matched_len)  |
+| state-readiness gate             | covered_tokens >= matched_len          |
+| retention policy                 | release prefix states with no refs     |
+
+The scheduler is executor-agnostic: `SimExecutor` models token costs (used
+by tests/benchmarks); a real executor runs models/model.py prefill/decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Tuple[int, ...]
+    n_decode: int
+    arrival: float
+    # filled by the scheduler
+    t_first_token: Optional[float] = None
+    t_complete: Optional[float] = None
+    represented_tokens: int = 0
+    residual_tokens: int = 0
+    ordinary_tokens: int = 0
+
+
+class PrefixState:
+    """A shared KV-prefix state. ``covered`` is the coverage metadata: the
+    producer (a running prefill) has materialized cache for [0, covered)."""
+
+    _next = 0
+
+    def __init__(self, tokens: Tuple[int, ...]):
+        PrefixState._next += 1
+        self.sid = PrefixState._next
+        self.tokens = tokens
+        self.covered = 0
+        self.refs: set = set()
+
+    def visible_len(self, request_prefix_len: int) -> int:
+        """Per-request state lens: a request observes only its matched
+        prefix, and only once covered."""
+        return min(self.covered, request_prefix_len)
+
+
+def _match_len(a: Tuple[int, ...], b: Tuple[int, ...]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class FoldingScheduler:
+    """Admission + scheduling of requests over shared prefix states.
+
+    ``fold=False`` gives the isolated baseline (every request prefills its
+    whole prompt). Single-server cost model mirroring the paper's
+    single-worker evaluation: the executor serves one token-batch at a time.
+    """
+
+    def __init__(self, executor, fold: bool = True, min_share: int = 16):
+        self.ex = executor
+        self.fold = fold
+        self.min_share = min_share
+        self.states: List[PrefixState] = []
+        self.metrics = {"represented": 0, "residual": 0, "ordinary": 0}
+
+    # -- query grafting (admission) ----------------------------------------
+    def admit(self, req: Request) -> Dict:
+        """Partition the request's prompt into represented / residual /
+        unattached extents against the best compatible live prefix state."""
+        best, best_m = None, 0
+        if self.fold:
+            for st in self.states:
+                m = _match_len(st.tokens, req.prompt)
+                if m > best_m:
+                    best, best_m = st, m
+        if best is None or best_m < self.min_share:
+            st = PrefixState(req.prompt)
+            st.refs.add(req.rid)
+            self.states.append(st)
+            req.ordinary_tokens = len(req.prompt)
+            self.metrics["ordinary"] += req.ordinary_tokens
+            return {
+                "state": st,
+                "matched": len(req.prompt),
+                "represented": 0,
+                "residual": 0,
+                "suffix": 0,
+            }
+        best.refs.add(req.rid)
+        represented = min(best.covered, best_m)
+        residual = best_m - represented  # gate: produced by the running producer
+        suffix = len(req.prompt) - best_m
+        req.represented_tokens = represented
+        req.residual_tokens = residual
+        req.ordinary_tokens = suffix
+        self.metrics["represented"] += represented
+        self.metrics["residual"] += residual
+        self.metrics["ordinary"] += suffix
+        return {
+            "state": best,
+            "matched": best_m,
+            "represented": represented,
+            "residual": residual,
+            "suffix": suffix,
+        }
+
+    def release(self, req: Request) -> None:
+        for st in self.states:
+            st.refs.discard(req.rid)
+        self.states = [s for s in self.states if s.refs]  # retention policy
+
+    # -- execution ------------------------------------------------------------
+    def run(self, requests: List[Request]) -> Dict:
+        """Event loop over a single-server executor."""
+        now = 0.0
+        pending = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        # active: (ready_time, rid) -> phases
+        work: List[Tuple[float, int, Request, Dict]] = []
+        done: List[Request] = []
+        decode_pool: List[Request] = []
+        decode_left: Dict[int, int] = {}
+
+        while i < len(pending) or work or decode_pool:
+            while i < len(pending) and pending[i].arrival <= now:
+                req = pending[i]
+                i += 1
+                att = self.admit(req)
+                heapq.heappush(work, (req.arrival, req.rid, req, att))
+            if not work and not decode_pool:
+                if i < len(pending):
+                    now = pending[i].arrival
+                    continue
+                break
+            # prefill obligations first (producers open downstream gates)
+            if work:
+                _, _, req, att = heapq.heappop(work)
+                st: PrefixState = att["state"]
+                m = att["matched"]
+                # state lens at execution time: the represented extent may
+                # have GROWN since admission (another producer advanced
+                # coverage) — observe it, produce the rest.
+                covered_now = st.visible_len(m)
+                todo = (len(req.prompt) - m) + (m - covered_now)
+                self.metrics["computed"] = self.metrics.get("computed", 0) + todo
+                now += self.ex.prefill_cost(todo)
+                # residual production contributes to the shared state
+                st.covered = max(st.covered, m)
+                req.t_first_token = now
+                decode_pool.append(req)
+                decode_left[req.rid] = req.n_decode
+                continue
+            # decode: one batched step over all active decodes
+            batch = len(decode_pool)
+            now += self.ex.decode_cost(batch)
+            finished = []
+            for r in decode_pool:
+                decode_left[r.rid] -= 1
+                if decode_left[r.rid] <= 0:
+                    r.t_complete = now
+                    finished.append(r)
+            for r in finished:
+                decode_pool.remove(r)
+                self.release(r)
+                done.append(r)
+        lat = [r.t_complete - r.arrival for r in done]
+        return {
+            "completed": len(done),
+            "elapsed": now,
+            "mean_latency": sum(lat) / max(len(lat), 1),
+            "p95_latency": sorted(lat)[int(0.95 * (len(lat) - 1))] if lat else 0.0,
+            "prefill_tokens": dict(self.metrics),
+        }
+
+
+class SimExecutor:
+    """Token-cost model of one serving worker (prefill compute-bound,
+    decode latency per batched step)."""
+
+    def __init__(self, prefill_tok_s: float = 8000.0, decode_step_s: float = 0.02):
+        self.prefill_tok_s = prefill_tok_s
+        self.decode_step_s = decode_step_s
+
+    def prefill_cost(self, n_tokens: int) -> float:
+        return n_tokens / self.prefill_tok_s
+
+    def decode_cost(self, batch: int) -> float:
+        return self.decode_step_s * (1.0 + 0.02 * batch)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpointing,
+elastic/straggler logic, gradient compression."""

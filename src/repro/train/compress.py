@@ -1,0 +1,39 @@
+"""Gradient compression: int8 error-feedback quantized all-reduce.
+
+Optional (off by default). Each leaf is quantized to int8 with a per-leaf
+fp32 scale before the reduce; the quantization error is carried in a
+residual buffer and added back next step (error feedback keeps convergence
+unbiased to first order). Saves ~4x gradient collective bytes when the
+interconnect term dominates (§Perf measures the delta on the dry-run)."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residuals) -> Tuple[Any, Any, Any]:
+    """-> (int8 grads, fp32 scales, new residuals)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    out = jax.tree.map(one, grads, residuals)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, r
+
+
+def decompress(q, scales) -> Any:
+    return jax.tree.map(lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales)

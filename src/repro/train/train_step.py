@@ -1,0 +1,58 @@
+"""Training step: loss -> grads -> AdamW, with optional microbatch
+(gradient-accumulation) scan. Params live in bf16; grads therefore
+materialize in bf16; the fp32 master copy (when enabled) lives in opt_state
+and is FSDP-sharded.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import loss_fn
+from .optim import adamw_update, global_norm
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    act_spec=None,
+    n_microbatches: int = 1,
+    lr: float = 3e-4,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def compute_grads(params, batch):
+        if n_microbatches == 1:
+            return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch, act_spec=act_spec))(params)
+
+        def slice_mb(x, i):
+            mb = x.shape[0] // n_microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def mb_step(carry, i):
+            acc_loss, acc_g = carry
+            mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb, act_spec=act_spec))(params)
+            acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc_g, g)
+            return (acc_loss + l, acc_g), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tot_l, tot_g), _ = jax.lax.scan(
+            mb_step, (jnp.zeros((), jnp.float32), zero_g), jnp.arange(n_microbatches)
+        )
+        inv = 1.0 / n_microbatches
+        return tot_l * inv, jax.tree.map(lambda g: g * inv, tot_g)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        new_params, new_opt = adamw_update(
+            params, grads, opt_state, kind=cfg.optimizer, lr=lr
+        )
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return new_params, new_opt, metrics
+
+    return train_step

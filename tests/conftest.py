@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+from repro.relational import tpch
+
+
+@pytest.fixture(scope="session")
+def db():
+    """Small TPC-H instance shared across the suite."""
+    return tpch.get_database(0.01, seed=7)
+
+
+@pytest.fixture(scope="session")
+def db_mid():
+    return tpch.get_database(0.02, seed=7)
+
+
+@pytest.fixture(autouse=True)
+def _clear_shard_hints():
+    """Sharding hints are process-global; never leak them between tests."""
+    yield
+    from repro.models.shardctx import clear_shard_hints
+
+    clear_shard_hints()

@@ -1,0 +1,83 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the ref.py oracles."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_keys,n_probe", [(100, 512), (5000, 2048), (20000, 4096)])
+@pytest.mark.parametrize("vis_density", [1.0, 0.5])
+def test_hash_probe_sweep(n_keys, n_probe, vis_density):
+    rng = np.random.default_rng(n_keys + n_probe)
+    keys = rng.choice(1 << 20, n_keys, replace=False).astype(np.int32)
+    vis = np.where(
+        rng.random(n_keys) < vis_density, 0xFFFFFFFF, 0
+    ).astype(np.uint32)
+    tk, tv, _ = ops.build_hash_table(keys, vis)
+    pk = np.concatenate(
+        [keys[: n_probe // 2], (rng.choice(1 << 20, n_probe - n_probe // 2) + (1 << 20)).astype(np.int32)]
+    )
+    qm = np.uint32(1)
+    got = np.asarray(ops.probe(pk, tk, tv, qm))
+    want = np.asarray(
+        ref.hash_probe_lens_ref(jnp.asarray(pk, jnp.int32), tk, tv, jnp.asarray([qm], jnp.uint32))
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,v,g", [(100, 1, 8), (3000, 8, 64), (10000, 4, 200)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_seg_aggregate_sweep(n, v, g, dtype):
+    rng = np.random.default_rng(n + v + g)
+    codes = rng.integers(0, g, n).astype(np.int32)
+    vals = rng.normal(size=(n, v)).astype(dtype)
+    got = np.asarray(ops.segmented_sum(codes, vals, g))
+    want = np.asarray(ref.seg_aggregate_ref(jnp.asarray(codes), jnp.asarray(vals), g))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bh,s,dh", [(1, 128, 64), (2, 256, 128), (3, 384, 64)])
+@pytest.mark.parametrize("window", [None, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(bh, s, dh, window, dtype):
+    rng = np.random.default_rng(bh * s + dh)
+    q = jnp.asarray(rng.normal(size=(bh, s, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, s, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, s, dh)), dtype)
+    got = np.asarray(ops.attention(q, k, v, window=window), np.float32)
+    want = np.asarray(ref.flash_attention_ref(q, k, v, window=window), np.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("b,s,d", [(1, 256, 128), (2, 512, 256), (3, 1024, 128)])
+def test_linrec_sweep(b, s, d):
+    rng = np.random.default_rng(b + s + d)
+    a = jnp.asarray(rng.uniform(0.7, 0.999, size=(b, s, d)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, d)) * 0.2, jnp.float32)
+    got = np.asarray(ops.linear_recurrence(a, bb))
+    want = np.asarray(ref.linrec_ref(a, bb))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_linrec_matches_rglru_semantics():
+    """The kernel computes the same recurrence the RG-LRU layer uses."""
+    import jax
+
+    from repro.models.recurrent import rg_lru
+
+    rng = np.random.default_rng(0)
+    p = {
+        "w_a": jnp.asarray(rng.normal(size=(128, 128)) * 0.05, jnp.float32),
+        "w_x": jnp.asarray(rng.normal(size=(128, 128)) * 0.05, jnp.float32),
+        "lam": jnp.asarray(rng.uniform(-4, -2, 128), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(2, 256, 128)) * 0.3, jnp.float32)
+    from repro.models.recurrent import _rg_lru_gates
+
+    a, b = _rg_lru_gates(p, x)
+    h_kernel = np.asarray(ops.linear_recurrence(a, b))
+    h_layer = np.asarray(rg_lru(p, x), np.float32)
+    np.testing.assert_allclose(h_kernel, h_layer, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,51 @@
+"""Launcher-level integration: train driver end-to-end (+restore), the
+real-model folded serving driver, and roofline bookkeeping."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import train as T
+from repro.launch.roofline import analyze_record, model_flops_per_device
+
+
+def test_train_driver_runs_and_restores(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    T.main(
+        ["--arch", "chatglm3-6b", "--smoke", "--steps", "6", "--batch", "4",
+         "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "3"]
+    )
+    # resume and continue
+    T.main(
+        ["--arch", "chatglm3-6b", "--smoke", "--steps", "9", "--batch", "4",
+         "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "3"]
+    )
+
+
+def test_serve_driver_folding_exactness(capsys):
+    from repro.launch import serve as S
+
+    S.main(["--requests", "3", "--prefix-len", "24", "--suffix-len", "4", "--decode", "3"])
+    out = capsys.readouterr().out
+    assert "outputs identical: True" in out
+
+
+def test_roofline_record_analysis():
+    rec = {
+        "arch": "stablelm-3b",
+        "shape": "train_4k",
+        "mesh": "16x16",
+        "hlo_stats": {
+            "flops_per_device": 1.0e14,
+            "mem_bytes_per_device": 8.19e12,
+            "coll_bytes_per_device": {"all-gather": 5e11},
+        },
+    }
+    r = analyze_record(rec)
+    assert r["dominant"] == "memory"
+    assert 0 < r["useful_ratio"] < 1.5
+    assert abs(r["memory_s"] - 10.0) < 0.1
+    # decode flops are per-token
+    d = model_flops_per_device("rwkv6-7b", "decode_32k", 256)
+    t = model_flops_per_device("rwkv6-7b", "train_4k", 256)
+    assert t / d > 1e4

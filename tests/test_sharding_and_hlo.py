@@ -1,0 +1,71 @@
+"""Sharding-rule structure tests (pure, single-device mesh) and the static
+HLO analyzer (trip-count-aware FLOPs/collectives)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, smoke_config, get_config
+from repro.launch import sharding as SH
+from repro.launch.hlo_analysis import analyze, parse_module, shape_bytes
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import model as M
+from repro.train.optim import abstract_opt_state
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_tree(arch):
+    cfg = get_config(arch)
+    ap = M.abstract_params(cfg, jnp.bfloat16)
+    mesh = make_smoke_mesh()
+    specs = SH.param_specs(cfg, mesh, ap)
+    flat_a = jax.tree.leaves(ap)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_a) == len(flat_s)
+    for a, s in zip(flat_a, flat_s):
+        assert len(s) <= a.ndim
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "dbrx-132b", "rwkv6-7b"])
+def test_opt_specs_mirror_params(arch):
+    cfg = get_config(arch)
+    ap = M.abstract_params(cfg, jnp.bfloat16)
+    mesh = make_smoke_mesh()
+    ps = SH.param_specs(cfg, mesh, ap)
+    ao = abstract_opt_state(ap, cfg.optimizer)
+    os_ = SH.opt_specs(cfg, mesh, ao, ps)
+    # every moment leaf has a spec; the 'step' scalar is replicated
+    flat = jax.tree.leaves(os_, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+
+
+def test_hlo_analyzer_counts_loop_trips():
+    """A scan of 7 matmuls must report ~7x one matmul's FLOPs."""
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+    txt = jax.jit(f).lower(w, x).compile().as_text()
+    st = analyze(txt)
+    expected = 7 * 2 * 8 * 64 * 64
+    assert 0.9 * expected <= st.flops <= 1.3 * expected, (st.flops, expected)
+
+
+def test_hlo_analyzer_shape_bytes():
+    assert shape_bytes("bf16[4,8]") == 64
+    assert shape_bytes("f32[2,2] , s32[3]") == 28
+    assert shape_bytes("(f32[2], pred[8])") == 16
+
+
+def test_hlo_analyzer_parses_entry():
+    txt = jax.jit(lambda x: x * 2.0).lower(jnp.ones((4,))).compile().as_text()
+    comps = parse_module(txt)
+    assert "__entry__" in comps

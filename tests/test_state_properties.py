@@ -1,0 +1,92 @@
+"""Hypothesis properties of shared hash-build state (§4.3): derivation
+dedup, visibility monotonicity, extent provenance, cost-model calibration."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.descriptors import StateSignature
+from repro.core.predicates import And, Cmp, Conjunction
+from repro.core.state import ALL_EXTENTS, SharedHashBuildState
+
+
+def _mk_state():
+    sig = StateSignature("hash_build", ("t", ("k",), ("x",)))
+    return SharedHashBuildState(1, sig, ("k",), ("x",), did_domain=1 << 20)
+
+
+@given(
+    batches=st.lists(
+        st.lists(st.integers(0, 50), min_size=1, max_size=30), min_size=1, max_size=5
+    ),
+    qbit=st.integers(0, 3),
+)
+@settings(max_examples=60, deadline=None)
+def test_insert_or_mark_dedups_by_derivation(batches, qbit):
+    """One physical entry per derivation id, regardless of re-delivery."""
+    s = _mk_state()
+    mask = s.slots.mask(qbit)  # per-state slot allocation for query `qbit`
+    seen = set()
+    for batch in batches:
+        dids = np.array(batch, np.int64)
+        s.insert_or_mark(
+            dids,
+            dids * 2,
+            {"k": dids.astype(np.float64), "x": dids.astype(np.float64)},
+            np.full(len(dids), mask, np.uint64),
+            np.zeros(len(dids), np.uint64),
+        )
+        seen |= set(batch)
+    assert s.n_entries == len(seen)
+    # every delivered derivation is visible to the query
+    idx = np.arange(s.n_entries)
+    assert s.visible_mask(qbit, idx).all()
+
+
+@given(
+    d1=st.integers(1, 40),
+    d2=st.integers(1, 40),
+)
+@settings(max_examples=40, deadline=None)
+def test_extent_grant_visibility_sound(d1, d2):
+    """A grant over extent (x < d2) sees exactly the entries satisfying it,
+    and only via provenance extents whose predicate implies the grant's
+    non-retained part (here retained — direct evaluation)."""
+    s = _mk_state()
+    conj = Conjunction.from_pred(Cmp("x", "<", d1))
+    eid = s.register_extent(conj)
+    rows = np.arange(0, d1, dtype=np.int64)
+    s.insert_or_mark(
+        rows,
+        rows,
+        {"k": rows.astype(np.float64), "x": rows.astype(np.float64)},
+        np.zeros(len(rows), np.uint64),
+        np.full(len(rows), np.uint64(1) << np.uint64(eid), np.uint64),
+    )
+    s.complete_extent(eid)
+    q = 7
+    grant_pred = Conjunction.from_pred(Cmp("x", "<", d2))
+    s.add_grant(q, ALL_EXTENTS, grant_pred)
+    vis = s.visible_mask(q, np.arange(s.n_entries))
+    expect = s.cols["x"].data < d2
+    np.testing.assert_array_equal(vis, expect)
+
+
+def test_coverage_from_completed_extents_only():
+    s = _mk_state()
+    c1 = Conjunction.from_pred(Cmp("x", "<", 10))
+    e1 = s.register_extent(c1)
+    assert not s.coverage().covers(c1)  # producer still pending
+    s.complete_extent(e1)
+    assert s.coverage().covers(c1)
+    assert s.covers_with(c1, np.uint64(1) << np.uint64(e1))
+
+
+def test_cost_model_calibration_positive():
+    from repro.core.costmodel import calibrate, scaled_default
+
+    cm = calibrate(n=1 << 16)
+    assert all(v > 0 for v in cm.values())
+    sd = scaled_default(100.0)
+    assert abs(sd["scan"] - 100e-9) < 1e-12
