@@ -15,8 +15,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import GraftEngine, Runner
-from repro.core.scheduler import WallClock, WorkClock
+import graftdb
+from graftdb import EngineConfig
 from repro.relational import queries, tpch
 
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
@@ -29,6 +29,14 @@ MORSEL = 16384
 
 def get_db(sf: float = DEFAULT_SF):
     return tpch.get_database(sf)
+
+
+def open_session(db, mode: str, wall: bool = False) -> graftdb.Session:
+    """One place where every benchmark obtains its engine: the Session API."""
+    return graftdb.connect(
+        db,
+        EngineConfig(mode=mode, morsel_size=MORSEL, clock="wall" if wall else "work"),
+    )
 
 
 def client_sequences(db, n_clients: int, n_per: int, seed: int, zipf_alpha: float = 1.0):
@@ -49,31 +57,29 @@ def client_sequences(db, n_clients: int, n_per: int, seed: int, zipf_alpha: floa
 def run_closed_loop(db, mode: str, seqs, wall: bool = False) -> Dict:
     """Closed loop: each client has one outstanding query; submits the next
     on completion (paper §6.3). Returns throughput/latency/counters."""
-    eng = GraftEngine(db, mode=mode, morsel_size=MORSEL)
-    runner = Runner(eng, clock=WallClock() if wall else WorkClock())
+    session = open_session(db, mode, wall=wall)
     idx = {c: 0 for c in range(len(seqs))}
     owner: Dict[int, int] = {}
-    arrivals = []
     for c, seq in enumerate(seqs):
         t, p = seq[0]
         q = queries.make_query(db, t, p, arrival=0.0)
         idx[c] = 1
         owner[q.qid] = c
-        arrivals.append(q)
+        session.submit(q)
 
-    def on_complete(h):
-        c = owner.pop(h.qid, None)
+    def on_complete(fut):
+        c = owner.pop(fut.qid, None)
         if c is None or idx[c] >= len(seqs[c]):
             return None
         t, p = seqs[c][idx[c]]
         idx[c] += 1
-        q = queries.make_query(db, t, p, arrival=runner.clock.now)
+        q = queries.make_query(db, t, p, arrival=session.now)
         owner[q.qid] = c
         return q
 
-    done = runner.run(arrivals, on_complete=on_complete)
-    elapsed = runner.clock.now
-    lats = np.array([h.t_complete - h.query.arrival for h in done])
+    done = session.run(on_complete=on_complete)
+    elapsed = session.now
+    lats = np.array([f.latency() for f in done])
     return {
         "mode": mode,
         "completed": len(done),
@@ -82,7 +88,7 @@ def run_closed_loop(db, mode: str, seqs, wall: bool = False) -> Dict:
         "median_latency_s": float(np.median(lats)),
         "p95_latency_s": float(np.percentile(lats, 95)),
         "latencies": lats.tolist(),
-        "counters": {k: float(v) for k, v in eng.counters.items()},
+        "counters": {k: float(v) for k, v in session.counters.items()},
     }
 
 
@@ -116,13 +122,10 @@ def run_open_loop(
     arrivals = [
         queries.sample_query(db, qrng, arrival=at) for at in trace
     ]
-    eng = GraftEngine(db, mode=mode, morsel_size=MORSEL)
-    runner = Runner(eng, clock=WorkClock())
-    done = runner.run(arrivals)
-    by_qid = {h.qid: h for h in done}
-    lats = np.array(
-        [by_qid[q.qid].t_complete - q.arrival for q in arrivals[measured_from:]]
-    )
+    session = open_session(db, mode)
+    futures = session.submit_all(arrivals)
+    session.run()
+    lats = np.array([f.latency() for f in futures[measured_from:]])
     return {
         "mode": mode,
         "offered_qph": offered_qph,

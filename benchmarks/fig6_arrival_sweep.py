@@ -13,12 +13,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GraftEngine, Runner
-from repro.core.scheduler import WallClock, WorkClock
 from repro.relational import queries
 from repro.relational.table import days
 
-from .common import MORSEL, emit, get_db, save
+from .common import emit, get_db, open_session, save
 
 SYSTEMS = ["isolated", "qpipe_osp", "graft"]
 
@@ -34,21 +32,20 @@ def _pair(db, offset: float):
 
 
 def _elapsed(db, mode: str, offset: float, wall: bool = False) -> float:
-    eng = GraftEngine(db, mode=mode, morsel_size=MORSEL)
-    runner = Runner(eng, clock=WallClock() if wall else WorkClock())
+    session = open_session(db, mode, wall=wall)
     qa, qb = _pair(db, offset)
-    done = runner.run([qa, qb])
-    return max(h.t_complete for h in done)
+    session.submit_all([qa, qb])
+    done = session.run()
+    return max(f.stats()["t_complete"] for f in done)
 
 
 def run(sf: float = 0.05):
     db = get_db(sf)
     # solo Q_A time defines the phase axis
-    eng = GraftEngine(db, mode="isolated", morsel_size=MORSEL)
-    runner = Runner(eng, clock=WorkClock())
+    session = open_session(db, "isolated")
     (qa, _) = _pair(db, 0.0)
-    runner.run([qa])
-    solo = runner.clock.now
+    session.submit(qa).result()
+    solo = session.now
 
     offsets = [round(f * solo, 4) for f in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0, 1.25, 1.5)]
     rows = [("fig6", "offset_s", *[f"{m}_elapsed_s" for m in SYSTEMS])]

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.serve.folding import FoldingScheduler, Request, SimExecutor
+import graftdb
+from repro.serve.folding import Request
 
 from .common import emit, save
 
@@ -40,8 +41,12 @@ def run():
     ]
     data = []
     for n_prompts in (1, 2, 4, 8, 16):
-        iso = FoldingScheduler(SimExecutor(), fold=False).run(_workload(n_prompts=n_prompts))
-        fold = FoldingScheduler(SimExecutor(), fold=True).run(_workload(n_prompts=n_prompts))
+        iso_s = graftdb.connect_serving(fold=False)
+        iso_s.submit_all(_workload(n_prompts=n_prompts))
+        iso = iso_s.run()
+        fold_s = graftdb.connect_serving(fold=True)
+        fold_s.submit_all(_workload(n_prompts=n_prompts))
+        fold = fold_s.run()
         i_tok = iso["prefill_tokens"].get("computed", 0)
         f_tok = fold["prefill_tokens"].get("computed", 0)
         for mode, r, tok in (("isolated", iso, i_tok), ("folding", fold, f_tok)):

@@ -1,18 +1,19 @@
 """Quickstart: dynamic folding of two TPC-H Q3 queries (the paper's Fig. 3
-running instance).
+running instance) through the unified Session API.
 
 Q_A arrives first and builds the order-side hash state; Q_B arrives
 mid-flight with a broader order-date predicate, observes the represented
 extent through its state lens, contributes the missing date band as
-residual production, and completes without rebuilding Q_A's work.
+residual production, and completes without rebuilding Q_A's work. The
+grafting decision is surfaced as structured data by EXPLAIN GRAFT.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import GraftEngine, Runner
-from repro.core.scheduler import WorkClock
+import graftdb
+from graftdb import EngineConfig
 from repro.relational import queries, refexec, tpch
 from repro.relational.table import days
 
@@ -25,31 +26,34 @@ def main():
     qb = queries.make_query(db, "q3", {"segment": 1.0, "date": float(days("1995-03-20"))}, arrival=0.02)
 
     for mode in ("isolated", "graft"):
-        eng = GraftEngine(db, mode=mode, morsel_size=16384)
-        runner = Runner(eng, clock=WorkClock())
-        done = {h.qid: h for h in runner.run([
+        session = graftdb.connect(db, EngineConfig(mode=mode, morsel_size=16384))
+        session.submit_all([
             queries.make_query(db, "q3", qa.params, 0.0),
             queries.make_query(db, "q3", qb.params, 0.02),
-        ])}
-        c = eng.counters
+        ])
+        session.run()
+        c = session.counters
         print(
-            f"\n[{mode}] both done at t={runner.clock.now:.3f}s | "
+            f"\n[{mode}] both done at t={session.now:.3f}s | "
             f"scan {c['scan_rows']:,.0f} rows | builds: ordinary {c['ordinary_build_rows']:,.0f}, "
             f"residual {c['residual_build_rows']:,.0f}, represented(observed) {c['represented_rows']:,.0f}"
         )
 
-    # verify against the reference executor
+    # rerun with explain capture and verify against the reference executor
     ref = refexec.execute(db, qb.plan)
-    eng = GraftEngine(db, mode="graft", morsel_size=16384)
-    runner = Runner(eng, clock=WorkClock())
-    done = {h.qid: h for h in runner.run([qa, qb])}
-    res = done[qb.qid].result
+    session = graftdb.connect(
+        db, EngineConfig(mode="graft", morsel_size=16384, capture_explain=True)
+    )
+    fa = session.submit(qa)
+    fb = session.submit(qb)
+    res = fb.result()  # drives the shared executor until Q_B completes
     ok = all(
         np.allclose(np.sort(np.asarray(res[k], float)), np.sort(np.asarray(ref[k], float)))
         for k in ref
     )
     print(f"\nQ_B result matches reference executor: {ok}")
     print("top revenue rows:", {k: np.round(v[:3], 2).tolist() for k, v in res.items()})
+    print("\n" + fb.explain().render())
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.serve.folding import FoldingScheduler, Request, SimExecutor
+import graftdb
+from repro.serve.folding import Request
 
 
 def workload(n=32, n_prompts=4, prefix=1024, suffix=64, seed=0):
@@ -32,7 +33,9 @@ def workload(n=32, n_prompts=4, prefix=1024, suffix=64, seed=0):
 
 def main():
     for fold in (False, True):
-        res = FoldingScheduler(SimExecutor(), fold=fold).run(workload())
+        session = graftdb.connect_serving(fold=fold)
+        futures = session.submit_all(workload())
+        res = session.run()
         mode = "folding " if fold else "isolated"
         tok = res["prefill_tokens"]
         print(
@@ -45,6 +48,12 @@ def main():
                 else ""
             )
         )
+        if fold:
+            r = futures[-1].result()
+            print(
+                f"  last request extents: represented {r['represented_tokens']}, "
+                f"residual {r['residual_tokens']}, ordinary {r['ordinary_tokens']}"
+            )
 
 
 if __name__ == "__main__":

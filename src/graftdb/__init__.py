@@ -1,0 +1,54 @@
+"""graftdb — dynamic folding of concurrent analytical queries.
+
+The one supported entry point to the reproduction:
+
+    import graftdb
+    from graftdb import EngineConfig
+
+    session = graftdb.connect(db, EngineConfig(mode="graft"))
+    fut = session.submit(query)
+    print(session.explain_graft(query).render())   # EXPLAIN GRAFT
+    result = fut.result()
+
+See README.md for the quickstart and DESIGN.md for the architecture notes.
+The implementation lives in ``repro.api``; ``repro.core`` is internal.
+"""
+
+from repro.api import (
+    BoundaryExplain,
+    EngineConfig,
+    ExecutionBackend,
+    GraftExplain,
+    PallasBackend,
+    QueryFuture,
+    ReferenceBackend,
+    RequestFuture,
+    ServingConfig,
+    ServingSession,
+    Session,
+    analyze_query,
+    connect,
+    connect_serving,
+    resolve_backend,
+)
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "connect",
+    "connect_serving",
+    "Session",
+    "ServingSession",
+    "EngineConfig",
+    "ServingConfig",
+    "QueryFuture",
+    "RequestFuture",
+    "GraftExplain",
+    "BoundaryExplain",
+    "analyze_query",
+    "ExecutionBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "resolve_backend",
+    "__version__",
+]

@@ -1,0 +1,6 @@
+"""repro: GraftDB paper reproduction (internal implementation package).
+
+The supported public surface is the ``graftdb`` package (``repro.api``
+re-exported); see README.md. This file exists so setuptools package
+discovery installs ``repro`` alongside ``graftdb``.
+"""

@@ -1,0 +1,36 @@
+"""GraftDB public API: one facade over engine, runner, backends, and folding.
+
+Entry points:
+
+* ``connect(db, config)`` — relational Session over a shared GraftEngine.
+* ``connect_serving(executor, config)`` — ServingSession over shared
+  KV-prefix states (the LM-serving adaptation on the same surface).
+
+Everything under ``repro.core`` / ``repro.serve`` is internal; this package
+(re-exported at top level as ``graftdb``) is the supported surface.
+"""
+
+from .backends import ExecutionBackend, PallasBackend, ReferenceBackend, resolve_backend
+from .config import EngineConfig, ServingConfig
+from .explain import BoundaryExplain, GraftExplain, analyze_query
+from .futures import QueryFuture, RequestFuture
+from .serving import ServingSession, connect_serving
+from .session import Session, connect
+
+__all__ = [
+    "connect",
+    "connect_serving",
+    "Session",
+    "ServingSession",
+    "EngineConfig",
+    "ServingConfig",
+    "QueryFuture",
+    "RequestFuture",
+    "GraftExplain",
+    "BoundaryExplain",
+    "analyze_query",
+    "ExecutionBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "resolve_backend",
+]

@@ -1,0 +1,248 @@
+"""ExecutionBackend: pluggable data-plane kernels behind one Session.
+
+The engine's two hot vectorized operations — hash-probe against a shared
+build state (§4.3) and segmented aggregation into shared accumulators
+(§4.5) — are routed through a per-session backend:
+
+* ``ReferenceBackend`` — the NumPy row engine (sort-based probe in
+  ``core.state``, ``np.bincount`` reductions). Always available; the
+  correctness oracle path (``relational/refexec.py`` semantics).
+* ``PallasBackend`` — the jax_pallas TPU kernels (``kernels/hash_probe.py``,
+  ``kernels/seg_aggregate.py``), run in interpret mode off-TPU. States that
+  the kernels cannot serve (multi-match keys, out-of-range keycodes,
+  over-long probe clusters) fall back to the reference path per-call,
+  mirroring the routing note in the kernel docstrings.
+
+Backends are deliberately stateless between sessions; the Pallas backend
+keeps only a per-state probe-table cache invalidated by entry count.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from ..core.state import SharedHashBuildState, _bincount_segment_sum
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Data-plane operations a Session's engine dispatches per morsel."""
+
+    name: str
+
+    def probe(
+        self, state: SharedHashBuildState, keycodes: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """All (probe_row_idx, entry_idx) match pairs, pre-visibility."""
+        ...
+
+    def segment_sum(
+        self, gids: np.ndarray, values: Optional[np.ndarray], n_groups: int
+    ) -> np.ndarray:
+        """Per-group sum of ``values`` (counts when values is None)."""
+        ...
+
+
+class ReferenceBackend:
+    """NumPy data plane — delegates to the state's own sort-based probe and
+    the core bincount reduction (the same code that runs with no backend)."""
+
+    name = "reference"
+
+    def probe(self, state, keycodes):
+        return state.probe(keycodes)
+
+    def segment_sum(self, gids, values, n_groups):
+        return _bincount_segment_sum(gids, values, n_groups)
+
+
+class _ProbeTable:
+    """Mutable open-addressing table mirror of one state's keycodes."""
+
+    __slots__ = ("n", "tkeys", "slot_entry", "jkeys", "jvis", "bad")
+
+    def __init__(self):
+        self.n = 0  # state entries inserted so far
+        self.tkeys: Optional[np.ndarray] = None  # int32 slots (EMPTY sentinel)
+        self.slot_entry: Optional[np.ndarray] = None  # slot -> entry index
+        self.jkeys = None  # device copy of tkeys, refreshed on growth
+        self.jvis = None  # constant all-visible lens words, sized to capacity
+        self.bad = False  # sticky: kernel cannot serve this state
+
+
+class PallasBackend:
+    """jax_pallas data plane (interpret mode off-TPU).
+
+    Unique-key states probe through the fused-lens Pallas kernel with the
+    lens mask disabled — per-member visibility is applied by the runtime
+    afterwards, exactly as on the reference path. Everything else falls
+    back to the reference probe. Segmented sums route through the one-hot
+    MXU kernel below ``max_kernel_groups`` groups when ``use_agg_kernel`` is
+    set; it accumulates in float32, so it is opt-in — the default keeps
+    aggregate accumulation in float64 to preserve exact oracle parity.
+    """
+
+    name = "pallas"
+
+    # Keycodes must fit int32 and stay clear of the kernel's EMPTY sentinel.
+    _KEY_LIMIT = 2**31 - 2
+
+    def __init__(
+        self,
+        interpret: bool = True,
+        max_kernel_groups: int = 4096,
+        use_agg_kernel: bool = False,
+    ):
+        import jax  # noqa: F401 — fail fast if jax is unavailable
+
+        from ..kernels.hash_probe import hash_probe_lens
+        from ..kernels.seg_aggregate import seg_aggregate
+
+        self._hash_probe_lens = hash_probe_lens
+        self._seg_aggregate = seg_aggregate
+        self.interpret = interpret
+        self.max_kernel_groups = max_kernel_groups
+        self.use_agg_kernel = use_agg_kernel
+        self._ref = ReferenceBackend()
+        # Probe tables keyed weakly by the state OBJECT (state_ids are
+        # engine-local, so an id key would collide when one backend instance
+        # is reused across sessions); released states evict automatically.
+        self._tables: "weakref.WeakKeyDictionary[SharedHashBuildState, _ProbeTable]" = (
+            weakref.WeakKeyDictionary()
+        )
+        self._qmask = None  # constant all-ones lens mask, built lazily
+        self.kernel_probes = 0
+        self.fallback_probes = 0
+
+    # -- probe ---------------------------------------------------------------
+    def probe(self, state, keycodes):
+        if state.keycode.n == 0 or len(keycodes) == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        table = self._table_for(state)
+        if (
+            table is None
+            or keycodes.min() < 0
+            or keycodes.max() > self._KEY_LIMIT
+        ):
+            self.fallback_probes += 1
+            return self._ref.probe(state, keycodes)
+        import jax.numpy as jnp
+
+        tkeys, tvis, slot_entry = table
+        if self._qmask is None:  # lens off: pure key match
+            self._qmask = jnp.asarray([0xFFFFFFFF], dtype=jnp.uint32)
+        found_slots = np.asarray(
+            self._hash_probe_lens(
+                jnp.asarray(keycodes, dtype=jnp.int32),
+                tkeys,
+                tvis,
+                self._qmask,
+                interpret=self.interpret,
+            )
+        )
+        self.kernel_probes += 1
+        probe_idx = np.flatnonzero(found_slots >= 0).astype(np.int64)
+        entry_idx = slot_entry[found_slots[probe_idx]]
+        return probe_idx, entry_idx
+
+    def _table_for(self, state) -> Optional[Tuple[object, object, np.ndarray]]:
+        """Open-addressing probe table over the state's SoA keycodes, cached
+        per state and grown incrementally: when the state gains entries,
+        only the new keys are inserted (full rebuild only when the table
+        must double), so aggregate build cost stays amortized O(n) instead
+        of O(n^2/morsel). Unservable states (duplicate keys, out-of-range
+        keycodes, over-long clusters) are marked bad once and fall back to
+        the reference probe forever."""
+        n = state.keycode.n
+        ent = self._tables.get(state)
+        if ent is None:
+            ent = _ProbeTable()
+            self._tables[state] = ent
+        if ent.bad:
+            return None
+        if ent.n < n:
+            self._insert_keys(ent, state.keycode.data, n)
+            if ent.bad:
+                return None
+        return ent.jkeys, ent.jvis, ent.slot_entry
+
+    def _insert_keys(self, ent: "_ProbeTable", keys, n: int) -> None:
+        """Insert keys[ent.n:n] into the table, rebuilding at a larger
+        capacity when the 50% load factor would be exceeded."""
+        from ..kernels.hash_probe import EMPTY, MAX_PROBE, MULT
+
+        new = keys[ent.n : n]
+        if len(new) and (new.min() < 0 or new.max() > self._KEY_LIMIT):
+            ent.bad = True
+            return
+        if ent.tkeys is None or 2 * n > len(ent.tkeys):
+            cap = 1
+            while cap < 2 * n:
+                cap *= 2
+            ent.tkeys = np.full(cap, EMPTY, dtype=np.int32)
+            ent.slot_entry = np.full(cap, -1, dtype=np.int64)
+            start = 0  # re-insert everything at the new capacity
+        else:
+            start = ent.n
+        tkeys, slot_entry = ent.tkeys, ent.slot_entry
+        mask = len(tkeys) - 1
+        seg = keys[start:n]
+        home = ((seg.astype(np.uint32) * np.uint32(MULT)).astype(np.int32)) & mask
+        for k, i in zip(seg.tolist(), range(start, n)):
+            p = int(home[i - start])
+            hops = 0
+            key32 = np.int32(k)
+            while tkeys[p] != EMPTY:
+                if tkeys[p] == key32:
+                    ent.bad = True  # duplicate key: multi-match state
+                    return
+                p = (p + 1) & mask
+                hops += 1
+                if hops >= MAX_PROBE:
+                    ent.bad = True  # cluster exceeds the kernel's bounded probe
+                    return
+            tkeys[p] = key32
+            slot_entry[p] = i
+        import jax.numpy as jnp
+
+        ent.n = n
+        ent.jkeys = jnp.asarray(tkeys)
+        if ent.jvis is None or ent.jvis.shape[0] != len(tkeys):
+            ent.jvis = jnp.ones(len(tkeys), dtype=jnp.uint32)
+
+    # -- segmented aggregation ------------------------------------------------
+    def segment_sum(self, gids, values, n_groups):
+        if n_groups == 0 or len(gids) == 0:
+            return np.zeros(n_groups, dtype=np.float64)
+        if not self.use_agg_kernel or n_groups > self.max_kernel_groups:
+            return self._ref.segment_sum(gids, values, n_groups)
+        import jax.numpy as jnp
+
+        vals = (
+            np.ones((len(gids), 1))
+            if values is None
+            else np.asarray(values, dtype=np.float64).reshape(-1, 1)
+        )
+        out = self._seg_aggregate(
+            jnp.asarray(gids, dtype=jnp.int32),
+            jnp.asarray(vals, dtype=jnp.float32),
+            n_groups,
+            interpret=self.interpret,
+        )
+        return np.asarray(out, dtype=np.float64)[:, 0]
+
+
+def resolve_backend(spec) -> ExecutionBackend:
+    """Accept a backend name or instance (EngineConfig.backend)."""
+    if isinstance(spec, str):
+        if spec == "reference":
+            return ReferenceBackend()
+        if spec == "pallas":
+            return PallasBackend()
+        raise ValueError(f"unknown backend {spec!r}")
+    if not isinstance(spec, ExecutionBackend):
+        raise TypeError(f"backend must implement ExecutionBackend, got {spec!r}")
+    return spec

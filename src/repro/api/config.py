@@ -1,0 +1,131 @@
+"""EngineConfig: one validated dataclass for every knob of a Session.
+
+Consolidates the kwargs that used to be hand-threaded through
+``GraftEngine(db, mode=..., morsel_size=..., cost_model=..., zone_maps=...)``
+plus ``Runner(eng, clock=...)`` into a single immutable config object that
+``graftdb.connect`` accepts. Invalid values fail at construction time with
+actionable messages, not deep inside the engine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Union
+
+from ..core.engine import DEFAULT_COST_MODEL, MODES
+from ..core.scheduler import WallClock, WorkClock
+
+CLOCKS = ("work", "wall")
+BACKENDS = ("reference", "pallas")
+RETENTION_POLICIES = ("refcount",)  # paper §6.1: release at zero references
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Configuration of one GraftDB session.
+
+    * ``mode`` — sharing level: one of ``isolated`` / ``scan_sharing`` /
+      ``qpipe_osp`` / ``residual`` / ``graft`` (paper §6.1/§6.4).
+    * ``morsel_size`` — rows per shared-scan morsel.
+    * ``cost_model`` — per-row modeled costs (seconds); defaults to the
+      calibrated single-worker constants in ``core.engine``.
+    * ``clock`` — ``"work"`` (virtual time, deterministic) or ``"wall"``
+      (real time); or a zero-arg clock factory (e.g. the ``WorkClock``
+      class), invoked per session; or a clock instance — which is then
+      SHARED by every session built from this config (advanced use).
+    * ``backend`` — ``"reference"`` (NumPy row engine) or ``"pallas"``
+      (vectorized jax_pallas probe/aggregate kernels), or an
+      ``ExecutionBackend`` instance.
+    * ``retention`` — shared-state retention policy; ``"refcount"`` is the
+      evaluated prototype's release-at-zero-refs policy.
+    * ``zone_maps`` — beyond-paper morsel skipping on min/max zones.
+    * ``capture_explain`` — record a structured grafting explanation
+      (``QueryFuture.explain()``) at each query's admission.
+    * ``max_steps`` — executor livelock bound.
+    """
+
+    mode: str = "graft"
+    morsel_size: int = 65536
+    cost_model: Optional[Dict[str, float]] = None
+    clock: Union[str, object] = "work"
+    backend: Union[str, object] = "reference"
+    retention: str = "refcount"
+    zone_maps: bool = False
+    capture_explain: bool = False
+    max_steps: int = 50_000_000
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; expected one of {sorted(MODES)}"
+            )
+        if not isinstance(self.morsel_size, int) or self.morsel_size <= 0:
+            raise ValueError(f"morsel_size must be a positive int, got {self.morsel_size!r}")
+        if isinstance(self.clock, str):
+            if self.clock not in CLOCKS:
+                raise ValueError(
+                    f"clock must be one of {CLOCKS}, a clock factory, or a clock "
+                    f"instance, got {self.clock!r}"
+                )
+        elif not isinstance(self.clock, type) and not callable(self.clock) and not hasattr(self.clock, "now"):
+            raise ValueError(
+                f"clock must expose .now/.tick/.advance_to (or be a factory), got {self.clock!r}"
+            )
+        if isinstance(self.backend, str) and self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS} or an ExecutionBackend instance, got {self.backend!r}"
+            )
+        if self.retention not in RETENTION_POLICIES:
+            raise ValueError(
+                f"retention must be one of {RETENTION_POLICIES}, got {self.retention!r}"
+            )
+        if self.cost_model is not None:
+            unknown = set(self.cost_model) - set(DEFAULT_COST_MODEL)
+            if unknown:
+                raise ValueError(f"unknown cost_model keys: {sorted(unknown)}")
+        if self.max_steps <= 0:
+            raise ValueError(f"max_steps must be positive, got {self.max_steps!r}")
+
+    # -- factories -----------------------------------------------------------
+    def make_clock(self):
+        if isinstance(self.clock, str):
+            return WallClock() if self.clock == "wall" else WorkClock()
+        # A class counts as a factory even when it defines `now` as a
+        # class-level property (hasattr(WallClock, "now") is True).
+        if isinstance(self.clock, type) or (
+            callable(self.clock) and not hasattr(self.clock, "now")
+        ):
+            return self.clock()  # factory/class: fresh clock per session
+        return self.clock  # explicit instance: shared across sessions
+
+    def make_backend(self):
+        from .backends import resolve_backend
+
+        return resolve_backend(self.backend)
+
+    def with_(self, **kw) -> "EngineConfig":
+        """Functional update (frozen dataclass)."""
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Configuration of one serving (KV-prefix folding) session.
+
+    * ``fold`` — enable dynamic folding (False = isolated baseline: every
+      request prefills its whole prompt).
+    * ``min_share`` — minimum shared-prefix length (tokens) worth attaching.
+    * ``prefill_tok_s`` / ``decode_step_s`` — SimExecutor cost model; ignored
+      when an explicit ``executor`` is passed to ``connect_serving``.
+    """
+
+    fold: bool = True
+    min_share: int = 16
+    prefill_tok_s: float = 8000.0
+    decode_step_s: float = 0.02
+
+    def __post_init__(self):
+        if self.min_share < 0:
+            raise ValueError(f"min_share must be >= 0, got {self.min_share!r}")
+        if self.prefill_tok_s <= 0 or self.decode_step_s <= 0:
+            raise ValueError("executor cost-model rates must be positive")

@@ -1,0 +1,300 @@
+"""EXPLAIN GRAFT: the grafting decision as structured data.
+
+``analyze_query(engine, query)`` mirrors the admission logic of
+``core/grafting.py`` (Algorithm 1) **read-only**: it walks the plan spine
+bottom-up, selects candidate shared states exactly as ``resolve_boundary``
+would, and partitions each stateful boundary's isolated-plan demand into
+
+* ``represented`` — rows already proven observable through a state lens,
+* ``residual``    — rows a residual producer would still deliver into the
+                    selected shared state,
+* ``unattached``  — ordinary-plan rows (fresh state + ordinary producer),
+
+without attaching, granting, or creating anything. Per boundary (and in
+total) ``represented + residual + unattached == demand`` by construction,
+so the report is an exact accounting of where the query's work would come
+from at this instant of the shared execution.
+
+``Session.explain_graft`` calls this pre-flight; with
+``EngineConfig(capture_explain=True)`` the same analysis is captured at each
+query's actual admission and exposed via ``QueryFuture.explain()``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from ..core.descriptors import aggregate_signature, hash_build_signature
+from ..core.grafting import all_boundaries, build_spine, estimate_demand, plan_spine
+from ..core.plans import HashJoin, Query
+from ..core.predicates import Conjunction
+from ..core.runtime import ALL_EXTENTS
+from ..core.plans import collect_subtree_pred
+
+
+@dataclass(frozen=True)
+class BoundaryExplain:
+    """One stateful hash-build boundary's attachment decision."""
+
+    build_table: str  # base table at the bottom of the build spine
+    depth: int  # 0 = innermost spine boundary; nested boundaries indent
+    decision: str  # 'represented' | 'partial' | 'residual' | 'ordinary' | 'eliminated'
+    demand_rows: int  # rows an isolated plan would feed this build
+    represented_rows: int
+    residual_rows: int
+    unattached_rows: int
+    state_id: Optional[int] = None  # selected shared state (None = fresh)
+    nested: Tuple["BoundaryExplain", ...] = ()
+
+    def flat(self) -> List["BoundaryExplain"]:
+        out = [self]
+        for b in self.nested:
+            out.extend(b.flat())
+        return out
+
+
+@dataclass(frozen=True)
+class GraftExplain:
+    """The full EXPLAIN GRAFT report for one query against one engine state."""
+
+    qid: int
+    template: str
+    mode: str
+    spine_scan: str  # probe-side base table of the main pipeline
+    agg_decision: str  # 'attach' (exact aggregate identity) | 'new'
+    boundaries: Tuple[BoundaryExplain, ...] = ()
+
+    # -- totals --------------------------------------------------------------
+    def _all(self) -> List[BoundaryExplain]:
+        out: List[BoundaryExplain] = []
+        for b in self.boundaries:
+            out.extend(b.flat())
+        return out
+
+    @property
+    def total_demand_rows(self) -> int:
+        return sum(b.demand_rows for b in self._all())
+
+    @property
+    def represented_rows(self) -> int:
+        return sum(b.represented_rows for b in self._all())
+
+    @property
+    def residual_rows(self) -> int:
+        return sum(b.residual_rows for b in self._all())
+
+    @property
+    def unattached_rows(self) -> int:
+        return sum(b.unattached_rows for b in self._all())
+
+    def to_dict(self) -> dict:
+        return {
+            "qid": self.qid,
+            "template": self.template,
+            "mode": self.mode,
+            "spine_scan": self.spine_scan,
+            "agg_decision": self.agg_decision,
+            "total_demand_rows": self.total_demand_rows,
+            "represented_rows": self.represented_rows,
+            "residual_rows": self.residual_rows,
+            "unattached_rows": self.unattached_rows,
+            "boundaries": [
+                {
+                    "build_table": b.build_table,
+                    "depth": b.depth,
+                    "decision": b.decision,
+                    "demand_rows": b.demand_rows,
+                    "represented_rows": b.represented_rows,
+                    "residual_rows": b.residual_rows,
+                    "unattached_rows": b.unattached_rows,
+                    "state_id": b.state_id,
+                }
+                for root in self.boundaries
+                for b in root.flat()
+            ],
+        }
+
+    def render(self) -> str:
+        """Human-readable EXPLAIN GRAFT block."""
+        lines = [
+            f"EXPLAIN GRAFT q{self.qid} [{self.template}] mode={self.mode}",
+            f"  spine scan: {self.spine_scan}  aggregate: {self.agg_decision}",
+            f"  demand {self.total_demand_rows:,} rows = represented {self.represented_rows:,}"
+            f" + residual {self.residual_rows:,} + unattached {self.unattached_rows:,}",
+        ]
+        for root in self.boundaries:
+            for b in root.flat():
+                pad = "    " + "  " * b.depth
+                tgt = f" -> state #{b.state_id}" if b.state_id is not None else " -> fresh state"
+                lines.append(
+                    f"{pad}build[{b.build_table}] {b.decision}{tgt}: "
+                    f"demand {b.demand_rows:,} (rep {b.represented_rows:,} / "
+                    f"res {b.residual_rows:,} / ord {b.unattached_rows:,})"
+                )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Read-only admission analysis
+# ---------------------------------------------------------------------------
+
+
+def analyze_query(engine, query: Query) -> GraftExplain:
+    """EXPLAIN GRAFT for ``query`` against the engine's current shared state.
+
+    Pure observation: never attaches, grants, registers extents, or creates
+    states — safe to call at any time, including pre-flight.
+    """
+    scan, joins, agg, _ = plan_spine(query.plan)
+    mode = engine.mode
+
+    # Exact aggregate identity (§4.5): the whole plan collapses onto an
+    # attachable shared aggregate — every boundary's demand is eliminated
+    # (fully represented by already-accumulated state).
+    agg_sig = aggregate_signature(agg)
+    if agg_sig is not None and mode.agg_share != "none":
+        existing = engine.agg_index.get(agg_sig)
+        if existing is not None and engine._agg_attachable(existing):
+            bounds = tuple(
+                _eliminated(engine, j, depth=0) for j in all_boundaries(query.plan)
+            )
+            return GraftExplain(
+                qid=query.qid,
+                template=query.template,
+                mode=mode.name,
+                spine_scan=scan.table,
+                agg_decision="attach",
+                boundaries=bounds,
+            )
+
+    bounds = tuple(_explain_boundary(engine, j, depth=0) for j in joins)
+    return GraftExplain(
+        qid=query.qid,
+        template=query.template,
+        mode=mode.name,
+        spine_scan=scan.table,
+        agg_decision="new",
+        boundaries=bounds,
+    )
+
+
+def _build_table(join: HashJoin) -> str:
+    bscan, _ = build_spine(join.build)
+    return bscan.table
+
+
+def _eliminated(engine, join: HashJoin, depth: int) -> BoundaryExplain:
+    demand = estimate_demand(engine, join.build)
+    return BoundaryExplain(
+        build_table=_build_table(join),
+        depth=depth,
+        decision="eliminated",
+        demand_rows=demand,
+        represented_rows=demand,
+        residual_rows=0,
+        unattached_rows=0,
+    )
+
+
+def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
+    """Mirror of ``grafting.resolve_boundary``'s decision ladder, read-only."""
+    mode = engine.mode
+    sig = hash_build_signature(join)
+    b_q = Conjunction.from_pred(collect_subtree_pred(join.build))
+    demand = estimate_demand(engine, join.build)
+    table = _build_table(join)
+
+    candidate = None
+    if mode.share_state:
+        for s in engine.state_index.get(sig, ()):
+            candidate = s
+            break
+
+    # Represented extent: proven containment against allowed coverage.
+    if candidate is not None and mode.allow_represented and b_q is not None:
+        retained = candidate.retained_attrs
+        b_ret = Conjunction({a: c for a, c in b_q.constraints.items() if a in retained})
+        b_nonret = Conjunction(
+            {a: c for a, c in b_q.constraints.items() if a not in retained}
+        )
+        allowed = (
+            ALL_EXTENTS
+            if not b_nonret.constraints
+            else candidate.allowed_extents_for(b_nonret)
+        )
+        if allowed:
+            if candidate.covers_with(b_q, allowed):
+                # Fully represented: upstream producers eliminated too.
+                nested = tuple(
+                    _eliminated(engine, up, depth + 1)
+                    for up in all_boundaries(join.build)
+                )
+                return BoundaryExplain(
+                    build_table=table,
+                    depth=depth,
+                    decision="represented",
+                    demand_rows=demand,
+                    represented_rows=demand,
+                    residual_rows=0,
+                    unattached_rows=0,
+                    state_id=candidate.state_id,
+                    nested=nested,
+                )
+            granted = min(candidate.count_granted(allowed, b_ret), demand)
+            nested = tuple(
+                _explain_boundary(engine, up, depth + 1)
+                for up in _build_joins(join)
+            )
+            return BoundaryExplain(
+                build_table=table,
+                depth=depth,
+                decision="partial",
+                demand_rows=demand,
+                represented_rows=granted,
+                residual_rows=demand - granted,
+                unattached_rows=0,
+                state_id=candidate.state_id,
+                nested=nested,
+            )
+
+    # Residual-only attachment: all demand flows through a residual producer.
+    if candidate is not None and mode.allow_residual:
+        nested = tuple(
+            _explain_boundary(engine, up, depth + 1) for up in _build_joins(join)
+        )
+        return BoundaryExplain(
+            build_table=table,
+            depth=depth,
+            decision="residual",
+            demand_rows=demand,
+            represented_rows=0,
+            residual_rows=demand,
+            unattached_rows=0,
+            state_id=candidate.state_id,
+            nested=nested,
+        )
+
+    # Ordinary-plan work (a fresh state; QPipe merges still execute the same
+    # physical producer, so their demand stays classified as unattached).
+    nested = tuple(
+        _explain_boundary(engine, up, depth + 1) for up in _build_joins(join)
+    )
+    return BoundaryExplain(
+        build_table=table,
+        depth=depth,
+        decision="ordinary",
+        demand_rows=demand,
+        represented_rows=0,
+        residual_rows=0,
+        unattached_rows=demand,
+        state_id=None,
+        nested=nested,
+    )
+
+
+def _build_joins(join: HashJoin) -> List[HashJoin]:
+    """Stateful boundaries nested inside this boundary's build subtree, in
+    the order the producer path resolves them (bottom-up along its spine)."""
+    _, inner = build_spine(join.build)
+    return inner

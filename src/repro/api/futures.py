@@ -1,0 +1,146 @@
+"""QueryFuture: the handle a Session returns for every submitted query.
+
+Replaces raw ``QueryHandle`` polling: consumers ask the future for the
+result (driving the session's executor if needed) instead of running the
+scheduler themselves and digging completed handles out of engine lists.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from ..core.plans import Query
+
+
+class QueryFuture:
+    """Completion handle for one submitted query.
+
+    * ``result()``  — the query's output columns; drives the session until
+      this query completes (or raises if the session cannot finish it).
+    * ``latency()`` — arrival -> completion seconds (session clock).
+    * ``stats()``   — per-query execution stats (members, rows sunk, states).
+    * ``explain()`` — the EXPLAIN GRAFT report captured at admission
+      (requires ``EngineConfig(capture_explain=True)``).
+    """
+
+    def __init__(self, session, query: Query):
+        self._session = session
+        self.query = query
+        self.qid = query.qid
+
+    # -- state ----------------------------------------------------------------
+    @property
+    def _handle(self):
+        return self._session._engine.handles.get(self.qid)
+
+    @property
+    def done(self) -> bool:
+        h = self._handle
+        return bool(h is not None and h.done)
+
+    # -- results --------------------------------------------------------------
+    def result(self, wait: bool = True) -> Dict[str, np.ndarray]:
+        if not self.done and wait:
+            self._session.run()
+        h = self._handle
+        if h is None or not h.done:
+            raise RuntimeError(
+                f"query q{self.qid} has not completed"
+                + ("" if wait else " (wait=False)")
+            )
+        return h.result
+
+    def latency(self) -> float:
+        h = self._handle
+        if h is None or not h.done:
+            raise RuntimeError(f"query q{self.qid} has not completed")
+        return h.t_complete - self.query.arrival
+
+    def stats(self) -> Dict[str, object]:
+        h = self._handle
+        if h is None:
+            return {"qid": self.qid, "template": self.query.template, "submitted": False}
+        kinds: Dict[str, int] = {}
+        rows_sunk = 0
+        for m in h.members:
+            kinds[m.kind] = kinds.get(m.kind, 0) + 1
+            rows_sunk += m.rows_sunk
+        return {
+            "qid": self.qid,
+            "template": self.query.template,
+            "submitted": True,
+            "done": h.done,
+            "t_submit": h.t_submit,
+            "t_complete": h.t_complete,
+            "latency_s": (h.t_complete - self.query.arrival) if h.done else None,
+            "members": kinds,
+            "rows_sunk": rows_sunk,
+            "attached_state_ids": [s.state_id for s in h.attached_states],
+        }
+
+    def explain(self):
+        """EXPLAIN GRAFT captured at this query's admission."""
+        exp = self._session._explains.get(self.qid)
+        if exp is None:
+            raise RuntimeError(
+                "no explain captured for this query — connect with "
+                "EngineConfig(capture_explain=True), or use "
+                "Session.explain_graft(query) pre-flight"
+            )
+        return exp
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else "pending"
+        return f"<QueryFuture q{self.qid} [{self.query.template}] {state}>"
+
+
+class RequestFuture:
+    """Completion handle for one serving request (KV-prefix folding).
+
+    The serving analogue of QueryFuture on the shared Session surface:
+    ``result()`` drives the serving session's event loop if needed and
+    returns the request's timing/extent record.
+    """
+
+    def __init__(self, session, request):
+        self._session = session
+        self.request = request
+        self.rid = request.rid
+
+    @property
+    def done(self) -> bool:
+        return self.request.t_complete is not None
+
+    def result(self, wait: bool = True) -> Dict[str, float]:
+        if not self.done and wait:
+            self._session.run()
+        if not self.done:
+            raise RuntimeError(f"request r{self.rid} has not completed")
+        r = self.request
+        return {
+            "rid": r.rid,
+            "t_first_token": r.t_first_token,
+            "t_complete": r.t_complete,
+            "latency_s": r.t_complete - r.arrival,
+            "represented_tokens": r.represented_tokens,
+            "residual_tokens": r.residual_tokens,
+            "ordinary_tokens": r.ordinary_tokens,
+        }
+
+    def latency(self) -> float:
+        if not self.done:
+            raise RuntimeError(f"request r{self.rid} has not completed")
+        return self.request.t_complete - self.request.arrival
+
+    def explain(self) -> Dict[str, int]:
+        """Extent partition of this request's prompt, captured at admission."""
+        exp = self._session._explains.get(self.rid)
+        if exp is None:
+            raise RuntimeError(f"request r{self.rid} has not been admitted yet")
+        return exp
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else "pending"
+        return f"<RequestFuture r{self.rid} {state}>"

@@ -1,0 +1,187 @@
+"""Session: the one supported entry point to a GraftDB engine.
+
+``graftdb.connect(db, config=EngineConfig(...))`` assembles the engine,
+executor, clock, and data-plane backend behind a single facade. Queries are
+submitted through the session and observed through ``QueryFuture`` handles;
+the grafting decision is surfaced as structured data via
+``Session.explain_graft`` (EXPLAIN GRAFT) instead of being buried in engine
+internals. ``core/`` remains importable but is internal — call sites should
+never hand-assemble ``GraftEngine`` + ``Runner`` pairs.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional
+
+from ..core.engine import GraftEngine
+from ..core.plans import Query
+from ..core.scheduler import Runner
+from ..relational.table import Database
+from .config import EngineConfig
+from .explain import GraftExplain, analyze_query
+from .futures import QueryFuture
+
+
+class Session:
+    """One shared multi-query execution over one database.
+
+    Lifecycle: ``submit()`` admits queries (grafting happens at admission —
+    a query whose arrival time is in the future is queued and admitted when
+    the clock reaches it), ``run()`` drives the shared executor until all
+    admitted and queued work completes, futures expose per-query results.
+    """
+
+    def __init__(self, db: Database, config: Optional[EngineConfig] = None):
+        self.config = config or EngineConfig()
+        self.db = db
+        self.backend = self.config.make_backend()
+        self._engine = GraftEngine(
+            db,
+            mode=self.config.mode,
+            morsel_size=self.config.morsel_size,
+            cost_model=self.config.cost_model,
+            zone_maps=self.config.zone_maps,
+            backend=self.backend,
+        )
+        self._runner = Runner(self._engine, clock=self.config.make_clock())
+        if self.config.capture_explain:
+            self._runner.submit_hook = self._capture_explain
+        self._futures: Dict[int, QueryFuture] = {}
+        self._explains: Dict[int, GraftExplain] = {}
+        self._reported: set = set()  # qids already returned by run()
+        self._closed = False
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, query: Query) -> QueryFuture:
+        """Admit (or schedule) one query; returns its future.
+
+        Queries with ``arrival <= now`` are grafted onto the shared
+        execution immediately; later arrivals are admitted by ``run()``
+        when the clock reaches them.
+        """
+        self._check_open()
+        if query.qid in self._futures:
+            raise ValueError(
+                f"duplicate query id q{query.qid}: build a fresh Query per submission"
+            )
+        fut = QueryFuture(self, query)
+        self._futures[query.qid] = fut
+        if query.arrival <= self.clock.now:
+            self._runner.submit_now(query)
+        else:
+            self._runner.add_arrival(query)
+        return fut
+
+    def submit_all(self, queries: Iterable[Query]) -> List[QueryFuture]:
+        return [self.submit(q) for q in queries]
+
+    def _capture_explain(self, query: Query) -> None:
+        self._explains[query.qid] = analyze_query(self._engine, query)
+
+    # -- execution -----------------------------------------------------------
+    def run(
+        self,
+        on_complete: Optional[Callable[[QueryFuture], Optional[Query]]] = None,
+    ) -> List[QueryFuture]:
+        """Drive the shared executor until all submitted work completes.
+
+        Returns futures for the queries that completed during *this* call
+        (a reused session does not re-report earlier rounds).
+
+        ``on_complete(future) -> Optional[Query]`` implements closed-loop
+        clients: a returned query is submitted with arrival = its own
+        ``arrival`` field (typically the completion time).
+        """
+        self._check_open()
+        cb = None
+        if on_complete is not None:
+
+            def cb(handle):
+                fut = self._future_for_qid(handle.qid)
+                return on_complete(fut)
+
+        self._runner.run((), on_complete=cb, max_steps=self.config.max_steps)
+        fresh = [h for h in self._engine.completed if h.qid not in self._reported]
+        self._reported.update(h.qid for h in fresh)
+        return [self._future_for_qid(h.qid) for h in fresh]
+
+    drain = run  # alias: drain all outstanding work
+
+    def _future_for_qid(self, qid: int) -> QueryFuture:
+        fut = self._futures.get(qid)
+        if fut is None:
+            # closed-loop queries submitted by the engine callback path
+            handle = self._engine.handles[qid]
+            fut = QueryFuture(self, handle.query)
+            self._futures[qid] = fut
+        return fut
+
+    # -- EXPLAIN GRAFT -------------------------------------------------------
+    def explain_graft(self, query: Query) -> GraftExplain:
+        """Pre-flight EXPLAIN GRAFT: how this query would attach to the
+        engine's *current* shared state. Read-only; does not admit."""
+        self._check_open()
+        return analyze_query(self._engine, query)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def clock(self):
+        return self._runner.clock
+
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
+    @property
+    def mode(self) -> str:
+        return self._engine.mode.name
+
+    @property
+    def counters(self) -> Dict[str, float]:
+        return self._engine.counters
+
+    @property
+    def engine(self) -> GraftEngine:
+        """The underlying engine — internal surface, exposed for mechanism
+        tests and diagnostics only."""
+        return self._engine
+
+    def stats(self) -> Dict[str, float]:
+        out = self._engine.stats()
+        out["now_s"] = self.now
+        out["mode"] = self.mode
+        out["backend"] = self.backend.name
+        return out
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        self._closed = True
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("session is closed")
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (
+            f"<Session mode={self.mode} backend={self.backend.name} "
+            f"now={self.now:.4f}s active={len(self._engine.active_handles)}>"
+        )
+
+
+def connect(db: Database, config: Optional[EngineConfig] = None, **kw) -> Session:
+    """Open a GraftDB session: ``graftdb.connect(db, EngineConfig(mode="graft"))``.
+
+    Keyword arguments are accepted as EngineConfig field shortcuts when no
+    config object is given: ``graftdb.connect(db, mode="isolated")``.
+    """
+    if config is not None and kw:
+        raise TypeError("pass either a config object or field kwargs, not both")
+    if config is None:
+        config = EngineConfig(**kw)
+    return Session(db, config)

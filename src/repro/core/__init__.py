@@ -3,6 +3,12 @@
 The paper's contribution — state-centric execution, per-query state lenses,
 and query grafting — implemented as a composable engine over a columnar
 vectorized data plane (see DESIGN.md for the TPU adaptation notes).
+
+INTERNAL LAYER. The supported public surface is the ``graftdb`` package
+(``repro.api``): ``graftdb.connect(db, EngineConfig(...))`` returns a
+Session; do not hand-assemble ``GraftEngine`` + ``Runner`` pairs outside
+``repro.api`` and ``repro.core`` themselves. These exports remain importable
+for mechanism-level tests and diagnostics only.
 """
 
 from .engine import MODES, GraftEngine, QueryHandle

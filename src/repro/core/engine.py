@@ -110,12 +110,16 @@ class GraftEngine:
         morsel_size: int = 65536,
         cost_model: Optional[Dict[str, float]] = None,
         zone_maps: bool = False,
+        backend=None,
     ):
         self.db = db
         self.mode = MODES[mode]
         self.morsel_size = morsel_size
         self.cost_model = dict(cost_model or DEFAULT_COST_MODEL)
         self.zone_maps = zone_maps  # beyond-paper morsel skipping (§Perf)
+        # Data-plane backend (api/backends.py ExecutionBackend); None keeps
+        # the built-in NumPy paths (state.probe / np.bincount reductions).
+        self.backend = backend
 
         self.scans: Dict[object, ScanNode] = {}
         self.pipelines: Dict[object, Pipeline] = {}
@@ -309,6 +313,7 @@ class GraftEngine:
     def stats(self) -> Dict[str, float]:
         out = dict(self.counters)
         out["live_states"] = sum(len(v) for v in self.state_index.values())
+        out["live_agg_states"] = len(self.agg_index)
         return out
 
 

@@ -265,11 +265,15 @@ class Pipeline:
 
         # hash-probe ops (§4.3: one physical probe step serves all queries
         # whose visibility check succeeds)
+        backend = engine.backend
         for stage, op in enumerate(self.ops):
             if len(did) == 0:
                 break
             keycodes = encode_keys(cols, op.probe_attrs)
-            probe_idx, entry_idx = op.state.probe(keycodes)
+            if backend is not None:
+                probe_idx, entry_idx = backend.probe(op.state, keycodes)
+            else:
+                probe_idx, entry_idx = op.state.probe(keycodes)
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
             engine.counters["probe_rows"] += len(keycodes)
             bits_in = bits[probe_idx]
@@ -349,7 +353,12 @@ class Pipeline:
                     else None
                     for v in vals
                 ]
-                sink.agg_state.update(key_cols, vals, nsel)
+                sink.agg_state.update(
+                    key_cols,
+                    vals,
+                    nsel,
+                    segment_sum=backend.segment_sum if backend is not None else None,
+                )
                 m.rows_sunk += nsel
                 cost += cm["agg"] * nsel
                 engine.counters["agg_rows"] += nsel

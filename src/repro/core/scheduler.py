@@ -132,10 +132,19 @@ class Runner:
         self._rr = 0
         self._seq = 0
         self._heap: List[Tuple[float, int, Query]] = []
+        # Called with the query right before each admission (the Session
+        # facade captures EXPLAIN GRAFT snapshots through this).
+        self.submit_hook: Optional[Callable[[Query], None]] = None
 
     def add_arrival(self, query: Query) -> None:
         self._seq += 1
         heapq.heappush(self._heap, (query.arrival, self._seq, query))
+
+    def submit_now(self, query: Query) -> QueryHandle:
+        """Admit one query immediately (query grafting happens here)."""
+        if self.submit_hook is not None:
+            self.submit_hook(query)
+        return self.engine.submit(query)
 
     def run(
         self,
@@ -154,7 +163,7 @@ class Runner:
             # admit due arrivals (query grafting happens at submit)
             while self._heap and self._heap[0][0] <= self.clock.now:
                 _, _, q = heapq.heappop(self._heap)
-                engine.submit(q)
+                self.submit_now(q)
                 self._after_events(on_complete)
             frags = extract_ready_fragments(engine)
             if not frags:
@@ -199,6 +208,6 @@ class Runner:
                     # admit immediately if due (closed loop)
                     while self._heap and self._heap[0][0] <= self.clock.now:
                         _, _, q = heapq.heappop(self._heap)
-                        engine.submit(q)
+                        self.submit_now(q)
             engine.check_activations()
             done += engine.sweep_completions()

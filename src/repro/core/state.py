@@ -44,6 +44,12 @@ from .visibility import SlotAllocator, bit_of
 
 ALL_EXTENTS = np.uint64(0xFFFFFFFFFFFFFFFF)
 
+
+def _bincount_segment_sum(gids, values, n_groups):
+    if values is None:
+        return np.bincount(gids, minlength=n_groups).astype(np.float64)
+    return np.bincount(gids, weights=values, minlength=n_groups)
+
 # ---------------------------------------------------------------------------
 
 
@@ -366,14 +372,26 @@ class SharedAggregateState:
             gids[i] = g
         return gids[np.asarray(inv).ravel()]
 
-    def update(self, key_cols: List[np.ndarray], agg_values: List[Optional[np.ndarray]], n: int) -> None:
-        """Fold one morsel of rows into the accumulators (segment reduce)."""
+    def update(
+        self,
+        key_cols: List[np.ndarray],
+        agg_values: List[Optional[np.ndarray]],
+        n: int,
+        segment_sum=None,
+    ) -> None:
+        """Fold one morsel of rows into the accumulators (segment reduce).
+
+        ``segment_sum(gids, values_or_None, n_groups)`` lets an execution
+        backend (api/backends.py) supply the grouped reduction — e.g. the
+        Pallas one-hot MXU kernel; defaults to ``np.bincount``."""
         if n == 0:
             return
         gids = self._group_ids(key_cols, n)
         ngroups = len(self._gid_of)
         self.rows_consumed += n
-        cnt = np.bincount(gids, minlength=ngroups).astype(np.float64)
+        if segment_sum is None:
+            segment_sum = _bincount_segment_sum
+        cnt = segment_sum(gids, None, ngroups)
         self._counts.data[:] += cnt
         for j, (acc, spec) in enumerate(zip(self._acc, self.aggs)):
             vals = agg_values[j]
@@ -389,7 +407,7 @@ class SharedAggregateState:
             elif spec.func == "count":
                 acc.data[:] += cnt
             elif spec.func in ("sum", "avg"):
-                acc.data[:] += np.bincount(gids, weights=vals, minlength=ngroups)
+                acc.data[:] += segment_sum(gids, vals, ngroups)
             elif spec.func == "min":
                 np.minimum.at(acc.data, gids, vals)
             elif spec.func == "max":

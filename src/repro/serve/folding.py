@@ -44,13 +44,14 @@ class Request:
 
 class PrefixState:
     """A shared KV-prefix state. ``covered`` is the coverage metadata: the
-    producer (a running prefill) has materialized cache for [0, covered)."""
+    producer (a running prefill) has materialized cache for [0, covered).
 
-    _next = 0
+    State ids are scheduler-scoped (allocated by the owning
+    FoldingScheduler), so repeated scheduler constructions are isolated —
+    ids never leak across instances."""
 
-    def __init__(self, tokens: Tuple[int, ...]):
-        PrefixState._next += 1
-        self.sid = PrefixState._next
+    def __init__(self, sid: int, tokens: Tuple[int, ...]):
+        self.sid = sid
         self.tokens = tokens
         self.covered = 0
         self.refs: set = set()
@@ -83,47 +84,75 @@ class FoldingScheduler:
         self.min_share = min_share
         self.states: List[PrefixState] = []
         self.metrics = {"represented": 0, "residual": 0, "ordinary": 0}
+        self._next_sid = 0  # scheduler-scoped state ids (no cross-instance leaks)
+        # Admission hook for the Session facade (api/serving.py): called as
+        # on_admit(req, attachment) right after each request is admitted.
+        self.on_admit: Optional[object] = None
+
+    def _new_state(self, tokens: Tuple[int, ...]) -> PrefixState:
+        self._next_sid += 1
+        return PrefixState(self._next_sid, tokens)
 
     # -- query grafting (admission) ----------------------------------------
-    def admit(self, req: Request) -> Dict:
-        """Partition the request's prompt into represented / residual /
-        unattached extents against the best compatible live prefix state."""
+    def preview(self, prompt: Tuple[int, ...]) -> Dict:
+        """Read-only admission preview: how ``prompt`` would partition
+        against the current live prefix states. Mutates nothing — the
+        single source of truth for both ``admit`` and the Session facade's
+        ``explain_fold``."""
         best, best_m = None, 0
         if self.fold:
             for st in self.states:
-                m = _match_len(st.tokens, req.prompt)
+                m = _match_len(st.tokens, prompt)
                 if m > best_m:
                     best, best_m = st, m
         if best is None or best_m < self.min_share:
-            st = PrefixState(req.prompt)
-            st.refs.add(req.rid)
-            self.states.append(st)
-            req.ordinary_tokens = len(req.prompt)
-            self.metrics["ordinary"] += req.ordinary_tokens
             return {
-                "state": st,
-                "matched": len(req.prompt),
+                "state": None,  # admission would create a fresh state
+                "matched": 0,
                 "represented": 0,
                 "residual": 0,
-                "suffix": 0,
+                "suffix": len(prompt),
+                "created": True,
             }
-        best.refs.add(req.rid)
         represented = min(best.covered, best_m)
-        residual = best_m - represented  # gate: produced by the running producer
-        suffix = len(req.prompt) - best_m
-        req.represented_tokens = represented
-        req.residual_tokens = residual
-        req.ordinary_tokens = suffix
-        self.metrics["represented"] += represented
-        self.metrics["residual"] += residual
-        self.metrics["ordinary"] += suffix
         return {
             "state": best,
             "matched": best_m,
             "represented": represented,
-            "residual": residual,
-            "suffix": suffix,
+            "residual": best_m - represented,  # gate: running producer delivers
+            "suffix": len(prompt) - best_m,
+            "created": False,
         }
+
+    def admit(self, req: Request) -> Dict:
+        """Partition the request's prompt into represented / residual /
+        unattached extents against the best compatible live prefix state."""
+        att = self._admit(req)
+        if self.on_admit is not None:
+            self.on_admit(req, att)
+        return att
+
+    def _admit(self, req: Request) -> Dict:
+        att = self.preview(req.prompt)
+        if att["created"]:
+            st = self._new_state(req.prompt)
+            st.refs.add(req.rid)
+            self.states.append(st)
+            req.ordinary_tokens = len(req.prompt)
+            self.metrics["ordinary"] += req.ordinary_tokens
+            # matched = whole prompt: the created state covers it once this
+            # request's own prefill completes (run() advances st.covered by
+            # it); "created" lets observers tell this from a full match.
+            return {**att, "state": st, "matched": len(req.prompt), "suffix": 0}
+        st: PrefixState = att["state"]
+        st.refs.add(req.rid)
+        req.represented_tokens = att["represented"]
+        req.residual_tokens = att["residual"]
+        req.ordinary_tokens = att["suffix"]
+        self.metrics["represented"] += att["represented"]
+        self.metrics["residual"] += att["residual"]
+        self.metrics["ordinary"] += att["suffix"]
+        return att
 
     def release(self, req: Request) -> None:
         for st in self.states:

@@ -1,0 +1,138 @@
+"""Import hypothesis, or fall back to a deterministic miniature shim.
+
+The real dependency is declared in pyproject.toml (``pip install -e
+.[test]`` / CI), but the tier-1 suite must also run in environments where
+it cannot be installed. The shim reproduces the subset this suite uses —
+``@given`` with positional/keyword strategies over ``integers`` /
+``floats`` / ``sampled_from`` / ``lists`` / ``composite``, plus
+``@settings(max_examples, deadline)`` — by enumerating seeded deterministic
+examples: the first two examples pin scalar strategies at their bounds, the
+rest sample from a fixed-seed RNG. No shrinking, no database — just a
+deterministic property sweep.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def draw(self, rng):  # pragma: no cover - abstract
+            raise NotImplementedError
+
+        def boundary(self, which):
+            """Value for the lo/hi pinned example, or None to sample."""
+            return None
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+        def boundary(self, which):
+            return self.lo if which == 0 else self.hi
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+        def boundary(self, which):
+            return self.lo if which == 0 else self.hi
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elems):
+            self.elems = list(elems)
+
+        def draw(self, rng):
+            return self.elems[int(rng.integers(0, len(self.elems)))]
+
+        def boundary(self, which):
+            return self.elems[0] if which == 0 else self.elems[-1]
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+        def draw(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elem.draw(rng) for _ in range(n)]
+
+    class _Composite(_Strategy):
+        def __init__(self, fn, args, kwargs):
+            self.fn, self.args, self.kwargs = fn, args, kwargs
+
+        def draw(self, rng):
+            return self.fn(lambda s: s.draw(rng), *self.args, **self.kwargs)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elems):
+            return _SampledFrom(elems)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Lists(elem, min_size=min_size, max_size=max_size)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                return _Composite(fn, args, kwargs)
+
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            n_examples = getattr(fn, "_max_examples", 10)
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            strategies = dict(zip(names, pos_strategies))
+            strategies.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0xC0FFEE)
+                for idx in range(n_examples):
+                    drawn = {}
+                    for name, strat in strategies.items():
+                        val = strat.boundary(idx) if idx in (0, 1) else None
+                        drawn[name] = strat.draw(rng) if val is None else val
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the generated params from pytest's fixture resolution
+            kept = [p for p in sig.parameters.values() if p.name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return deco

@@ -4,11 +4,10 @@ folding with randomized arrivals (the core semantics guarantee of §5.4)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core import GraftEngine, Runner
-from repro.core.scheduler import WorkClock
+import graftdb
+from graftdb import EngineConfig
 from repro.relational import queries, refexec
 from repro.relational.table import days
 
@@ -16,21 +15,20 @@ MODES = ["isolated", "scan_sharing", "qpipe_osp", "residual", "graft"]
 
 
 def _check(db, qs, mode, morsel=8192):
-    eng = GraftEngine(db, mode=mode, morsel_size=morsel)
-    runner = Runner(eng, clock=WorkClock())
-    done = runner.run(qs)
+    session = graftdb.connect(db, EngineConfig(mode=mode, morsel_size=morsel))
+    futures = session.submit_all(qs)
+    done = session.run()
     assert len(done) == len(qs)
-    by_qid = {h.qid: h for h in done}
-    for q in qs:
+    for q, fut in zip(qs, futures):
         ref = refexec.execute(db, q.plan)
-        res = by_qid[q.qid].result
+        res = fut.result()
         assert set(res) == set(ref), (q.template, set(res) ^ set(ref))
         for k in ref:
             a = np.sort(np.asarray(res[k], dtype=float))
             b = np.sort(np.asarray(ref[k], dtype=float))
             assert a.shape == b.shape, (q.template, k, a.shape, b.shape)
             np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-6, err_msg=f"{q.template}/{k}/{mode}")
-    return eng
+    return session.engine
 
 
 @pytest.mark.parametrize("mode", MODES)
@@ -69,11 +67,11 @@ def test_q3_fold_property(db, dateA, dateB, segB, offset_frac):
     )
     ra = refexec.execute(db, qa.plan)
     rb = refexec.execute(db, qb.plan)
-    eng = GraftEngine(db, mode="graft", morsel_size=4096)
-    runner = Runner(eng, clock=WorkClock())
-    done = {h.qid: h for h in runner.run([qa, qb])}
-    for q, ref in ((qa, ra), (qb, rb)):
-        res = done[q.qid].result
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    fa, fb = session.submit_all([qa, qb])
+    session.run()
+    for fut, ref in ((fa, ra), (fb, rb)):
+        res = fut.result()
         for k in ref:
             np.testing.assert_allclose(
                 np.sort(np.asarray(res[k], float)),
@@ -101,9 +99,10 @@ def test_counters_consistent(db):
 def test_retention_releases_states(db):
     rng = np.random.default_rng(6)
     qs = [queries.sample_query(db, rng, arrival=0.0) for _ in range(4)]
-    eng = GraftEngine(db, mode="graft", morsel_size=8192)
-    runner = Runner(eng, clock=WorkClock())
-    runner.run(qs)
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=8192))
+    session.submit_all(qs)
+    session.run()
     # after all queries complete, no live states remain in the index
-    assert sum(len(v) for v in eng.state_index.values()) == 0
-    assert len(eng.agg_index) == 0
+    stats = session.stats()
+    assert stats["live_states"] == 0
+    assert stats["live_agg_states"] == 0

@@ -3,9 +3,10 @@ aggregate identity, QPipe-OSP window, and Algorithm-2 invariants."""
 
 import numpy as np
 
-from repro.core import GraftEngine, Runner
+import graftdb
+from graftdb import EngineConfig
 from repro.core.dag import check_invariants, snapshot
-from repro.core.scheduler import WorkClock, extract_ready_fragments
+from repro.core.scheduler import extract_ready_fragments
 from repro.relational import queries
 from repro.relational.table import days
 
@@ -15,8 +16,8 @@ def _q3(db, date, seg=1.0, arrival=0.0):
 
 
 def _run(db, qs, mode, morsel=4096, invariant_checks=False):
-    eng = GraftEngine(db, mode=mode, morsel_size=morsel)
-    runner = Runner(eng, clock=WorkClock())
+    session = graftdb.connect(db, EngineConfig(mode=mode, morsel_size=morsel))
+    eng = session.engine  # mechanism tests observe the internal layer
     if invariant_checks:
         orig = eng.check_activations
 
@@ -26,7 +27,8 @@ def _run(db, qs, mode, morsel=4096, invariant_checks=False):
             assert not errs, errs
 
         eng.check_activations = checked
-    done = runner.run(qs)
+    session.submit_all(qs)
+    done = session.run()
     return eng, done
 
 
@@ -66,7 +68,7 @@ def test_aggregate_identity_sharing(db_mid):
     qb = _q3(db_mid, "1995-03-15", arrival=0.01)  # exact duplicate, overlapping
     eng, done = _run(db_mid, [qa, qb], "graft")
     assert eng.counters.get("agg_attaches", 0) >= 1
-    a, b = done[0].result, done[1].result
+    a, b = done[0].result(), done[1].result()
     for k in a:
         np.testing.assert_allclose(np.sort(a[k]), np.sort(b[k]))
 
@@ -92,17 +94,16 @@ def test_algorithm2_invariants_throughout(db):
 
 def test_dag_snapshot_shapes(db):
     qa = _q3(db, "1995-03-15")
-    eng = GraftEngine(db, mode="graft", morsel_size=4096)
-    runner = Runner(eng, clock=WorkClock())
-    eng.clock = runner.clock
-    eng.submit(qa)
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    session.submit(qa)  # arrival 0 <= now: grafted onto the shared DAG now
+    eng = session.engine
     snap = snapshot(eng)
     kinds = {n.kind for n in snap.nodes}
     assert "scan" in kinds and "pipeline" in kinds and "state" in kinds
     assert snap.state_ref_edges, "state-ref edges missing"
     frags = extract_ready_fragments(eng)
     assert frags, "no ready fragments after submit"
-    runner.run([])
+    session.run()
 
 
 def test_scan_sharing_counts_io_once(db_mid):

@@ -3,10 +3,17 @@ transferred to the serving substrate, DESIGN.md §6)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.serve.folding import FoldingScheduler, Request, SimExecutor
+import graftdb
+from repro.serve.folding import Request
+
+
+def _serve(reqs, fold=True):
+    """Run one serving episode through the unified Session surface."""
+    session = graftdb.connect_serving(fold=fold)
+    session.submit_all(reqs)
+    return session.run()
 
 
 def _reqs(n, prefix_len=256, suffix_len=32, arrival_gap=0.01, n_decode=16):
@@ -20,9 +27,8 @@ def _reqs(n, prefix_len=256, suffix_len=32, arrival_gap=0.01, n_decode=16):
 
 
 def test_folding_reduces_prefill_tokens():
-    reqs = _reqs(8)
-    fold = FoldingScheduler(SimExecutor(), fold=True).run(_reqs(8))
-    iso = FoldingScheduler(SimExecutor(), fold=False).run(_reqs(8))
+    fold = _serve(_reqs(8), fold=True)
+    iso = _serve(_reqs(8), fold=False)
     assert fold["completed"] == iso["completed"] == 8
     f_tok = fold["prefill_tokens"]
     i_tok = iso["prefill_tokens"]
@@ -35,20 +41,30 @@ def test_folding_reduces_prefill_tokens():
 
 def test_extent_partition_accounting():
     reqs = _reqs(4, prefix_len=128, suffix_len=64)
-    sched = FoldingScheduler(SimExecutor(), fold=True)
-    sched.run(reqs)
-    for r in reqs[1:]:
+    session = graftdb.connect_serving(fold=True)
+    futures = session.submit_all(reqs)
+    session.run()
+    for fut in futures[1:]:
         # each later request's prompt decomposes exactly
-        assert r.represented_tokens + r.residual_tokens + r.ordinary_tokens == len(r.prompt)
-        assert r.ordinary_tokens == 64  # unique suffix stays ordinary work
+        r = fut.result()
+        prompt_len = len(fut.request.prompt)
+        assert (
+            r["represented_tokens"] + r["residual_tokens"] + r["ordinary_tokens"]
+            == prompt_len
+        )
+        assert r["ordinary_tokens"] == 64  # unique suffix stays ordinary work
+        # the admission-time explain agrees with the executed partition
+        exp = fut.explain()
+        assert exp["matched_tokens"] == prompt_len - r["ordinary_tokens"]
     # first request is all ordinary (it created the state)
-    assert reqs[0].ordinary_tokens == len(reqs[0].prompt)
+    assert futures[0].result()["ordinary_tokens"] == len(reqs[0].prompt)
 
 
 def test_retention_releases_prefix_states():
-    sched = FoldingScheduler(SimExecutor(), fold=True)
-    sched.run(_reqs(4))
-    assert sched.states == []  # all refs released
+    session = graftdb.connect_serving(fold=True)
+    session.submit_all(_reqs(4))
+    session.run()
+    assert session.live_states == 0  # all refs released
 
 
 def test_no_fold_below_min_share():
@@ -57,9 +73,56 @@ def test_no_fold_below_min_share():
         Request(i, tuple(rng.integers(0, 1000, 64).tolist()), 4, arrival=0.0)
         for i in range(4)
     ]  # disjoint prompts
-    sched = FoldingScheduler(SimExecutor(), fold=True)
-    res = sched.run(reqs)
+    res = _serve(reqs, fold=True)
     assert res["prefill_tokens"]["represented"] == 0
+
+
+def test_fresh_state_explain_matches_preflight():
+    """A state-creating admission reports matched_tokens=0 (nothing
+    pre-existing matched), agreeing with the pre-flight explain_fold."""
+    session = graftdb.connect_serving(fold=True)
+    req = _reqs(1)[0]
+    pre = session.explain_fold(req)
+    fut = session.submit(req)
+    session.run()
+    post = fut.explain()
+    assert pre["matched_tokens"] == post["matched_tokens"] == 0
+    assert pre["created_state"] and post["created_state"]
+    assert post["ordinary_tokens"] == len(req.prompt)
+
+
+def test_episode_summaries_report_per_episode_tokens():
+    """run() summaries carry per-episode token deltas even though the
+    scheduler's cumulative metrics persist across episodes."""
+    session = graftdb.connect_serving(fold=True)
+    session.submit_all(_reqs(2))
+    s1 = session.run()
+    batch2 = _reqs(2)
+    for i, r in enumerate(batch2):
+        r.rid = 100 + i  # distinct ids; same prompts as episode 1
+    session.submit_all(batch2)
+    s2 = session.run()
+    assert s1["completed"] == s2["completed"] == 2
+    # identical workloads (episode-1 states were released) -> identical
+    # per-episode deltas, and the deltas sum to the cumulative metrics
+    assert s1["prefill_tokens"]["ordinary"] == s2["prefill_tokens"]["ordinary"]
+    total = session.stats()["prefill_tokens"]
+    assert (
+        s1["prefill_tokens"]["ordinary"] + s2["prefill_tokens"]["ordinary"]
+        == total["ordinary"]
+    )
+
+
+def test_prefix_state_ids_isolated_per_session():
+    """State ids are scheduler-scoped: constructing a second session must
+    restart them (the old class-level counter leaked across instances)."""
+    s1 = graftdb.connect_serving(fold=True)
+    s1.submit_all(_reqs(3))
+    s1.run()
+    s2 = graftdb.connect_serving(fold=True)
+    futures = s2.submit_all(_reqs(3))
+    s2.run()
+    assert futures[0].explain()["state_sid"] == 1
 
 
 @given(
@@ -81,8 +144,8 @@ def test_folding_prefill_work_conservation(n, prefix, suffix, gap):
             for i in range(n)
         ]
 
-    fold = FoldingScheduler(SimExecutor(), fold=True).run(mk())
-    iso = FoldingScheduler(SimExecutor(), fold=False).run(mk())
+    fold = _serve(mk(), fold=True)
+    iso = _serve(mk(), fold=False)
     assert fold["completed"] == iso["completed"] == n
     assert (
         fold["prefill_tokens"].get("computed", 0)

@@ -3,8 +3,7 @@ dedup, visibility monotonicity, extent provenance, cost-model calibration."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.descriptors import StateSignature
 from repro.core.predicates import And, Cmp, Conjunction
