@@ -4,9 +4,10 @@ The engine's two hot vectorized operations — hash-probe against a shared
 build state (§4.3) and segmented aggregation into shared accumulators
 (§4.5) — are routed through a per-session backend:
 
-* ``ReferenceBackend`` — the NumPy row engine (sort-based probe in
-  ``core.state``, ``np.bincount`` reductions). Always available; the
-  correctness oracle path (``relational/refexec.py`` semantics).
+* ``ReferenceBackend`` — the NumPy row engine (incremental hash/dup-run
+  probe index in ``core.state``, ``np.bincount`` reductions). Always
+  available; the correctness oracle path (``relational/refexec.py``
+  semantics).
 * ``PallasBackend`` — the jax_pallas TPU kernels (``kernels/hash_probe.py``,
   ``kernels/seg_aggregate.py``), run in interpret mode off-TPU. States that
   the kernels cannot serve (multi-match keys, out-of-range keycodes,
@@ -29,7 +30,12 @@ from ..core.state import SharedHashBuildState, _bincount_segment_sum
 
 @runtime_checkable
 class ExecutionBackend(Protocol):
-    """Data-plane operations a Session's engine dispatches per morsel."""
+    """Data-plane operations a Session's engine dispatches per morsel.
+
+    Backends may additionally provide ``probe_visible(state, keycodes,
+    qid)`` returning visibility-filtered match pairs (or None to decline);
+    the runtime discovers it via getattr, so it is not part of the
+    required protocol surface."""
 
     name: str
 
@@ -62,27 +68,55 @@ class ReferenceBackend:
 class _ProbeTable:
     """Mutable open-addressing table mirror of one state's keycodes."""
 
-    __slots__ = ("n", "tkeys", "slot_entry", "jkeys", "jvis", "bad")
+    __slots__ = (
+        "n",
+        "tkeys",
+        "slot_entry",
+        "jkeys",
+        "jones",
+        "jvis",
+        "tvis",
+        "vis_stamp",
+        "vis_n",
+        "vis_valid",
+        "bad",
+    )
 
     def __init__(self):
         self.n = 0  # state entries inserted so far
         self.tkeys: Optional[np.ndarray] = None  # int32 slots (EMPTY sentinel)
         self.slot_entry: Optional[np.ndarray] = None  # slot -> entry index
         self.jkeys = None  # device copy of tkeys, refreshed on growth
-        self.jvis = None  # constant all-visible lens words, sized to capacity
+        self.jones = None  # constant all-visible lens words (pre-vis probes)
+        self.jvis = None  # device visibility words (fused-lens probes)
+        self.tvis: Optional[np.ndarray] = None  # host mirror of jvis
+        self.vis_stamp = None  # (rows_inserted, rows_marked) the mirror reflects
+        self.vis_n = 0  # entries the mirror reflects
+        self.vis_valid = False  # slots unchanged since the mirror was built
         self.bad = False  # sticky: kernel cannot serve this state
 
 
 class PallasBackend:
     """jax_pallas data plane (interpret mode off-TPU).
 
-    Unique-key states probe through the fused-lens Pallas kernel with the
-    lens mask disabled — per-member visibility is applied by the runtime
-    afterwards, exactly as on the reference path. Everything else falls
-    back to the reference probe. Segmented sums route through the one-hot
-    MXU kernel below ``max_kernel_groups`` groups when ``use_agg_kernel`` is
-    set; it accumulates in float32, so it is opt-in — the default keeps
-    aggregate accumulation in float64 to preserve exact oracle parity.
+    Unique-key states probe through the fused-lens Pallas kernel. Probes on
+    behalf of a single query route through ``probe_visible``: the table
+    mirror carries the state's *real* per-entry visibility words and the
+    query's slot bit becomes the kernel lens mask, so visibility resolves
+    in-kernel and the runtime skips its NumPy ``visible_mask`` pass.
+    Multi-member probes use the generic pre-visibility ``probe`` (lens mask
+    all-ones). Everything the kernel cannot serve (multi-match keys,
+    out-of-range keycodes, over-long probe clusters) falls back to the
+    reference probe. Probe-table maintenance is batch-oriented: new keys
+    insert via vectorized per-slot winner election (``_batch_insert``), or
+    through the Pallas ``hash_build_insert`` kernel when
+    ``use_insert_kernel`` is set (opt-in: the in-kernel insert loop is
+    sequential, which only pays off compiled on-device).
+
+    Segmented sums route through the one-hot MXU kernel below
+    ``max_kernel_groups`` groups when ``use_agg_kernel`` is set; it
+    accumulates in float32, so it is opt-in — the default keeps aggregate
+    accumulation in float64 to preserve exact oracle parity.
     """
 
     name = "pallas"
@@ -95,17 +129,20 @@ class PallasBackend:
         interpret: bool = True,
         max_kernel_groups: int = 4096,
         use_agg_kernel: bool = False,
+        use_insert_kernel: bool = False,
     ):
         import jax  # noqa: F401 — fail fast if jax is unavailable
 
-        from ..kernels.hash_probe import hash_probe_lens
+        from ..kernels.hash_probe import hash_build_insert, hash_probe_lens
         from ..kernels.seg_aggregate import seg_aggregate
 
         self._hash_probe_lens = hash_probe_lens
+        self._hash_build_insert = hash_build_insert
         self._seg_aggregate = seg_aggregate
         self.interpret = interpret
         self.max_kernel_groups = max_kernel_groups
         self.use_agg_kernel = use_agg_kernel
+        self.use_insert_kernel = use_insert_kernel
         self._ref = ReferenceBackend()
         # Probe tables keyed weakly by the state OBJECT (state_ids are
         # engine-local, so an id key would collide when one backend instance
@@ -115,6 +152,7 @@ class PallasBackend:
         )
         self._qmask = None  # constant all-ones lens mask, built lazily
         self.kernel_probes = 0
+        self.kernel_lens_probes = 0
         self.fallback_probes = 0
 
     # -- probe ---------------------------------------------------------------
@@ -131,14 +169,14 @@ class PallasBackend:
             return self._ref.probe(state, keycodes)
         import jax.numpy as jnp
 
-        tkeys, tvis, slot_entry = table
+        tkeys, tones, slot_entry = table
         if self._qmask is None:  # lens off: pure key match
             self._qmask = jnp.asarray([0xFFFFFFFF], dtype=jnp.uint32)
         found_slots = np.asarray(
             self._hash_probe_lens(
                 jnp.asarray(keycodes, dtype=jnp.int32),
                 tkeys,
-                tvis,
+                tones,
                 self._qmask,
                 interpret=self.interpret,
             )
@@ -147,6 +185,96 @@ class PallasBackend:
         probe_idx = np.flatnonzero(found_slots >= 0).astype(np.int64)
         entry_idx = slot_entry[found_slots[probe_idx]]
         return probe_idx, entry_idx
+
+    def probe_visible(self, state, keycodes, qid):
+        """Single-query probe with the state lens fused in-kernel.
+
+        Returns visibility-filtered (probe_idx, entry_idx) pairs, or None
+        when the kernel cannot take over the lens (extent-scoped grants
+        need predicate evaluation; slots >= 32 exceed the kernel's uint32
+        visibility words; unservable tables fall back entirely)."""
+        if state.grants.get(qid):
+            return None
+        slot = state.slots.peek(qid)
+        if slot is None or slot >= 32:
+            return None
+        if state.keycode.n == 0 or len(keycodes) == 0:
+            # decline instead of returning the empty pair: keeps the
+            # kernel_lens_probes backend attr == engine counter invariant
+            return None
+        table = self._table_for(state)
+        if table is None or keycodes.min() < 0 or keycodes.max() > self._KEY_LIMIT:
+            return None
+        import jax.numpy as jnp
+
+        ent = self._tables[state]
+        self._refresh_vis(ent, state)
+        found_slots = np.asarray(
+            self._hash_probe_lens(
+                jnp.asarray(keycodes, dtype=jnp.int32),
+                ent.jkeys,
+                ent.jvis,
+                jnp.asarray([np.uint32(1) << np.uint32(slot)], dtype=jnp.uint32),
+                interpret=self.interpret,
+            )
+        )
+        self.kernel_probes += 1
+        self.kernel_lens_probes += 1
+        probe_idx = np.flatnonzero(found_slots >= 0).astype(np.int64)
+        entry_idx = ent.slot_entry[found_slots[probe_idx]]
+        return probe_idx, entry_idx
+
+    def _refresh_vis(self, ent: "_ProbeTable", state) -> None:
+        """Mirror the state's per-entry visibility words into the table
+        layout. Visibility only changes through insert_or_mark, so the
+        (rows_inserted, rows_marked) pair stamps the mirror's freshness.
+        Pure append-only growth patches only the new entries' slots
+        (O(delta)); marks rewrite existing words, so a mark or a table
+        rebuild falls back to a full O(capacity) regather."""
+        import jax.numpy as jnp
+
+        stamp = (state.rows_inserted, state.rows_marked)
+        if ent.vis_stamp == stamp and ent.jvis is not None:
+            return
+        vis_low = (state.vis.data & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        marks_unchanged = (
+            ent.vis_stamp is not None and ent.vis_stamp[1] == stamp[1]
+        )
+        if ent.vis_valid and ent.tvis is not None and marks_unchanged:
+            new_keys = np.asarray(state.keycode.data[ent.vis_n : ent.n], dtype=np.int32)
+            ent.tvis[self._find_slots(ent, new_keys)] = vis_low[ent.vis_n : ent.n]
+        else:
+            ent.tvis = np.zeros(len(ent.tkeys), dtype=np.uint32)
+            occ = ent.slot_entry >= 0
+            ent.tvis[occ] = vis_low[ent.slot_entry[occ]]
+            ent.vis_valid = True
+        ent.jvis = jnp.asarray(ent.tvis)
+        ent.vis_n = ent.n
+        ent.vis_stamp = stamp
+
+    @staticmethod
+    def _find_slots(ent: "_ProbeTable", keys32: np.ndarray) -> np.ndarray:
+        """Slot of each (present, unique) key: the kernel's linear-probe
+        walk, batched — used to patch the visibility mirror in O(delta)."""
+        from ..kernels.hash_probe import MULT
+
+        tkeys = ent.tkeys
+        mask = len(tkeys) - 1
+        pos = ((keys32.astype(np.uint32) * np.uint32(MULT)).astype(np.int32)) & mask
+        out = np.empty(len(keys32), dtype=np.int64)
+        pending = np.arange(len(keys32), dtype=np.int64)
+        while len(pending):
+            p = pos[pending]
+            hit = tkeys[p] == keys32[pending]
+            if hit.any():
+                out[pending[hit]] = p[hit]
+            rest = ~hit
+            if not rest.any():
+                break
+            pr = pending[rest]
+            pos[pr] = (p[rest] + 1) & mask
+            pending = pr
+        return out
 
     def _table_for(self, state) -> Optional[Tuple[object, object, np.ndarray]]:
         """Open-addressing probe table over the state's SoA keycodes, cached
@@ -167,12 +295,15 @@ class PallasBackend:
             self._insert_keys(ent, state.keycode.data, n)
             if ent.bad:
                 return None
-        return ent.jkeys, ent.jvis, ent.slot_entry
+        return ent.jkeys, ent.jones, ent.slot_entry
 
     def _insert_keys(self, ent: "_ProbeTable", keys, n: int) -> None:
         """Insert keys[ent.n:n] into the table, rebuilding at a larger
-        capacity when the 50% load factor would be exceeded."""
-        from ..kernels.hash_probe import EMPTY, MAX_PROBE, MULT
+        capacity when the 50% load factor would be exceeded. Insertion is
+        one batched winner-election pass (or the Pallas insert kernel on
+        full rebuilds when ``use_insert_kernel`` is set) — never a
+        per-key Python loop."""
+        from ..kernels.hash_probe import EMPTY
 
         new = keys[ent.n : n]
         if len(new) and (new.min() < 0 or new.max() > self._KEY_LIMIT):
@@ -182,36 +313,93 @@ class PallasBackend:
             cap = 1
             while cap < 2 * n:
                 cap *= 2
-            ent.tkeys = np.full(cap, EMPTY, dtype=np.int32)
-            ent.slot_entry = np.full(cap, -1, dtype=np.int64)
-            start = 0  # re-insert everything at the new capacity
-        else:
-            start = ent.n
-        tkeys, slot_entry = ent.tkeys, ent.slot_entry
-        mask = len(tkeys) - 1
-        seg = keys[start:n]
-        home = ((seg.astype(np.uint32) * np.uint32(MULT)).astype(np.int32)) & mask
-        for k, i in zip(seg.tolist(), range(start, n)):
-            p = int(home[i - start])
-            hops = 0
-            key32 = np.int32(k)
-            while tkeys[p] != EMPTY:
-                if tkeys[p] == key32:
-                    ent.bad = True  # duplicate key: multi-match state
+            if self.use_insert_kernel:
+                if not self._kernel_rebuild(ent, keys[:n], cap):
+                    ent.bad = True
                     return
-                p = (p + 1) & mask
-                hops += 1
-                if hops >= MAX_PROBE:
-                    ent.bad = True  # cluster exceeds the kernel's bounded probe
+            else:
+                ent.tkeys = np.full(cap, EMPTY, dtype=np.int32)
+                ent.slot_entry = np.full(cap, -1, dtype=np.int64)
+                if not self._batch_insert(ent, keys[:n], 0):
+                    ent.bad = True
                     return
-            tkeys[p] = key32
-            slot_entry[p] = i
+            # rebuild reassigns slots: the lens mirror must fully regather
+            ent.vis_valid = False
+            ent.vis_stamp = None
+        elif not self._batch_insert(ent, keys[ent.n : n], ent.n):
+            ent.bad = True
+            return
         import jax.numpy as jnp
 
         ent.n = n
-        ent.jkeys = jnp.asarray(tkeys)
-        if ent.jvis is None or ent.jvis.shape[0] != len(tkeys):
-            ent.jvis = jnp.ones(len(tkeys), dtype=jnp.uint32)
+        ent.jkeys = jnp.asarray(ent.tkeys)
+        if ent.jones is None or ent.jones.shape[0] != len(ent.tkeys):
+            ent.jones = jnp.ones(len(ent.tkeys), dtype=jnp.uint32)
+
+    @staticmethod
+    def _batch_insert(ent: "_ProbeTable", seg, base: int) -> bool:
+        """Vectorized linear-probe insertion of ``seg`` (entry indices
+        ``base + i``): each round, every unplaced key inspects its current
+        slot; per empty slot the lowest-ranked contender wins, everyone
+        else advances. Returns False on duplicate keys (multi-match state)
+        or a probe chain exceeding the kernel's bounded scan."""
+        from ..kernels.hash_probe import EMPTY, MAX_PROBE, MULT
+
+        if len(seg) == 0:
+            return True
+        tkeys, slot_entry = ent.tkeys, ent.slot_entry
+        mask = len(tkeys) - 1
+        seg32 = np.asarray(seg, dtype=np.int32)
+        pos = ((seg.astype(np.uint32) * np.uint32(MULT)).astype(np.int32)) & mask
+        hops = np.zeros(len(seg), dtype=np.int64)
+        pending = np.arange(len(seg), dtype=np.int64)
+        while len(pending):
+            p = pos[pending]
+            cur = tkeys[p]
+            if (cur == seg32[pending]).any():
+                return False  # duplicate key: multi-match state
+            free = cur == EMPTY
+            won = np.zeros(len(pending), dtype=bool)
+            if free.any():
+                cand = np.flatnonzero(free)
+                slots = p[cand]
+                so = np.argsort(slots, kind="stable")
+                firsts = np.ones(len(so), dtype=bool)
+                firsts[1:] = slots[so][1:] != slots[so][:-1]
+                winners = cand[so[firsts]]
+                wp = p[winners]
+                tkeys[wp] = seg32[pending[winners]]
+                slot_entry[wp] = base + pending[winners]
+                won[winners] = True
+                # a same-batch duplicate that contended for the same slot
+                # never revisits it — re-read after the winners' writes so
+                # in-batch duplicate keys are caught, not silently placed
+                lost = free & ~won
+                if lost.any() and (tkeys[p[lost]] == seg32[pending[lost]]).any():
+                    return False  # duplicate key within the batch
+            rest = ~won
+            if not rest.any():
+                break
+            pr = pending[rest]
+            pos[pr] = (p[rest] + 1) & mask
+            hops[pr] += 1
+            if hops[pr].max() >= MAX_PROBE:
+                return False  # cluster exceeds the kernel's bounded probe
+            pending = pr
+        return True
+
+    def _kernel_rebuild(self, ent: "_ProbeTable", keys, cap: int) -> bool:
+        """Full-table rebuild through the Pallas batch-insert kernel."""
+        import jax.numpy as jnp
+
+        tkeys, tentry, ok = self._hash_build_insert(
+            jnp.asarray(keys, dtype=jnp.int32), capacity=cap, interpret=self.interpret
+        )
+        if int(np.asarray(ok)[0]) == 0:
+            return False
+        ent.tkeys = np.asarray(tkeys)
+        ent.slot_entry = np.asarray(tentry, dtype=np.int64)
+        return True
 
     # -- segmented aggregation ------------------------------------------------
     def segment_sum(self, gids, values, n_groups):

@@ -67,6 +67,7 @@ class QueryFuture:
         for m in h.members:
             kinds[m.kind] = kinds.get(m.kind, 0) + 1
             rows_sunk += m.rows_sunk
+        eng_counters = self._session._engine.counters
         return {
             "qid": self.qid,
             "template": self.query.template,
@@ -78,6 +79,13 @@ class QueryFuture:
             "members": kinds,
             "rows_sunk": rows_sunk,
             "attached_state_ids": [s.state_id for s in h.attached_states],
+            # shared-data-plane perf counters (engine-wide: one shared
+            # execution serves every query, so the work is not per-query
+            # attributable — DESIGN.md §8)
+            "counters": {
+                k: int(eng_counters.get(k, 0))
+                for k in ("index_rebuilds", "kernel_lens_probes", "fused_filter_rows")
+            },
         }
 
     def explain(self):

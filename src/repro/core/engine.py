@@ -130,27 +130,52 @@ class GraftEngine:
         self.active_handles: List[QueryHandle] = []
         self.completed: List[QueryHandle] = []
         self.counters: Dict[str, float] = defaultdict(float)
+        # data-plane perf counters surfaced via QueryFuture.stats — present
+        # (zero) from the start so stats dicts are shape-stable
+        for k in ("index_rebuilds", "kernel_lens_probes", "fused_filter_rows"):
+            self.counters[k] = 0.0
         self.demand_cache: Dict = {}
         self._domains: Dict[str, int] = {}
         self._next_state_id = 0
         self._agg_producers: Dict[int, SharedAggregateState] = {}  # member.mid -> agg
+        # engine-scoped runtime-object ids (no class-counter leaks across
+        # engine/session constructions — same fix class as PrefixState)
+        self._next_mid = 0
+        self._next_pid = 0
+        self._next_sid = 0
 
         # clock is attached by the scheduler
         self.clock = None
 
     # -- helpers -------------------------------------------------------------
+    def next_member_id(self) -> int:
+        self._next_mid += 1
+        return self._next_mid
+
+    def next_pipeline_id(self) -> int:
+        self._next_pid += 1
+        return self._next_pid
+
     def get_scan(self, table: str, qid: int) -> ScanNode:
         key = table if self.mode.share_scans else (table, qid)
         node = self.scans.get(key)
         if node is None:
-            node = ScanNode(self.db[table], self.morsel_size, zone_maps=self.zone_maps)
+            self._next_sid += 1
+            node = ScanNode(
+                self._next_sid, self.db[table], self.morsel_size, zone_maps=self.zone_maps
+            )
             self.scans[key] = node
         return node
 
     def new_hash_state(self, sig, join, did_domain: int) -> SharedHashBuildState:
         self._next_state_id += 1
         return SharedHashBuildState(
-            self._next_state_id, sig, tuple(join.build_keys), tuple(join.payload), did_domain
+            self._next_state_id,
+            sig,
+            tuple(join.build_keys),
+            tuple(join.payload),
+            did_domain,
+            counters=self.counters,
         )
 
     # -- submission (query grafting, §5.2) ------------------------------------
@@ -197,7 +222,11 @@ class GraftEngine:
         # -- aggregate state (private; becomes shared under its identity)
         self._next_state_id += 1
         agg_state = SharedAggregateState(
-            self._next_state_id, agg_sig, tuple(agg.group_keys), tuple(agg.aggs)
+            self._next_state_id,
+            agg_sig,
+            tuple(agg.group_keys),
+            tuple(agg.aggs),
+            counters=self.counters,
         )
         agg_state.attach(handle.qid)
         handle.agg_state = agg_state
@@ -211,9 +240,12 @@ class GraftEngine:
             pkey = pkey + (handle.qid,)
         pipeline = self.pipelines.get(pkey)
         if pipeline is None:
-            pipeline = Pipeline(pkey, self.get_scan(scan.table, handle.qid), ops)
+            pipeline = Pipeline(
+                self.next_pipeline_id(), pkey, self.get_scan(scan.table, handle.qid), ops
+            )
             self.pipelines[pkey] = pipeline
         member = Member(
+            self.next_member_id(),
             handle.qid,
             scan.pred,
             gates,

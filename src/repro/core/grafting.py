@@ -302,6 +302,7 @@ def _install_producer(
     pipeline = engine.pipelines.get(pkey)
     if pipeline is None:
         pipeline = Pipeline(
+            engine.next_pipeline_id(),
             pkey,
             engine.get_scan(scan.table, handle.qid),
             inner_ops,
@@ -312,6 +313,7 @@ def _install_producer(
 
     eid = state.register_extent(b_q)
     member = Member(
+        engine.next_member_id(),
         handle.qid,
         scan.pred,
         inner_gates,

@@ -15,7 +15,15 @@ The shared execution DAG (§5.1) is realized by three kinds of live objects:
   residual producer members installed for it have completed.
 
 Morsels are the TPU adaptation of the paper's row fragments (DESIGN.md §2):
-every step is a vectorized column-batch operation.
+every step is a vectorized column-batch operation. The per-member source
+predicates of one pipeline are fused into a single SoA bound-check pass
+(members × attrs lo/hi matrices -> packed visibility bitmask), and
+single-member probes route through the backend's fused-lens kernel so
+visibility resolves in-kernel (DESIGN.md §8).
+
+Member / Pipeline / ScanNode ids are engine-scoped (allocated by the owning
+GraftEngine), so repeated engine constructions are isolated — ids never
+leak across sessions.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ from .state import ALL_EXTENTS, SharedAggregateState, SharedHashBuildState
 from .visibility import SlotAllocator, bit_of
 
 U64_1 = np.uint64(1)
+U64_0 = np.uint64(0)
 
 
 def _member_conj(m: "Member"):
@@ -56,6 +65,81 @@ def encode_keys(cols: Dict[str, np.ndarray], attrs: Sequence[str]) -> np.ndarray
     for a in attrs[1:]:
         code = code * KEY_RADIX + np.asarray(cols[a], dtype=np.int64)
     return code
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-member source filter (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def member_bound_matrices(members: Sequence["Member"]):
+    """SoA bound matrices for the fused source-predicate pass.
+
+    A member fuses when its predicate canonicalizes into per-attribute
+    intervals (membership sets of size one become point intervals;
+    exclusive bounds tighten by one float64 ulp so a single inclusive
+    compare is exact). Returns ``(attrs, lo[M,A], hi[M,A], fused, slow)``
+    where ``slow`` members fall back to per-member evaluation."""
+    fused: List["Member"] = []
+    slow: List["Member"] = []
+    per_member: List[Dict[str, Tuple[float, float]]] = []
+    for m in members:
+        conj = _member_conj(m)
+        if conj is None:
+            slow.append(m)
+            continue
+        bounds: Dict[str, Tuple[float, float]] = {}
+        ok = True
+        for attr, c in conj.constraints.items():
+            if c.members is not None and len(c.members) != 1:
+                ok = False
+                break
+            lo = c.lo if c.lo_inc else np.nextafter(c.lo, math.inf)
+            hi = c.hi if c.hi_inc else np.nextafter(c.hi, -math.inf)
+            if c.members is not None:
+                v = next(iter(c.members))
+                lo, hi = max(lo, v), min(hi, v)
+            bounds[attr] = (lo, hi)
+        if not ok:
+            slow.append(m)
+            continue
+        fused.append(m)
+        per_member.append(bounds)
+    attrs = sorted({a for b in per_member for a in b})
+    lo = np.full((len(fused), len(attrs)), -math.inf)
+    hi = np.full((len(fused), len(attrs)), math.inf)
+    for i, bounds in enumerate(per_member):
+        for j, a in enumerate(attrs):
+            if a in bounds:
+                lo[i, j], hi[i, j] = bounds[a]
+    return attrs, lo, hi, fused, slow
+
+
+def fused_bound_bits(
+    n: int,
+    cols: Dict[str, np.ndarray],
+    attrs: Sequence[str],
+    lo: np.ndarray,
+    hi: np.ndarray,
+    bitvals: np.ndarray,
+) -> np.ndarray:
+    """One SoA pass: per-row packed visibility bitmask over all fused
+    members — ``bits[r]`` ORs ``bitvals[m]`` for every member whose bounds
+    admit row r on every attribute. Member-major layout keeps every
+    compare a contiguous scalar-bound sweep (row-major broadcasting is
+    ~3x slower: stride-0 inner loops and (rows, members) temporaries)."""
+    m = len(bitvals)
+    if not m:
+        return np.zeros(n, dtype=np.uint64)
+    ok = np.ones((m, n), dtype=bool)
+    for j, a in enumerate(attrs):
+        col = cols[a]
+        np.logical_and(ok, col >= lo[:, j, None], out=ok)
+        np.logical_and(ok, col <= hi[:, j, None], out=ok)
+    bits = np.zeros(n, dtype=np.uint64)
+    for i in range(m):
+        bits |= ok[i] * bitvals[i]
+    return bits
 
 
 # ---------------------------------------------------------------------------
@@ -137,12 +221,12 @@ class AggSink:
 class Member:
     """One query's participation in a pipeline (an active node-query pair in
     Algorithm 2's sense). ``beneficiaries`` supports QPipe-style merged
-    identical profiles: one physical member tagging several queries."""
-
-    _next_id = 0
+    identical profiles: one physical member tagging several queries.
+    ``mid`` is allocated by the owning engine (no class-counter leaks)."""
 
     def __init__(
         self,
+        mid: int,
         qid: int,
         pred: Pred,
         gates: List[Gate],
@@ -153,8 +237,7 @@ class Member:
         conj: Optional[Conjunction] = None,
         beneficiaries: Optional[List[int]] = None,
     ):
-        Member._next_id += 1
-        self.mid = Member._next_id
+        self.mid = mid
         self.qid = qid
         self.pred = pred
         self.gates = gates
@@ -205,18 +288,16 @@ class ProbeOp:
 
 
 class Pipeline:
-    _next_id = 0
-
     def __init__(
         self,
+        pid: int,
         key,
         source: "ScanNode",
         ops: List[ProbeOp],
         build_target: Optional[BuildTarget] = None,
         compose_did: bool = False,
     ):
-        Pipeline._next_id += 1
-        self.pid = Pipeline._next_id
+        self.pid = pid
         self.key = key
         self.source = source
         self.ops = ops
@@ -224,6 +305,7 @@ class Pipeline:
         self.compose_did = compose_did
         self.members: List[Member] = []
         self.slots = SlotAllocator()
+        self._filter_plan = None  # (wave key, bound matrices) cache
         source.attach(self)
 
     # -- membership ---------------------------------------------------------
@@ -241,6 +323,25 @@ class Pipeline:
         return all(m.done for m in self.members)
 
     # -- execution ----------------------------------------------------------
+    def _source_bits(self, act: List[Member], cols, n: int, engine) -> np.ndarray:
+        """Per-member source predicates -> packed row bitmask, via one fused
+        SoA bound-check pass (per-wave matrices cached on the pipeline);
+        members outside the interval fragment evaluate individually."""
+        key = tuple((m.mid, m.slot) for m in act)
+        plan = self._filter_plan
+        if plan is None or plan[0] != key:
+            attrs, lo, hi, fused, slow = member_bound_matrices(act)
+            bitvals = np.array([m.bitval for m in fused], dtype=np.uint64)
+            plan = (key, attrs, lo, hi, bitvals, fused, slow)
+            self._filter_plan = plan
+        _, attrs, lo, hi, bitvals, fused, slow = plan
+        bits = fused_bound_bits(n, cols, attrs, lo, hi, bitvals)
+        engine.counters["fused_filter_rows"] += n * len(fused)
+        for m in slow:
+            mask = evaluate(m.pred, cols)
+            bits |= np.where(mask, m.bitval, U64_0)
+        return bits
+
     def process(self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray) -> float:
         """Run one morsel through the pipeline for all active members.
         Returns the modeled cost (seconds) of the work performed."""
@@ -251,11 +352,7 @@ class Pipeline:
         cm = engine.cost_model
         cost = 0.0
 
-        # per-member source predicate -> packed row bitmask
-        bits = np.zeros(n, dtype=np.uint64)
-        for m in act:
-            mask = evaluate(m.pred, cols)
-            bits |= np.where(mask, m.bitval, np.uint64(0))
+        bits = self._source_bits(act, cols, n, engine)
         cost += cm["filter"] * n * len(act)
 
         keep = np.flatnonzero(bits)
@@ -270,8 +367,20 @@ class Pipeline:
             if len(did) == 0:
                 break
             keycodes = encode_keys(cols, op.probe_attrs)
+            # single-member probes resolve the state lens in-kernel when the
+            # backend can serve it; the runtime then skips visible_mask
+            lens_fused = False
             if backend is not None:
-                probe_idx, entry_idx = backend.probe(op.state, keycodes)
+                if len(act) == 1:
+                    probe_visible = getattr(backend, "probe_visible", None)
+                    if probe_visible is not None:
+                        fused_pair = probe_visible(op.state, keycodes, act[0].qid)
+                        if fused_pair is not None:
+                            probe_idx, entry_idx = fused_pair
+                            lens_fused = True
+                            engine.counters["kernel_lens_probes"] += 1
+                if not lens_fused:
+                    probe_idx, entry_idx = backend.probe(op.state, keycodes)
             else:
                 probe_idx, entry_idx = op.state.probe(keycodes)
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
@@ -279,9 +388,12 @@ class Pipeline:
             bits_in = bits[probe_idx]
             new_bits = np.zeros(len(probe_idx), dtype=np.uint64)
             for m in act:
-                vis = op.state.visible_mask(m.qid, entry_idx)
-                bm = bit_of(bits_in, m.slot) & vis
-                new_bits |= np.where(bm, m.bitval, np.uint64(0))
+                if lens_fused:
+                    bm = bit_of(bits_in, m.slot)
+                else:
+                    vis = op.state.visible_mask(m.qid, entry_idx)
+                    bm = bit_of(bits_in, m.slot) & vis
+                new_bits |= np.where(bm, m.bitval, U64_0)
             cols = {k: v[probe_idx] for k, v in cols.items()}
             for a, out in zip(op.payload, op.out_names):
                 cols[out] = op.state.cols[a].data[entry_idx]
@@ -294,7 +406,7 @@ class Pipeline:
             for m in act:
                 for p in m.stage_filters.get(stage, ()):  # e.g. Q5 ColEq
                     bm = bit_of(bits, m.slot) & evaluate(p, cols)
-                    bits = (bits & ~m.bitval) | np.where(bm, m.bitval, np.uint64(0))
+                    bits = (bits & ~m.bitval) | np.where(bm, m.bitval, U64_0)
             keep = np.flatnonzero(bits)
             if len(keep) != len(bits):
                 cols = {k: v[keep] for k, v in cols.items()}
@@ -362,7 +474,6 @@ class Pipeline:
                 m.rows_sunk += nsel
                 cost += cm["agg"] * nsel
                 engine.counters["agg_rows"] += nsel
-
         # morsel accounting
         finished: List[Member] = []
         for m in act:
@@ -382,11 +493,8 @@ class Pipeline:
 
 
 class ScanNode:
-    _next_id = 0
-
-    def __init__(self, table: Table, morsel_size: int, zone_maps: bool = False):
-        ScanNode._next_id += 1
-        self.sid = ScanNode._next_id
+    def __init__(self, sid: int, table: Table, morsel_size: int, zone_maps: bool = False):
+        self.sid = sid
         self.table = table
         self.morsel_size = morsel_size
         self.n_morsels = max(1, math.ceil(table.nrows / morsel_size))
@@ -394,6 +502,7 @@ class ScanNode:
         self.pipelines: List[Pipeline] = []
         self.row_bytes = table.nbytes() / max(table.nrows, 1)
         self.zone_maps = zone_maps
+        self._zone_cache: Optional[Tuple[tuple, np.ndarray]] = None
 
     def attach(self, p: Pipeline) -> None:
         self.pipelines.append(p)
@@ -401,37 +510,55 @@ class ScanNode:
     def has_active_work(self) -> bool:
         return any(p.active_members() for p in self.pipelines)
 
-    def _zone_skip(self, morsel_idx: int) -> bool:
-        """Beyond-paper: skip the physical read when no active member's
-        canonical predicate can match this morsel's [min,max] zones. The
-        morsel still counts toward every member's delivery cycle (zero rows
-        pass their filters by construction)."""
+    def _wave_possible(self) -> np.ndarray:
+        """Beyond-paper zone-map skipping, hoisted per activation wave: one
+        vectorized pass over ALL morsels' [min,max] zones per distinct set
+        of active members, instead of per-morsel per-member re-derivation.
+        ``possible[i]`` is False only when no active member's canonical
+        predicate can match morsel i."""
+        act = [m for p in self.pipelines for m in p.active_members()]
+        key = tuple(m.mid for m in act)
+        cached = self._zone_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
         zm = self.table.zone_map(self.morsel_size)
-        for p in self.pipelines:
-            for m in p.active_members():
-                conj = _member_conj(m)
-                if conj is None:
-                    return False  # unprovable predicate -> must read
-                possible = True
-                for attr, c in conj.constraints.items():
-                    if attr not in zm:
-                        continue
-                    lo, hi = zm[attr][0][morsel_idx], zm[attr][1][morsel_idx]
-                    probe = AttrConstraint(lo=float(lo), hi=float(hi))
-                    if c.intersect(probe).is_empty():
-                        possible = False
-                        break
-                if possible:
-                    return False
-        return True
+        possible = np.zeros(self.n_morsels, dtype=bool)
+        for m in act:
+            conj = _member_conj(m)
+            if conj is None:
+                possible[:] = True  # unprovable predicate -> must read
+                break
+            ok = np.ones(self.n_morsels, dtype=bool)
+            for attr, c in conj.constraints.items():
+                if attr not in zm:
+                    continue
+                mins, maxs = zm[attr]
+                if c.lo != -math.inf:
+                    ok &= (maxs > c.lo) if not c.lo_inc else (maxs >= c.lo)
+                if c.hi != math.inf:
+                    ok &= (mins < c.hi) if not c.hi_inc else (mins <= c.hi)
+                if c.members is not None:
+                    anym = np.zeros(self.n_morsels, dtype=bool)
+                    for v in c.members:
+                        anym |= (mins <= v) & (maxs >= v)
+                    ok &= anym
+                if not ok.any():
+                    break
+            possible |= ok
+            if possible.all():
+                break
+        self._zone_cache = (key, possible)
+        return possible
 
     def advance(self, engine) -> float:
         """Emit the next morsel to every attached pipeline with active
         members. Physical read counted once (shared scan)."""
         idx = self.cursor
-        if self.zone_maps and self._zone_skip(idx):
+        if self.zone_maps and not self._wave_possible()[idx]:
             engine.counters["morsels_skipped"] += 1
             cost = engine.cost_model["scan"] * 8  # zone check, not a read
+            # the morsel still counts toward every member's delivery cycle
+            # (zero rows pass their filters by construction)
             for p in list(self.pipelines):
                 finished = []
                 for m in p.active_members():

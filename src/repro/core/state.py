@@ -27,8 +27,17 @@ FV(B_q) ⊆ RetainedAttrs(S) the provenance check degenerates to evaluating
 B_q on the entry (allowed = ALL).
 
 Layout is columnar SoA (TPU adaptation — DESIGN.md §2): dense append-only
-arrays + a sort-based probe index rebuilt lazily when a lens observation
-opens. The Pallas `hash_probe` kernel consumes the same SoA layout.
+arrays indexed by two batched hash structures (DESIGN.md §8):
+
+* derivation ids dedup through a vectorized ``HashIndex`` (insert-or-mark
+  is one batched lookup/insert plus one ``bitwise_or.at`` pass),
+* probes resolve through an *incremental multi-match index*: a ``HashIndex``
+  over keycodes routes unique keys in O(batch), while keys with multiple
+  entries fall to a sorted duplicate run maintained by delta merge — no
+  full re-argsort on growth.
+
+The Pallas ``hash_probe`` kernel consumes the same SoA layout; aggregate
+group ids and count(distinct) seen-pairs run on ``MultiKeyIndex``.
 """
 
 from __future__ import annotations
@@ -39,10 +48,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .descriptors import StateSignature
+from .hashindex import HashIndex, MultiKeyIndex
 from .predicates import Conjunction, Coverage, evaluate_conj
 from .visibility import SlotAllocator, bit_of
 
 ALL_EXTENTS = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+_EMPTY_PAIR = (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
 
 
 def _bincount_segment_sum(gids, values, n_groups):
@@ -95,6 +107,7 @@ class SharedHashBuildState:
         key_attrs: Tuple[str, ...],
         payload: Tuple[str, ...],
         did_domain: int = 1 << 62,
+        counters: Optional[Dict] = None,
     ):
         self.state_id = state_id
         self.sig = sig
@@ -109,7 +122,7 @@ class SharedHashBuildState:
         self.emask = GrowArray(np.uint64)
         self.cols: Dict[str, GrowArray] = {a: GrowArray(np.float64) for a in self.retained_attrs}
 
-        self._did_index: Dict[int, int] = {}
+        self._did_index = HashIndex(counters=counters)
         self.slots = SlotAllocator()
 
         # extent registry: eid -> (conj | None, complete)
@@ -120,10 +133,17 @@ class SharedHashBuildState:
         self.grants: Dict[int, List[Tuple[np.uint64, Conjunction]]] = {}
         self.refs: set = set()
 
-        # probe index (sorted keycode + permutation), rebuilt lazily
-        self._index_built_upto = -1
-        self._order: Optional[np.ndarray] = None
-        self._sorted_keys: Optional[np.ndarray] = None
+        # incremental multi-match probe index (DESIGN.md §8): hash index
+        # for unique keys + sorted duplicate run with delta merge. Synced
+        # lazily at probe time — build-only phases pay nothing for it.
+        self._kindex = HashIndex(counters=counters)
+        self._key_first = GrowArray(np.int64)  # key id -> first entry idx
+        self._key_dup = GrowArray(np.bool_)  # key id -> key has >1 entry
+        self._indexed_upto = 0  # entries registered with the probe index
+        self._dup_keys = np.empty(0, dtype=np.int64)  # sorted by (key, entry)
+        self._dup_entries = np.empty(0, dtype=np.int64)
+        self._dup_pend_keys: List[np.ndarray] = []
+        self._dup_pend_entries: List[np.ndarray] = []
 
         # counters
         self.rows_inserted = 0
@@ -179,55 +199,34 @@ class SharedHashBuildState:
         emask: np.ndarray,
     ) -> Tuple[int, int]:
         """Insert rows absent by derivation id; OR visibility/provenance on
-        present ones. Returns (inserted, marked)."""
+        present ones. Returns (inserted, marked).
+
+        One batched ``HashIndex.lookup_or_insert`` resolves every row's
+        entry position (deduping within the batch in first-occurrence
+        order); a single ``bitwise_or.at`` pass then merges visibility and
+        provenance for marks, fresh inserts, and in-batch duplicates alike.
+        """
         if len(dids) == 0:
             return 0, 0
-        idx_map = self._did_index
-        pos = np.empty(len(dids), dtype=np.int64)
-        is_new = np.zeros(len(dids), dtype=bool)
-        for i, d in enumerate(dids.tolist()):
-            j = idx_map.get(d, -1)
-            if j < 0:
-                is_new[i] = True
-            else:
-                pos[i] = j
-        n_marked = 0
-        old = ~is_new
-        if old.any():
-            p = pos[old]
-            np.bitwise_or.at(self.vis.data, p, vismask[old])
-            np.bitwise_or.at(self.emask.data, p, emask[old])
-            n_marked = int(old.sum())
-            self.rows_marked += n_marked
-        n_inserted = 0
-        if is_new.any():
-            sel_all = np.flatnonzero(is_new)
-            nd = dids[sel_all]
-            uniq, first = np.unique(nd, return_index=True)
-            sel = sel_all[np.sort(first)]
-            if len(uniq) != len(sel_all):
-                # OR together vis/emask of duplicate dids within the batch
-                vis_new = np.zeros(len(sel), dtype=np.uint64)
-                em_new = np.zeros(len(sel), dtype=np.uint64)
-                order = {int(d): k for k, d in enumerate(dids[sel].tolist())}
-                for i in sel_all.tolist():
-                    k = order[int(dids[i])]
-                    vis_new[k] |= vismask[i]
-                    em_new[k] |= emask[i]
-            else:
-                vis_new = vismask[sel]
-                em_new = emask[sel]
-            base = self.did.n
+        dids = np.asarray(dids, dtype=np.int64)
+        n0 = self.did.n
+        ids, is_new = self._did_index.lookup_or_insert(dids)
+        n_inserted = int(is_new.sum())
+        n_marked = int((ids < n0).sum())
+        if n_inserted:
+            sel = np.flatnonzero(is_new)  # ids[sel] == n0 + arange(n_inserted)
+            kc = np.asarray(keycodes, dtype=np.int64)[sel]
             self.did.append(dids[sel])
-            self.keycode.append(keycodes[sel])
-            self.vis.append(vis_new)
-            self.emask.append(em_new)
+            self.keycode.append(kc)
+            zeros = np.zeros(n_inserted, dtype=np.uint64)
+            self.vis.append(zeros)
+            self.emask.append(zeros)
             for a in self.retained_attrs:
-                self.cols[a].append(np.asarray(cols[a][sel], dtype=np.float64))
-            for k, d in enumerate(dids[sel].tolist()):
-                idx_map[int(d)] = base + k
-            n_inserted = len(sel)
+                self.cols[a].append(np.asarray(cols[a], dtype=np.float64)[sel])
             self.rows_inserted += n_inserted
+        np.bitwise_or.at(self.vis.data, ids, vismask)
+        np.bitwise_or.at(self.emask.data, ids, emask)
+        self.rows_marked += n_marked
         return n_inserted, n_marked
 
     # -- grants ---------------------------------------------------------------
@@ -250,33 +249,97 @@ class SharedHashBuildState:
         return int(m.sum())
 
     # -- consumer side -------------------------------------------------------
-    def _ensure_index(self) -> None:
-        if self._index_built_upto == self.keycode.n and self._order is not None:
+    def _sync_index(self) -> None:
+        """Register entries appended since the last probe (lazy: the probe
+        index costs nothing while a state is only being built)."""
+        n = self.keycode.n
+        if self._indexed_upto < n:
+            self._index_append(self.keycode.data[self._indexed_upto :], self._indexed_upto)
+            self._indexed_upto = n
+
+    def _index_append(self, new_keycodes: np.ndarray, base: int) -> None:
+        """Register freshly appended entries with the incremental probe
+        index: unique keys land in the hash index; entries of duplicated
+        keys queue for the sorted-run delta merge."""
+        ent = base + np.arange(len(new_keycodes), dtype=np.int64)
+        kids, knew = self._kindex.lookup_or_insert(new_keycodes)
+        if knew.any():
+            ksel = np.flatnonzero(knew)
+            self._key_first.append(ent[ksel])
+            self._key_dup.append(np.zeros(len(ksel), dtype=np.bool_))
+        dup = ~knew
+        if dup.any():
+            dsel = np.flatnonzero(dup)
+            kd = kids[dsel]
+            fresh = np.unique(kd)
+            fresh = fresh[~self._key_dup.data[fresh]]
+            if len(fresh):
+                # key just became multi-entry: its first entry joins the run
+                self._key_dup.data[fresh] = True
+                first = self._key_first.data[fresh]
+                self._dup_pend_keys.append(self.keycode.data[first])
+                self._dup_pend_entries.append(first)
+            self._dup_pend_keys.append(new_keycodes[dsel])
+            self._dup_pend_entries.append(ent[dsel])
+
+    def _flush_dups(self) -> None:
+        """Merge the pending duplicate delta into the sorted run. Cost is
+        O(run + delta) per growth episode, and zero for unique-key states."""
+        if not self._dup_pend_keys:
             return
-        keys = self.keycode.data
-        self._order = np.argsort(keys, kind="stable")
-        self._sorted_keys = keys[self._order]
-        self._index_built_upto = self.keycode.n
+        dk = np.concatenate(self._dup_pend_keys)
+        de = np.concatenate(self._dup_pend_entries)
+        self._dup_pend_keys = []
+        self._dup_pend_entries = []
+        order = np.lexsort((de, dk))
+        dk, de = dk[order], de[order]
+        if len(self._dup_keys):
+            # delta entries of an existing key are younger than the run's:
+            # side='right' keeps within-key entry order = insertion order
+            pos = np.searchsorted(self._dup_keys, dk, side="right")
+            self._dup_keys = np.insert(self._dup_keys, pos, dk)
+            self._dup_entries = np.insert(self._dup_entries, pos, de)
+        else:
+            self._dup_keys, self._dup_entries = dk, de
 
     def probe(self, probe_keycodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Vectorized probe: returns (probe_row_idx, entry_idx) match pairs
-        — before any visibility filtering."""
+        — before any visibility filtering. Unique keys resolve through the
+        hash index in O(batch); multi-entry keys expand from the sorted
+        duplicate run. Match pairs are emitted probe-row-major with entries
+        in insertion order, matching the old sort-based probe exactly."""
         if self.keycode.n == 0 or len(probe_keycodes) == 0:
-            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
-        self._ensure_index()
-        sk, order = self._sorted_keys, self._order
-        lo = np.searchsorted(sk, probe_keycodes, side="left")
-        hi = np.searchsorted(sk, probe_keycodes, side="right")
-        counts = hi - lo
+            return _EMPTY_PAIR
+        self._sync_index()
+        self._flush_dups()
+        pk = np.asarray(probe_keycodes, dtype=np.int64)
+        kids = self._kindex.lookup(pk)
+        midx = np.flatnonzero(kids >= 0)
+        if len(midx) == 0:
+            return _EMPTY_PAIR
+        mk = kids[midx]
+        isdup = self._key_dup.data[mk]
+        single = midx[~isdup]
+        dup_rows = midx[isdup]
+        counts = np.zeros(len(pk), dtype=np.int64)
+        counts[single] = 1
+        if len(dup_rows):
+            lo = np.searchsorted(self._dup_keys, pk[dup_rows], side="left")
+            hi = np.searchsorted(self._dup_keys, pk[dup_rows], side="right")
+            counts[dup_rows] = hi - lo
         total = int(counts.sum())
-        if total == 0:
-            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
-        probe_idx = np.repeat(np.arange(len(probe_keycodes), dtype=np.int64), counts)
-        starts = np.repeat(lo, counts)
-        offs = np.arange(total, dtype=np.int64) - np.repeat(
-            np.concatenate(([0], np.cumsum(counts)[:-1])), counts
-        )
-        entry_idx = order[starts + offs]
+        probe_idx = np.repeat(np.arange(len(pk), dtype=np.int64), counts)
+        entry_idx = np.empty(total, dtype=np.int64)
+        offs = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        entry_idx[offs[single]] = self._key_first.data[mk[~isdup]]
+        if len(dup_rows):
+            c = hi - lo
+            nd = int(c.sum())
+            within = np.arange(nd, dtype=np.int64) - np.repeat(
+                np.concatenate(([0], np.cumsum(c)[:-1])), c
+            )
+            dpos = np.repeat(offs[dup_rows], c) + within
+            entry_idx[dpos] = self._dup_entries[np.repeat(lo, c) + within]
         return probe_idx, entry_idx
 
     def visible_mask(self, qid: int, entry_idx: np.ndarray) -> np.ndarray:
@@ -326,51 +389,60 @@ class SharedAggregateState:
     Input occurrences collapse into group accumulators, so the state cannot
     be repartitioned under a different predicate/grouping — sharing is
     all-or-nothing per identity, enforced by the signature. Supports
-    sum/count/avg/min/max and count(distinct expr) via a seen-set."""
+    sum/count/avg/min/max; group-id assignment and the count(distinct expr)
+    seen-pairs both run on batched ``MultiKeyIndex`` lookups (DESIGN.md §8)."""
 
-    def __init__(self, state_id: int, sig: Optional[StateSignature], group_keys: Tuple[str, ...], aggs):
+    def __init__(
+        self,
+        state_id: int,
+        sig: Optional[StateSignature],
+        group_keys: Tuple[str, ...],
+        aggs,
+        counters: Optional[Dict] = None,
+    ):
         self.state_id = state_id
         self.sig = sig
         self.group_keys = tuple(group_keys)
         self.aggs = tuple(aggs)
 
-        self._gid_of: Dict[Tuple, int] = {}
+        self._gidx = (
+            MultiKeyIndex(len(self.group_keys), counters=counters)
+            if self.group_keys
+            else None
+        )
+        self._global_ready = False  # global aggregate: single group, lazily init
         self.group_cols: List[GrowArray] = [GrowArray(np.float64) for _ in self.group_keys]
         self._acc: List[GrowArray] = [GrowArray(np.float64) for _ in self.aggs]
         self._counts = GrowArray(np.float64)
-        self._distinct_seen: List[set] = [set() if a.distinct else None for a in self.aggs]
+        self._distinct_idx: List[Optional[MultiKeyIndex]] = [
+            MultiKeyIndex(2, counters=counters) if a.distinct else None for a in self.aggs
+        ]
 
         self.complete = False
         self.refs: set = set()
         self.rows_consumed = 0
 
+    def _new_groups(self, n_new: int) -> None:
+        for acc, spec in zip(self._acc, self.aggs):
+            init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
+            acc.append(np.full(n_new, init))
+        self._counts.append(np.zeros(n_new))
+
     def _group_ids(self, keys: List[np.ndarray], n: int) -> np.ndarray:
         if not keys:
             # global aggregate: single group
-            if not self._gid_of:
-                self._gid_of[()] = 0
-                for acc, spec in zip(self._acc, self.aggs):
-                    init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
-                    acc.append(np.array([init]))
-                self._counts.append(np.zeros(1))
+            if not self._global_ready:
+                self._global_ready = True
+                self._new_groups(1)
             return np.zeros(n, dtype=np.int64)
-        stacked = np.stack(keys, axis=1)
-        uniq, inv = np.unique(stacked, axis=0, return_inverse=True)
-        gids = np.empty(len(uniq), dtype=np.int64)
-        for i, row in enumerate(uniq):
-            t = tuple(row.tolist())
-            g = self._gid_of.get(t)
-            if g is None:
-                g = len(self._gid_of)
-                self._gid_of[t] = g
-                for k, gc in enumerate(self.group_cols):
-                    gc.append(np.array([row[k]], dtype=np.float64))
-                for acc, spec in zip(self._acc, self.aggs):
-                    init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
-                    acc.append(np.array([init]))
-                self._counts.append(np.zeros(1))
-            gids[i] = g
-        return gids[np.asarray(inv).ravel()]
+        gids, is_new = self._gidx.lookup_or_insert(keys)
+        n_new = int(is_new.sum())
+        if n_new:
+            sel = np.flatnonzero(is_new)  # gids[sel] == old n_groups + arange
+            for k, gc in enumerate(self.group_cols):
+                gc.append(np.asarray(keys[k], dtype=np.float64)[sel])
+            self._new_groups(n_new)
+        return gids
 
     def update(
         self,
@@ -387,7 +459,7 @@ class SharedAggregateState:
         if n == 0:
             return
         gids = self._group_ids(key_cols, n)
-        ngroups = len(self._gid_of)
+        ngroups = self._counts.n
         self.rows_consumed += n
         if segment_sum is None:
             segment_sum = _bincount_segment_sum
@@ -396,14 +468,11 @@ class SharedAggregateState:
         for j, (acc, spec) in enumerate(zip(self._acc, self.aggs)):
             vals = agg_values[j]
             if spec.distinct:
-                # count(distinct expr): dedupe (group, value) pairs
-                pairs = np.stack([gids.astype(np.float64), vals], axis=1)
-                uniq = np.unique(pairs, axis=0)
-                seen = self._distinct_seen[j]
-                for g, v in uniq.tolist():
-                    if (g, v) not in seen:
-                        seen.add((g, v))
-                        acc.data[int(g)] += 1.0
+                # count(distinct expr): one batched lookup flags the
+                # never-seen (group, value) pairs
+                _, fresh = self._distinct_idx[j].lookup_or_insert([gids, vals])
+                if fresh.any():
+                    acc.data[:] += np.bincount(gids[fresh], minlength=ngroups)
             elif spec.func == "count":
                 acc.data[:] += cnt
             elif spec.func in ("sum", "avg"):
@@ -435,4 +504,4 @@ class SharedAggregateState:
 
     @property
     def n_groups(self) -> int:
-        return len(self._gid_of)
+        return self._counts.n

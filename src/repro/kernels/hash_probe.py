@@ -13,6 +13,13 @@ vectorized gathers+compares on the VPU — no pointer chasing.
 
 Unique-key tables only (FK-keyed dimension states); the engine routes
 multi-match states through the reference path.
+
+``hash_build_insert`` is the batch-insert companion: one kernel call builds
+the whole open-addressing table from a key batch (linear-probe placement,
+bounded by ``MAX_PROBE``; duplicate keys or over-long clusters clear the
+``ok`` flag so the caller can fall back). The placement loop is sequential
+in-kernel — the win over host insertion is batching the dispatch, so the
+backend keeps it opt-in off-TPU.
 """
 
 from __future__ import annotations
@@ -86,3 +93,62 @@ def hash_probe_lens(
         interpret=interpret,
     )(pk, table_keys, table_vis, query_mask)
     return out[:n]
+
+
+def _insert_kernel(keys_ref, tkeys_ref, tentry_ref, ok_ref):
+    cap = tkeys_ref.shape[0]
+    cap_mask = jnp.int32(cap - 1)
+    n = keys_ref.shape[0]
+    tkeys_ref[...] = jnp.full((cap,), jnp.int32(EMPTY), jnp.int32)
+    tentry_ref[...] = jnp.full((cap,), -1, jnp.int32)
+
+    def insert_one(i, ok):
+        key = keys_ref[i]
+        home = (key.astype(jnp.uint32) * jnp.uint32(MULT)).astype(jnp.int32) & cap_mask
+
+        def step(h, carry):
+            pos, state = carry  # state: 0=searching, 1=slot found, 2=duplicate
+            slot = (home + h) & cap_mask
+            cur = tkeys_ref[slot]
+            searching = state == 0
+            hit_empty = searching & (cur == jnp.int32(EMPTY))
+            hit_dup = searching & (cur == key)
+            pos = jnp.where(hit_empty, slot, pos)
+            state = jnp.where(hit_empty, 1, jnp.where(hit_dup, 2, state))
+            return pos, state
+
+        pos, state = jax.lax.fori_loop(
+            0, MAX_PROBE, step, (jnp.int32(0), jnp.int32(0))
+        )
+        # unconditional read-modify-write keeps the store branch-free
+        place = state == 1
+        tkeys_ref[pos] = jnp.where(place, key, tkeys_ref[pos])
+        tentry_ref[pos] = jnp.where(place, i.astype(jnp.int32), tentry_ref[pos])
+        return ok & place.astype(jnp.int32)
+
+    ok_ref[0] = jax.lax.fori_loop(0, n, insert_one, jnp.int32(1))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def hash_build_insert(
+    keys: jnp.ndarray,  # [N] int32, no EMPTY values
+    capacity: int,  # power of two, >= 2 * N
+    *,
+    interpret: bool = True,
+):
+    """Batch-insert ``keys`` into a fresh open-addressing table.
+
+    Returns ``(table_keys, table_entry, ok)``: the slab layout
+    ``hash_probe_lens`` consumes (entry i of the batch at its linear-probe
+    slot), with ``ok[0] == 0`` when a duplicate key or a probe chain
+    longer than ``MAX_PROBE`` makes the table unservable."""
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    return pl.pallas_call(
+        _insert_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .flash_attention import flash_attention
-from .hash_probe import EMPTY, hash_probe_lens
+from .hash_probe import EMPTY, hash_build_insert, hash_probe_lens
 from .linrec import linrec
 from .seg_aggregate import seg_aggregate
 
@@ -41,6 +41,23 @@ def build_hash_table(keys: np.ndarray, vis: np.ndarray, load: float = 0.5):
         tv[p] = vis[i]
         te[p] = i
     return jnp.asarray(tk), jnp.asarray(tv), jnp.asarray(te)
+
+
+def build_insert(keys, capacity=None, interpret=None):
+    """In-kernel batch build of the open-addressing table (the device-side
+    counterpart of ``build_hash_table``). Returns (table_keys, table_entry,
+    ok) — ``ok[0] == 0`` flags duplicate keys / over-long probe chains."""
+    interpret = default_interpret() if interpret is None else interpret
+    n = len(keys)
+    if capacity is None:
+        # default to <=25% load: keeps clusters well inside the kernel's
+        # bounded probe scan (callers managing their own tables pass cap)
+        capacity = 8
+        while capacity < 4 * n:
+            capacity *= 2
+    return hash_build_insert(
+        jnp.asarray(keys, jnp.int32), capacity=capacity, interpret=interpret
+    )
 
 
 def probe(probe_keys, table_keys, table_vis, query_mask, interpret=None):

@@ -1,0 +1,177 @@
+"""Properties of the vectorized hash-index data plane (DESIGN.md §8):
+dict parity of lookup_or_insert under duplicates/growth, tuple parity of
+MultiKeyIndex, and multi-match probe parity between the incremental state
+index and the old sort-based probe on random key multisets."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.descriptors import StateSignature
+from repro.core.hashindex import EMPTY_KEY, HashIndex, MultiKeyIndex, float_key_codes
+from repro.core.state import SharedHashBuildState
+
+
+# ---------------------------------------------------------------------------
+# HashIndex: dict parity
+# ---------------------------------------------------------------------------
+
+
+@given(
+    batches=st.lists(
+        st.lists(st.integers(-50, 50), min_size=1, max_size=40), min_size=1, max_size=6
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_lookup_or_insert_dict_parity(batches):
+    """ids and is_new match dict.setdefault(k, len(dict)) over the same
+    stream — including in-batch duplicates and growth across batches."""
+    idx = HashIndex(capacity=8)  # tiny: force rehash-under-growth
+    oracle = {}
+    for batch in batches:
+        keys = np.array(batch, dtype=np.int64)
+        ids, is_new = idx.lookup_or_insert(keys)
+        for i, k in enumerate(batch):
+            expect_new = k not in oracle
+            if expect_new:
+                oracle[k] = len(oracle)
+            assert ids[i] == oracle[k]
+            assert bool(is_new[i]) == expect_new
+        assert idx.n == len(oracle)
+    # lookups agree after all growth; absent keys miss
+    probe = np.array(list(oracle) + [10_000, -10_000], dtype=np.int64)
+    got = idx.lookup(probe)
+    for i, k in enumerate(probe.tolist()):
+        assert got[i] == oracle.get(k, -1)
+
+
+def test_hashindex_growth_counts_rebuilds():
+    counters = {"index_rebuilds": 0}
+    idx = HashIndex(capacity=8, counters=counters)
+    idx.lookup_or_insert(np.arange(1000, dtype=np.int64))
+    assert idx.rebuilds > 0
+    assert counters["index_rebuilds"] == idx.rebuilds
+    # all ids dense and in order
+    ids = idx.lookup(np.arange(1000, dtype=np.int64))
+    np.testing.assert_array_equal(ids, np.arange(1000))
+
+
+def test_hashindex_rejects_sentinel():
+    idx = HashIndex()
+    with pytest.raises(ValueError):
+        idx.lookup_or_insert(np.array([EMPTY_KEY], dtype=np.int64))
+
+
+def test_float_key_codes_negative_zero():
+    codes = float_key_codes(np.array([0.0, -0.0, 1.5]))
+    assert codes[0] == codes[1]  # -0.0 == 0.0 in float compare -> same code
+    assert codes[0] != codes[2]
+
+
+@given(
+    batches=st.lists(
+        st.lists(st.integers(0, 8), min_size=2, max_size=24), min_size=1, max_size=5
+    ),
+)
+@settings(max_examples=40, deadline=None)
+def test_multikey_index_tuple_parity(batches):
+    """MultiKeyIndex over (int, float) column pairs matches a tuple dict."""
+    idx = MultiKeyIndex(2)
+    oracle = {}
+    for batch in batches:
+        g = np.array(batch, dtype=np.int64)
+        v = (np.array(batch, dtype=np.float64) % 3) * 0.5
+        ids, is_new = idx.lookup_or_insert([g, v])
+        for i in range(len(batch)):
+            t = (int(g[i]), float(v[i]))
+            expect_new = t not in oracle
+            if expect_new:
+                oracle[t] = len(oracle)
+            assert ids[i] == oracle[t]
+            assert bool(is_new[i]) == expect_new
+    assert idx.n == len(oracle)
+
+
+# ---------------------------------------------------------------------------
+# Incremental multi-match probe index vs the old sort-based probe
+# ---------------------------------------------------------------------------
+
+
+def _sort_probe_oracle(keys: np.ndarray, pk: np.ndarray):
+    """The pre-PR probe: stable argsort + searchsorted expansion."""
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    lo = np.searchsorted(sk, pk, side="left")
+    hi = np.searchsorted(sk, pk, side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    probe_idx = np.repeat(np.arange(len(pk), dtype=np.int64), counts)
+    starts = np.repeat(lo, counts)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.concatenate(([0], np.cumsum(counts)[:-1])), counts
+    )
+    return probe_idx, order[starts + offs]
+
+
+def _mk_state():
+    sig = StateSignature("hash_build", ("t", ("k",), ("x",)))
+    return SharedHashBuildState(1, sig, ("k",), ("x",), did_domain=1 << 20)
+
+
+@given(
+    batches=st.lists(
+        st.lists(st.integers(0, 12), min_size=1, max_size=30), min_size=1, max_size=5
+    ),
+    probes=st.lists(st.integers(-2, 14), min_size=1, max_size=40),
+)
+@settings(max_examples=60, deadline=None)
+def test_incremental_probe_matches_sort_probe(batches, probes):
+    """Random key multisets, delivered incrementally (so the duplicate run
+    goes through delta merges), probe-identical to the old full-argsort
+    index — same pairs in the same order."""
+    s = _mk_state()
+    base = 0
+    for batch in batches:
+        kc = np.array(batch, dtype=np.int64)
+        dids = base + np.arange(len(kc), dtype=np.int64)  # unique: every row inserts
+        base += len(kc)
+        s.insert_or_mark(
+            dids,
+            kc,
+            {"k": kc.astype(np.float64), "x": kc.astype(np.float64)},
+            np.full(len(kc), np.uint64(1)),
+            np.zeros(len(kc), np.uint64),
+        )
+        pk = np.array(probes, dtype=np.int64)
+        got_p, got_e = s.probe(pk)
+        want_p, want_e = _sort_probe_oracle(s.keycode.data, pk)
+        np.testing.assert_array_equal(got_p, want_p)
+        np.testing.assert_array_equal(got_e, want_e)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_incremental_probe_random_multisets(seed):
+    """Larger random multisets: growth across many batches, skewed keys."""
+    rng = np.random.default_rng(seed)
+    s = _mk_state()
+    base = 0
+    for _ in range(4):
+        nb = int(rng.integers(1, 200))
+        kc = rng.integers(0, 50, nb).astype(np.int64)
+        dids = base + np.arange(nb, dtype=np.int64)
+        base += nb
+        s.insert_or_mark(
+            dids,
+            kc,
+            {"k": kc.astype(np.float64), "x": kc.astype(np.float64)},
+            np.full(nb, np.uint64(1)),
+            np.zeros(nb, np.uint64),
+        )
+    pk = rng.integers(-5, 60, 300).astype(np.int64)
+    got_p, got_e = s.probe(pk)
+    want_p, want_e = _sort_probe_oracle(s.keycode.data, pk)
+    np.testing.assert_array_equal(got_p, want_p)
+    np.testing.assert_array_equal(got_e, want_e)

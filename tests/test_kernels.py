@@ -27,6 +27,28 @@ def test_hash_probe_sweep(n_keys, n_probe, vis_density):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("n_keys", [64, 1000, 5000])
+def test_hash_build_insert_roundtrip(n_keys):
+    """The in-kernel batch insert builds a table the probe kernel resolves:
+    every inserted key probes back to its batch index."""
+    rng = np.random.default_rng(n_keys)
+    keys = rng.choice(1 << 20, n_keys, replace=False).astype(np.int32)
+    tk, te, ok = ops.build_insert(keys)
+    tk, te = np.asarray(tk), np.asarray(te)
+    assert np.asarray(ok)[0] == 1
+    vis = jnp.ones(tk.shape[0], jnp.uint32)
+    found = np.asarray(ops.probe(keys, jnp.asarray(tk), vis, np.uint32(1)))
+    assert (found >= 0).all()
+    np.testing.assert_array_equal(te[found], np.arange(n_keys))
+
+
+def test_hash_build_insert_flags_duplicates():
+    """Duplicate keys make the table unservable: ok must clear so the
+    backend can fall back to the reference probe."""
+    _, _, ok = ops.build_insert(np.array([7, 9, 7], np.int32))
+    assert np.asarray(ok)[0] == 0
+
+
 @pytest.mark.parametrize("n,v,g", [(100, 1, 8), (3000, 8, 64), (10000, 4, 200)])
 @pytest.mark.parametrize("dtype", [np.float32, np.float64])
 def test_seg_aggregate_sweep(n, v, g, dtype):
