@@ -31,11 +31,23 @@ def get_db(sf: float = DEFAULT_SF):
     return tpch.get_database(sf)
 
 
-def open_session(db, mode: str, wall: bool = False) -> graftdb.Session:
-    """One place where every benchmark obtains its engine: the Session API."""
+def open_session(
+    db, mode: str, wall: bool = False, workers: int = 1, partitions: int = 1
+) -> graftdb.Session:
+    """One place where every benchmark obtains its engine: the Session API.
+
+    Paper figures pin workers=partitions=1 (the prototype's single-worker
+    loop, byte-stable across PRs); the partition-parallel grid lives in
+    scale_sweep.py."""
     return graftdb.connect(
         db,
-        EngineConfig(mode=mode, morsel_size=MORSEL, clock="wall" if wall else "work"),
+        EngineConfig(
+            mode=mode,
+            morsel_size=MORSEL,
+            clock="wall" if wall else "work",
+            workers=workers,
+            partitions=partitions,
+        ),
     )
 
 
@@ -54,10 +66,12 @@ def client_sequences(db, n_clients: int, n_per: int, seed: int, zipf_alpha: floa
     return seqs
 
 
-def run_closed_loop(db, mode: str, seqs, wall: bool = False) -> Dict:
+def run_closed_loop(
+    db, mode: str, seqs, wall: bool = False, workers: int = 1, partitions: int = 1
+) -> Dict:
     """Closed loop: each client has one outstanding query; submits the next
     on completion (paper §6.3). Returns throughput/latency/counters."""
-    session = open_session(db, mode, wall=wall)
+    session = open_session(db, mode, wall=wall, workers=workers, partitions=partitions)
     idx = {c: 0 for c in range(len(seqs))}
     owner: Dict[int, int] = {}
     for c, seq in enumerate(seqs):

@@ -1,0 +1,131 @@
+"""Partition-parallel scale sweep: modeled throughput vs workers×partitions.
+
+Replays ONE fixed Poisson arrival trace of TPC-H-derived queries (the same
+graft-mode arrival-sweep workload family as fig6/fig10) through the
+partition-parallel pool at every grid point and records modeled throughput
+(completed / virtual makespan) plus per-worker utilization. The offered
+load saturates a single worker, so the sweep exposes the pool's capacity
+scaling; `speedup_vs_1x1` at `workers=4` is the PR's acceptance number
+(>= 2x on the graft sweep).
+
+Writes ``BENCH_scale.json`` at the repo root (same schema discipline as
+``BENCH_core.json``) so subsequent PRs have a recorded scaling trajectory.
+
+  PYTHONPATH=src python -m benchmarks.scale_sweep            # full sweep
+  PYTHONPATH=src python -m benchmarks.scale_sweep --smoke    # CI smoke job
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+import graftdb
+from graftdb import EngineConfig
+from repro.relational import queries
+
+from .common import MORSEL, get_db
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+GRID = [(1, 1), (1, 8), (2, 4), (2, 8), (4, 4), (4, 8), (8, 8), (8, 16)]
+SMOKE_GRID = [(1, 1), (2, 4), (4, 8)]
+
+
+def make_trace(db, n_arrivals: int, offered_qph: float, seed: int = 11):
+    """One fixed Poisson arrival trace shared by every grid point."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(3600.0 / offered_qph, n_arrivals)
+    times = np.cumsum(gaps)
+    qrng = np.random.default_rng(seed + 1)
+    return [(queries.sample_query(db, qrng, arrival=float(t))) for t in times]
+
+
+def run_point(db, mode: str, workers: int, partitions: int, trace_params) -> Dict:
+    n_arrivals, offered_qph, seed = trace_params
+    arrivals = make_trace(db, n_arrivals, offered_qph, seed)
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode=mode,
+            morsel_size=MORSEL,
+            workers=workers,
+            partitions=partitions,
+        ),
+    )
+    futs = session.submit_all(arrivals)
+    session.run()
+    elapsed = session.now
+    lats = np.array([f.latency() for f in futs])
+    w = session.worker_stats()
+    return {
+        "mode": mode,
+        "workers": workers,
+        "partitions": partitions,
+        "completed": len(futs),
+        "elapsed_s": round(elapsed, 6),
+        "throughput_qph": round(len(futs) / elapsed * 3600.0, 2) if elapsed > 0 else 0.0,
+        "median_latency_s": round(float(np.median(lats)), 6),
+        "p95_latency_s": round(float(np.percentile(lats, 95)), 6),
+        "mean_utilization": round(float(np.mean(w["utilization"])), 4),
+        "partition_merges": int(session.counters.get("partition_merges", 0)),
+        "partition_probe_merges": int(session.counters.get("partition_probe_merges", 0)),
+    }
+
+
+def run(smoke: bool = False, sf: float = None, modes: List[str] = ("graft", "isolated")) -> Dict:
+    sf = sf if sf is not None else (0.01 if smoke else 0.05)
+    grid = SMOKE_GRID if smoke else GRID
+    n_arrivals = 12 if smoke else 60
+    offered_qph = 1e9  # saturating: all arrivals land near t=0 in virtual time
+    db = get_db(sf)
+    trace_params = (n_arrivals, offered_qph, 11)
+    rows = []
+    base: Dict[str, float] = {}
+    for mode in modes:
+        for workers, partitions in grid:
+            r = run_point(db, mode, workers, partitions, trace_params)
+            key = (mode,)
+            if (workers, partitions) == (1, 1):
+                base[mode] = r["throughput_qph"]
+            r["speedup_vs_1x1"] = (
+                round(r["throughput_qph"] / base[mode], 3) if base.get(mode) else None
+            )
+            rows.append(r)
+            print(
+                f"{mode:9s} workers={workers} partitions={partitions:2d} "
+                f"thpt={r['throughput_qph']:10.1f} qph  "
+                f"x{r['speedup_vs_1x1']}  util={r['mean_utilization']:.2f}",
+                flush=True,
+            )
+    out = {
+        "bench": "graftdb_scale_sweep",
+        "version": 1,
+        "smoke": smoke,
+        "sf": sf,
+        "n_arrivals": n_arrivals,
+        "morsel_size": MORSEL,
+        "grid": rows,
+    }
+    (REPO_ROOT / "BENCH_scale.json").write_text(json.dumps(out, indent=1))
+    graft4 = [
+        r
+        for r in rows
+        if r["mode"] == "graft" and r["workers"] == 4 and r["speedup_vs_1x1"]
+    ]
+    if graft4:
+        best = max(r["speedup_vs_1x1"] for r in graft4)
+        print(f"# graft-mode speedup at workers=4: {best}x (acceptance: >= 2x)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--sf", type=float, default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, sf=args.sf)

@@ -17,12 +17,14 @@ def main():
     db = get_db(0.05)
     seqs = client_sequences(db, n_clients=16, n_per=10, seed=3)
     base = None
-    for mode in ("isolated", "qpipe_osp", "graft"):
-        r = run_closed_loop(db, mode, seqs)
+    grid = [("isolated", 1, 1), ("qpipe_osp", 1, 1), ("graft", 1, 1), ("graft", 4, 8)]
+    for mode, workers, partitions in grid:
+        r = run_closed_loop(db, mode, seqs, workers=workers, partitions=partitions)
         if base is None:
             base = r["throughput_qph"]
+        label = mode if workers == 1 else f"{mode} {workers}w×{partitions}p"
         print(
-            f"{mode:12s} throughput {r['throughput_qph']:9.0f} q/h "
+            f"{label:16s} throughput {r['throughput_qph']:9.0f} q/h "
             f"({r['throughput_qph']/base:4.2f}x) median latency {r['median_latency_s']:6.3f}s "
             f"p95 {r['p95_latency_s']:6.3f}s"
         )

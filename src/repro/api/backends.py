@@ -53,8 +53,9 @@ class ExecutionBackend(Protocol):
 
 
 class ReferenceBackend:
-    """NumPy data plane — delegates to the state's own sort-based probe and
-    the core bincount reduction (the same code that runs with no backend)."""
+    """NumPy data plane — delegates to the state's own incremental probe
+    index (shard-routed under ``n_partitions > 1``, DESIGN.md §9) and the
+    core bincount reduction (the same code that runs with no backend)."""
 
     name = "reference"
 
@@ -63,6 +64,9 @@ class ReferenceBackend:
 
     def segment_sum(self, gids, values, n_groups):
         return _bincount_segment_sum(gids, values, n_groups)
+
+    def stats(self) -> dict:
+        return {}
 
 
 class _ProbeTable:
@@ -154,6 +158,20 @@ class PallasBackend:
         self.kernel_probes = 0
         self.kernel_lens_probes = 0
         self.fallback_probes = 0
+
+    def stats(self) -> dict:
+        """Kernel-dispatch counters (surfaced via ``Session.stats``).
+
+        Partitioned states (``n_partitions > 1``) need no special casing
+        here: the probe-table mirror is built from the state's global
+        keycode SoA, whose entry ids are partition-independent (§9) — each
+        (fragment × partition) unit simply lands its own batched kernel
+        call, which is the real per-partition work the pool models."""
+        return {
+            "kernel_probes": self.kernel_probes,
+            "kernel_lens_probes": self.kernel_lens_probes,
+            "fallback_probes": self.fallback_probes,
+        }
 
     # -- probe ---------------------------------------------------------------
     def probe(self, state, keycodes):

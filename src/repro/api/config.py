@@ -9,7 +9,8 @@ actionable messages, not deep inside the engine.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import os
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Union
 
 from ..core.engine import DEFAULT_COST_MODEL, MODES
@@ -18,6 +19,15 @@ from ..core.scheduler import WallClock, WorkClock
 CLOCKS = ("work", "wall")
 BACKENDS = ("reference", "pallas")
 RETENTION_POLICIES = ("refcount",)  # paper §6.1: release at zero references
+
+
+def _default_workers() -> int:
+    """Session default worker count; the CI matrix leg sets
+    ``GRAFTDB_TEST_WORKERS=4`` to run the whole suite partition-parallel."""
+    try:
+        return max(1, int(os.environ.get("GRAFTDB_TEST_WORKERS", "1")))
+    except ValueError:
+        return 1
 
 
 @dataclass(frozen=True)
@@ -41,7 +51,14 @@ class EngineConfig:
     * ``zone_maps`` — beyond-paper morsel skipping on min/max zones.
     * ``capture_explain`` — record a structured grafting explanation
       (``QueryFuture.explain()``) at each query's admission.
-    * ``max_steps`` — executor livelock bound.
+    * ``max_steps`` — executor livelock bound (threaded into ``Runner.run``).
+    * ``workers`` — logical worker count of the partition-parallel pool
+      (DESIGN.md §9); defaults to ``$GRAFTDB_TEST_WORKERS`` or 1. Virtual
+      clocks only: ``workers > 1`` requires ``clock="work"`` or a factory.
+    * ``partitions`` — data partitions per scan/state (None = ``workers``).
+      ``workers=1, partitions=1`` is byte-identical to the seed engine.
+    * ``max_sleep_s`` — WallClock sleep cap: longer idle gaps are skipped
+      virtually instead of blocking (None = sleep the full gap).
     """
 
     mode: str = "graft"
@@ -53,6 +70,9 @@ class EngineConfig:
     zone_maps: bool = False
     capture_explain: bool = False
     max_steps: int = 50_000_000
+    workers: int = field(default_factory=_default_workers)
+    partitions: Optional[int] = None
+    max_sleep_s: Optional[float] = 0.25
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -85,11 +105,54 @@ class EngineConfig:
                 raise ValueError(f"unknown cost_model keys: {sorted(unknown)}")
         if self.max_steps <= 0:
             raise ValueError(f"max_steps must be positive, got {self.max_steps!r}")
+        if not isinstance(self.workers, int) or self.workers < 1:
+            raise ValueError(f"workers must be a positive int, got {self.workers!r}")
+        if self.partitions is not None and (
+            not isinstance(self.partitions, int) or self.partitions < 1
+        ):
+            raise ValueError(
+                f"partitions must be a positive int or None (= workers), got {self.partitions!r}"
+            )
+        if self.workers > 1 and self._wall_clocked():
+            # N logical workers advance N independent virtual clocks; a
+            # wall clock (class, instance, or one shared instance) cannot
+            # model that.
+            if self.workers == _default_workers():
+                # the worker count came from the GRAFTDB_TEST_WORKERS
+                # default, not an explicit request: wall-clock sessions
+                # stay single-worker instead of failing unrelated scripts
+                object.__setattr__(self, "workers", 1)
+            else:
+                raise ValueError(
+                    "workers > 1 requires a virtual clock: use clock='work' or a clock factory"
+                )
+        if self.max_sleep_s is not None and self.max_sleep_s <= 0:
+            raise ValueError(f"max_sleep_s must be positive or None, got {self.max_sleep_s!r}")
+
+    def _wall_clocked(self) -> bool:
+        """The configured clock is real-time: the 'wall' name, the
+        WallClock class itself, or any non-factory instance."""
+        if self.clock == "wall":
+            return True
+        if isinstance(self.clock, type):
+            return issubclass(self.clock, WallClock)
+        return not isinstance(self.clock, str) and not callable(self.clock) and hasattr(
+            self.clock, "now"
+        )
+
+    @property
+    def n_partitions(self) -> int:
+        """Resolved partition count (``partitions`` defaulting to ``workers``)."""
+        return self.partitions if self.partitions is not None else self.workers
 
     # -- factories -----------------------------------------------------------
     def make_clock(self):
         if isinstance(self.clock, str):
-            return WallClock() if self.clock == "wall" else WorkClock()
+            return (
+                WallClock(max_sleep_s=self.max_sleep_s)
+                if self.clock == "wall"
+                else WorkClock()
+            )
         # A class counts as a factory even when it defines `now` as a
         # class-level property (hasattr(WallClock, "now") is True).
         if isinstance(self.clock, type) or (
@@ -97,6 +160,16 @@ class EngineConfig:
         ):
             return self.clock()  # factory/class: fresh clock per session
         return self.clock  # explicit instance: shared across sessions
+
+    def clock_factory(self):
+        """Zero-arg per-worker clock factory (workers > 1 pools).
+
+        Validation guarantees the clock is virtual here: 'wall', the
+        WallClock class, and bare instances all either raised or downgraded
+        the session to workers=1 in ``__post_init__``."""
+        if isinstance(self.clock, str):
+            return WorkClock
+        return self.clock
 
     def make_backend(self):
         from .backends import resolve_backend

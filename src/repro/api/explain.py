@@ -25,8 +25,17 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from ..core.descriptors import aggregate_signature, hash_build_signature
-from ..core.grafting import all_boundaries, build_spine, estimate_demand, plan_spine
+from ..core.grafting import (
+    all_boundaries,
+    build_spine,
+    demand_keycodes,
+    estimate_demand,
+    plan_spine,
+)
+from ..core.hashindex import key_partition
 from ..core.plans import HashJoin, Query
 from ..core.predicates import Conjunction
 from ..core.runtime import ALL_EXTENTS
@@ -35,7 +44,12 @@ from ..core.plans import collect_subtree_pred
 
 @dataclass(frozen=True)
 class BoundaryExplain:
-    """One stateful hash-build boundary's attachment decision."""
+    """One stateful hash-build boundary's attachment decision.
+
+    The ``part_*`` tuples split the same accounting by key-hash partition
+    (DESIGN.md §9): element p covers the demand rows whose build key hashes
+    to state shard p. Per partition (and therefore in total)
+    ``represented + residual + unattached == demand`` exactly."""
 
     build_table: str  # base table at the bottom of the build spine
     depth: int  # 0 = innermost spine boundary; nested boundaries indent
@@ -46,6 +60,10 @@ class BoundaryExplain:
     unattached_rows: int
     state_id: Optional[int] = None  # selected shared state (None = fresh)
     nested: Tuple["BoundaryExplain", ...] = ()
+    part_demand_rows: Tuple[int, ...] = ()
+    part_represented_rows: Tuple[int, ...] = ()
+    part_residual_rows: Tuple[int, ...] = ()
+    part_unattached_rows: Tuple[int, ...] = ()
 
     def flat(self) -> List["BoundaryExplain"]:
         out = [self]
@@ -88,6 +106,24 @@ class GraftExplain:
     def unattached_rows(self) -> int:
         return sum(b.unattached_rows for b in self._all())
 
+    def partition_totals(self) -> List[dict]:
+        """Per-key-partition roll-up across all boundaries (§9): each entry
+        partitions its shard's demand exactly into represented + residual +
+        unattached, and the shard demands sum to ``total_demand_rows``."""
+        n_parts = max((len(b.part_demand_rows) for b in self._all()), default=0)
+        out = []
+        for p in range(n_parts):
+            row = {"partition": p, "demand_rows": 0, "represented_rows": 0,
+                   "residual_rows": 0, "unattached_rows": 0}
+            for b in self._all():
+                if p < len(b.part_demand_rows):
+                    row["demand_rows"] += b.part_demand_rows[p]
+                    row["represented_rows"] += b.part_represented_rows[p]
+                    row["residual_rows"] += b.part_residual_rows[p]
+                    row["unattached_rows"] += b.part_unattached_rows[p]
+            out.append(row)
+        return out
+
     def to_dict(self) -> dict:
         return {
             "qid": self.qid,
@@ -99,6 +135,7 @@ class GraftExplain:
             "represented_rows": self.represented_rows,
             "residual_rows": self.residual_rows,
             "unattached_rows": self.unattached_rows,
+            "partition_totals": self.partition_totals(),
             "boundaries": [
                 {
                     "build_table": b.build_table,
@@ -109,6 +146,10 @@ class GraftExplain:
                     "residual_rows": b.residual_rows,
                     "unattached_rows": b.unattached_rows,
                     "state_id": b.state_id,
+                    "part_demand_rows": list(b.part_demand_rows),
+                    "part_represented_rows": list(b.part_represented_rows),
+                    "part_residual_rows": list(b.part_residual_rows),
+                    "part_unattached_rows": list(b.part_unattached_rows),
                 }
                 for root in self.boundaries
                 for b in root.flat()
@@ -123,6 +164,14 @@ class GraftExplain:
             f"  demand {self.total_demand_rows:,} rows = represented {self.represented_rows:,}"
             f" + residual {self.residual_rows:,} + unattached {self.unattached_rows:,}",
         ]
+        ptotals = self.partition_totals()
+        if len(ptotals) > 1:
+            for row in ptotals:
+                lines.append(
+                    f"  partition {row['partition']}: demand {row['demand_rows']:,}"
+                    f" (rep {row['represented_rows']:,} / res {row['residual_rows']:,}"
+                    f" / ord {row['unattached_rows']:,})"
+                )
         for root in self.boundaries:
             for b in root.flat():
                 pad = "    " + "  " * b.depth
@@ -184,8 +233,25 @@ def _build_table(join: HashJoin) -> str:
     return bscan.table
 
 
+def _demand_split(engine, join: HashJoin, demand: int) -> np.ndarray:
+    """Key-hash partition split of this boundary's isolated-plan demand
+    (sums to ``estimate_demand`` exactly — same row set, same masks).
+    Unpartitioned engines short-circuit: the split is trivially [demand]
+    and the per-row keycode pass is skipped."""
+    if engine.n_partitions == 1:
+        return np.array([demand], dtype=np.int64)
+    codes = demand_keycodes(engine, join.build, tuple(join.build_keys))
+    parts = key_partition(codes, engine.n_partitions)
+    return np.bincount(parts, minlength=engine.n_partitions).astype(np.int64)
+
+
+def _zeros_like(split: np.ndarray) -> Tuple[int, ...]:
+    return tuple(0 for _ in split)
+
+
 def _eliminated(engine, join: HashJoin, depth: int) -> BoundaryExplain:
     demand = estimate_demand(engine, join.build)
+    split = _demand_split(engine, join, demand)
     return BoundaryExplain(
         build_table=_build_table(join),
         depth=depth,
@@ -194,6 +260,10 @@ def _eliminated(engine, join: HashJoin, depth: int) -> BoundaryExplain:
         represented_rows=demand,
         residual_rows=0,
         unattached_rows=0,
+        part_demand_rows=tuple(int(x) for x in split),
+        part_represented_rows=tuple(int(x) for x in split),
+        part_residual_rows=_zeros_like(split),
+        part_unattached_rows=_zeros_like(split),
     )
 
 
@@ -204,6 +274,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
     b_q = Conjunction.from_pred(collect_subtree_pred(join.build))
     demand = estimate_demand(engine, join.build)
     table = _build_table(join)
+    split = _demand_split(engine, join, demand)
 
     candidate = None
     if mode.share_state:
@@ -240,8 +311,18 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                     unattached_rows=0,
                     state_id=candidate.state_id,
                     nested=nested,
+                    part_demand_rows=tuple(int(x) for x in split),
+                    part_represented_rows=tuple(int(x) for x in split),
+                    part_residual_rows=_zeros_like(split),
+                    part_unattached_rows=_zeros_like(split),
                 )
-            granted = min(candidate.count_granted(allowed, b_ret), demand)
+            # per-shard grant counts, each capped by that shard's demand so
+            # the per-partition identity rep + res == demand holds exactly
+            granted_parts = candidate.count_granted_by_part(
+                allowed, b_ret, engine.n_partitions
+            )
+            rep_parts = np.minimum(granted_parts, split)
+            granted = int(rep_parts.sum())
             nested = tuple(
                 _explain_boundary(engine, up, depth + 1)
                 for up in _build_joins(join)
@@ -256,6 +337,10 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                 unattached_rows=0,
                 state_id=candidate.state_id,
                 nested=nested,
+                part_demand_rows=tuple(int(x) for x in split),
+                part_represented_rows=tuple(int(x) for x in rep_parts),
+                part_residual_rows=tuple(int(x) for x in (split - rep_parts)),
+                part_unattached_rows=_zeros_like(split),
             )
 
     # Residual-only attachment: all demand flows through a residual producer.
@@ -273,6 +358,10 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
             unattached_rows=0,
             state_id=candidate.state_id,
             nested=nested,
+            part_demand_rows=tuple(int(x) for x in split),
+            part_represented_rows=_zeros_like(split),
+            part_residual_rows=tuple(int(x) for x in split),
+            part_unattached_rows=_zeros_like(split),
         )
 
     # Ordinary-plan work (a fresh state; QPipe merges still execute the same
@@ -290,6 +379,10 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
         unattached_rows=demand,
         state_id=None,
         nested=nested,
+        part_demand_rows=tuple(int(x) for x in split),
+        part_represented_rows=_zeros_like(split),
+        part_residual_rows=_zeros_like(split),
+        part_unattached_rows=tuple(int(x) for x in split),
     )
 
 

@@ -81,11 +81,19 @@ class QueryFuture:
             "attached_state_ids": [s.state_id for s in h.attached_states],
             # shared-data-plane perf counters (engine-wide: one shared
             # execution serves every query, so the work is not per-query
-            # attributable — DESIGN.md §8)
+            # attributable — DESIGN.md §8/§9)
             "counters": {
                 k: int(eng_counters.get(k, 0))
-                for k in ("index_rebuilds", "kernel_lens_probes", "fused_filter_rows")
+                for k in (
+                    "index_rebuilds",
+                    "kernel_lens_probes",
+                    "fused_filter_rows",
+                    "partition_merges",
+                    "partition_probe_merges",
+                )
             },
+            # partition-parallel pool utilization (engine-wide, §9)
+            "workers": self._session.worker_stats(),
         }
 
     def explain(self):

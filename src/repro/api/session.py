@@ -42,8 +42,16 @@ class Session:
             cost_model=self.config.cost_model,
             zone_maps=self.config.zone_maps,
             backend=self.backend,
+            partitions=self.config.n_partitions,
         )
-        self._runner = Runner(self._engine, clock=self.config.make_clock())
+        if self.config.workers == 1:
+            self._runner = Runner(self._engine, clock=self.config.make_clock())
+        else:
+            self._runner = Runner(
+                self._engine,
+                workers=self.config.workers,
+                clock_factory=self.config.clock_factory(),
+            )
         if self.config.capture_explain:
             self._runner.submit_hook = self._capture_explain
         self._futures: Dict[int, QueryFuture] = {}
@@ -146,11 +154,21 @@ class Session:
         tests and diagnostics only."""
         return self._engine
 
+    def worker_stats(self) -> Dict[str, object]:
+        """Per-worker utilization of the partition-parallel pool (§9)."""
+        return self._runner.worker_stats()
+
     def stats(self) -> Dict[str, float]:
         out = self._engine.stats()
         out["now_s"] = self.now
         out["mode"] = self.mode
         out["backend"] = self.backend.name
+        out["workers"] = self.config.workers
+        out["partitions"] = self._engine.n_partitions
+        backend_stats = getattr(self.backend, "stats", None)
+        if backend_stats is not None:
+            for k, v in backend_stats().items():
+                out[f"backend_{k}"] = v
         return out
 
     # -- lifecycle -----------------------------------------------------------

@@ -36,7 +36,7 @@ from .predicates import (
     pred_and,
     prove_implies,
 )
-from .scheduler import Runner, WallClock, WorkClock
+from .scheduler import PoolClock, Runner, WallClock, WorkClock
 
 __all__ = [
     "GraftEngine",
@@ -45,6 +45,7 @@ __all__ = [
     "Runner",
     "WorkClock",
     "WallClock",
+    "PoolClock",
     "Query",
     "Scan",
     "HashJoin",

@@ -23,12 +23,16 @@ class DagNode:
 class DagSnapshot:
     nodes: List[DagNode] = field(default_factory=list)
     data_edges: List[Tuple[object, object]] = field(default_factory=list)
-    state_ref_edges: List[Tuple[object, object, int, bool]] = field(default_factory=list)
-    # (consumer pipeline, state, qid, gate_open)
+    state_ref_edges: List[Tuple[object, object, int, bool, Tuple[int, int]]] = field(
+        default_factory=list
+    )
+    # (consumer pipeline, state, qid, gate_open, partition_frontier):
+    # the frontier is (delivered, total) producer scan-partition units
+    # still gating this edge (DESIGN.md §9) — (0, 0) once nothing pends
 
     def dep_edges(self):
         return [(a, b) for a, b in self.data_edges] + [
-            (s, p) for p, s, _, _ in self.state_ref_edges
+            (s, p) for p, s, *_ in self.state_ref_edges
         ]
 
 
@@ -55,7 +59,9 @@ def snapshot(engine) -> DagSnapshot:
                     if sid not in seen_states:
                         seen_states.add(sid)
                         snap.nodes.append(DagNode("state", sid))
-                    snap.state_ref_edges.append((p.key, sid, m.qid, g.open()))
+                    snap.state_ref_edges.append(
+                        (p.key, sid, m.qid, g.open(), g.partition_frontier())
+                    )
     return snap
 
 

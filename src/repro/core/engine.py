@@ -111,6 +111,7 @@ class GraftEngine:
         cost_model: Optional[Dict[str, float]] = None,
         zone_maps: bool = False,
         backend=None,
+        partitions: int = 1,
     ):
         self.db = db
         self.mode = MODES[mode]
@@ -120,6 +121,12 @@ class GraftEngine:
         # Data-plane backend (api/backends.py ExecutionBackend); None keeps
         # the built-in NumPy paths (state.probe / np.bincount reductions).
         self.backend = backend
+        # Partition-parallel data plane (DESIGN.md §9): scans shard into
+        # P morsel ranges, states shard their indexes / partial aggregates
+        # P ways. P == 1 is byte-identical to the seed single-stream engine.
+        if not isinstance(partitions, int) or partitions < 1:
+            raise ValueError(f"partitions must be a positive int, got {partitions!r}")
+        self.n_partitions = partitions
 
         self.scans: Dict[object, ScanNode] = {}
         self.pipelines: Dict[object, Pipeline] = {}
@@ -132,7 +139,13 @@ class GraftEngine:
         self.counters: Dict[str, float] = defaultdict(float)
         # data-plane perf counters surfaced via QueryFuture.stats — present
         # (zero) from the start so stats dicts are shape-stable
-        for k in ("index_rebuilds", "kernel_lens_probes", "fused_filter_rows"):
+        for k in (
+            "index_rebuilds",
+            "kernel_lens_probes",
+            "fused_filter_rows",
+            "partition_merges",
+            "partition_probe_merges",
+        ):
             self.counters[k] = 0.0
         self.demand_cache: Dict = {}
         self._domains: Dict[str, int] = {}
@@ -162,7 +175,11 @@ class GraftEngine:
         if node is None:
             self._next_sid += 1
             node = ScanNode(
-                self._next_sid, self.db[table], self.morsel_size, zone_maps=self.zone_maps
+                self._next_sid,
+                self.db[table],
+                self.morsel_size,
+                zone_maps=self.zone_maps,
+                n_partitions=self.n_partitions,
             )
             self.scans[key] = node
         return node
@@ -176,6 +193,7 @@ class GraftEngine:
             tuple(join.payload),
             did_domain,
             counters=self.counters,
+            n_partitions=self.n_partitions,
         )
 
     # -- submission (query grafting, §5.2) ------------------------------------
@@ -227,6 +245,7 @@ class GraftEngine:
             tuple(agg.group_keys),
             tuple(agg.aggs),
             counters=self.counters,
+            n_partitions=self.n_partitions,
         )
         agg_state.attach(handle.qid)
         handle.agg_state = agg_state
@@ -272,6 +291,14 @@ class GraftEngine:
         return False
 
     # -- events ----------------------------------------------------------------
+    def on_member_part_finished(self, pipeline: Pipeline, m: Member, part: int) -> None:
+        """One scan partition of a member's delivery cycle completed: push
+        the per-partition extent frontier (§9) of its build target."""
+        if pipeline.build_target is not None and m.eid >= 0:
+            pipeline.build_target.state.complete_extent_partition(
+                m.eid, part, pipeline.source.n_partitions
+            )
+
     def on_member_finished(self, pipeline: Pipeline, m: Member) -> None:
         pipeline.slots.release(m.mid)
         if pipeline.build_target is not None:
@@ -290,12 +317,19 @@ class GraftEngine:
     _dirty = False
 
     def check_activations(self) -> None:
+        now = self.clock.now if self.clock is not None else 0.0
         for pipeline in list(self.pipelines.values()):
             for m in pipeline.members:
                 if m.activatable():
                     m.active = True
                     m.received = 0
                     m.need = pipeline.source.n_morsels
+                    m.part_received = np.zeros(pipeline.source.n_partitions, dtype=np.int64)
+                    m.part_need = pipeline.source.part_counts.copy()
+                    # barrier timestamp: a worker picking this member's
+                    # fragment first advances to the activation time (§9
+                    # max-at-barrier clock merge)
+                    m.t_activated = now
 
     def sweep_completions(self) -> List[QueryHandle]:
         done: List[QueryHandle] = []

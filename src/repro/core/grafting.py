@@ -149,6 +149,36 @@ def _subtree_count(engine, node: PlanNode, need_keys: Optional[Tuple[str, ...]])
     return result
 
 
+def demand_keycodes(engine, node: PlanNode, key_attrs: Tuple[str, ...]) -> np.ndarray:
+    """Per-row key codes (``key_attrs``) of every row an isolated execution
+    would feed into the enclosing boundary's hash build — the non-unique
+    companion of ``estimate_demand`` (len(codes) == demand). EXPLAIN GRAFT
+    splits these by ``key_partition`` for the per-partition demand
+    accounting (DESIGN.md §9)."""
+    key = ("demand_codes", id(node.__class__), _node_cache_key(node), key_attrs)
+    cached = engine.demand_cache.get(key)
+    if cached is not None:
+        return cached
+    if isinstance(node, Scan):
+        table = engine.db[node.table]
+        mask = evaluate(node.pred, table.columns)
+        codes = encode_keys({a: table.columns[a][mask] for a in key_attrs}, key_attrs)
+    elif isinstance(node, HashJoin):
+        _, inner_keys = _subtree_count(engine, node.build, tuple(node.build_keys))
+        pt = _probe_side_table(engine, node)
+        scan, _joins = build_spine(node)
+        mask = evaluate(scan.pred, pt.columns)
+        pcodes = encode_keys(
+            {a: pt.columns[a][mask] for a in node.probe_keys}, tuple(node.probe_keys)
+        )
+        sem = np.isin(pcodes, inner_keys)
+        codes = encode_keys({a: pt.columns[a][mask][sem] for a in key_attrs}, key_attrs)
+    else:
+        raise TypeError(node)
+    engine.demand_cache[key] = codes
+    return codes
+
+
 def _probe_side_table(engine, join: HashJoin):
     scan, _ = build_spine(join)
     return engine.db[scan.table]

@@ -55,6 +55,20 @@ def _mix64(keys: np.ndarray) -> np.ndarray:
     return h ^ (h >> np.uint64(31))
 
 
+def key_partition(keys: np.ndarray, n_partitions: int) -> np.ndarray:
+    """Key-hash partition id per int64 key: ``splitmix64(key) % P``.
+
+    This is the one partitioning function of the sharded state plane
+    (DESIGN.md §9): shared hash-build states route derivations, probe keys,
+    and index shards through it, so a key's shard is stable across the
+    producer and consumer sides of every boundary. P == 1 short-circuits to
+    an all-zeros vector (the unpartitioned engine never hashes)."""
+    keys = np.asarray(keys, dtype=np.int64)
+    if n_partitions <= 1:
+        return np.zeros(len(keys), dtype=np.int64)
+    return (_mix64(keys) % np.uint64(n_partitions)).astype(np.int64)
+
+
 def float_key_codes(col: np.ndarray) -> np.ndarray:
     """Exact int64 key codes for a float64 column (bit pattern, with -0.0
     canonicalized to +0.0 so float equality matches code equality)."""

@@ -21,6 +21,14 @@ predicates of one pipeline are fused into a single SoA bound-check pass
 single-member probes route through the backend's fused-lens kernel so
 visibility resolves in-kernel (DESIGN.md §8).
 
+Partition-parallel execution (DESIGN.md §9): each scan splits its morsel
+cycle into P contiguous partition shards with independent cyclic cursors;
+the schedulable unit becomes (scan × partition), and members account
+delivery per partition (``part_received`` / ``part_need``) so a shard that
+wraps early for one member never re-delivers to it. One logical ScanNode
+per table is preserved, so grafting/admission is partition-blind; P == 1
+degenerates to the seed single-cursor scan exactly.
+
 Member / Pipeline / ScanNode ids are engine-scoped (allocated by the owning
 GraftEngine), so repeated engine constructions are isolated — ids never
 leak across sessions.
@@ -178,6 +186,22 @@ class Gate:
         self._open_cache = True
         return True
 
+    def partition_frontier(self) -> Tuple[int, int]:
+        """(delivered, total) scan-partition units across this gate's
+        pending producers — the per-partition visibility frontier of §9.
+        A closed gate at (k, n) has k of n producer shards fully delivered;
+        (n, n) means only the coverage check remains. Open gates report
+        their last frontier as fully delivered."""
+        done = total = 0
+        for m in self.pending:
+            d, t = self.state.extent_partition_frontier(m.eid)
+            # a producer that has not begun reports its shard count as owed
+            if t == 0 and m.part_need is not None:
+                t = len(m.part_need)
+            done += d
+            total += t
+        return (done, total)
+
 
 class AggGate:
     """Readiness of a shared aggregate state under exact identity (§4.5)."""
@@ -252,6 +276,12 @@ class Member:
         self.done = False
         self.received = 0
         self.need = 0
+        # per-partition delivery accounting (set at activation; §9): the
+        # member finishes partition p after part_need[p] morsels from shard
+        # p, and finishes overall when received reaches need (their sum)
+        self.part_received: Optional[np.ndarray] = None
+        self.part_need: Optional[np.ndarray] = None
+        self.t_activated = 0.0  # activation barrier time (worker-clock merge)
         self.slot = -1  # pipeline-local bit slot
         self.rows_sunk = 0
         self.waiting_gates: List[Gate] = []  # gates whose pending set holds us
@@ -263,6 +293,12 @@ class Member:
 
     def activatable(self) -> bool:
         return (not self.active) and (not self.done) and all(g.open() for g in self.gates)
+
+    def pending_in(self, part: int) -> bool:
+        """Still owed morsels from scan partition ``part``."""
+        if self.part_received is None:
+            return True
+        return self.part_received[part] < self.part_need[part]
 
 
 # ---------------------------------------------------------------------------
@@ -305,7 +341,9 @@ class Pipeline:
         self.compose_did = compose_did
         self.members: List[Member] = []
         self.slots = SlotAllocator()
-        self._filter_plan = None  # (wave key, bound matrices) cache
+        # per-wave bound-matrix cache, keyed by the active member set (with
+        # partitions the set differs per shard near completion)
+        self._filter_plans: Dict[tuple, tuple] = {}
         source.attach(self)
 
     # -- membership ---------------------------------------------------------
@@ -315,6 +353,10 @@ class Pipeline:
 
     def active_members(self) -> List[Member]:
         return [m for m in self.members if m.active and not m.done]
+
+    def active_members_for(self, part: int) -> List[Member]:
+        """Active members still owed morsels from scan partition ``part``."""
+        return [m for m in self.members if m.active and not m.done and m.pending_in(part)]
 
     def progress(self) -> int:
         return max((m.received for m in self.members), default=0)
@@ -328,13 +370,15 @@ class Pipeline:
         SoA bound-check pass (per-wave matrices cached on the pipeline);
         members outside the interval fragment evaluate individually."""
         key = tuple((m.mid, m.slot) for m in act)
-        plan = self._filter_plan
-        if plan is None or plan[0] != key:
+        plan = self._filter_plans.get(key)
+        if plan is None:
             attrs, lo, hi, fused, slow = member_bound_matrices(act)
             bitvals = np.array([m.bitval for m in fused], dtype=np.uint64)
-            plan = (key, attrs, lo, hi, bitvals, fused, slow)
-            self._filter_plan = plan
-        _, attrs, lo, hi, bitvals, fused, slow = plan
+            plan = (attrs, lo, hi, bitvals, fused, slow)
+            if len(self._filter_plans) > 64:  # bounded: waves churn members
+                self._filter_plans.clear()
+            self._filter_plans[key] = plan
+        attrs, lo, hi, bitvals, fused, slow = plan
         bits = fused_bound_bits(n, cols, attrs, lo, hi, bitvals)
         engine.counters["fused_filter_rows"] += n * len(fused)
         for m in slow:
@@ -342,10 +386,13 @@ class Pipeline:
             bits |= np.where(mask, m.bitval, U64_0)
         return bits
 
-    def process(self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray) -> float:
-        """Run one morsel through the pipeline for all active members.
-        Returns the modeled cost (seconds) of the work performed."""
-        act = self.active_members()
+    def process(
+        self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray, part: int = 0
+    ) -> float:
+        """Run one morsel of scan partition ``part`` through the pipeline
+        for every member still owed that shard. Returns the modeled cost
+        (seconds) of the work performed."""
+        act = self.active_members_for(part)
         if not act:
             return 0.0
         n = len(row_ids)
@@ -470,14 +517,19 @@ class Pipeline:
                     vals,
                     nsel,
                     segment_sum=backend.segment_sum if backend is not None else None,
+                    part=part,
                 )
                 m.rows_sunk += nsel
                 cost += cm["agg"] * nsel
                 engine.counters["agg_rows"] += nsel
-        # morsel accounting
+        # morsel accounting (per partition, §9)
         finished: List[Member] = []
         for m in act:
             m.received += 1
+            if m.part_received is not None:
+                m.part_received[part] += 1
+                if m.part_received[part] >= m.part_need[part]:
+                    engine.on_member_part_finished(self, m, part)
             if m.received >= m.need:
                 m.done = True
                 m.active = False
@@ -493,16 +545,41 @@ class Pipeline:
 
 
 class ScanNode:
-    def __init__(self, sid: int, table: Table, morsel_size: int, zone_maps: bool = False):
+    """One shared cyclic scan, split into ``n_partitions`` contiguous
+    morsel-range shards with independent cyclic cursors (§9). The node
+    keeps ONE logical scan identity per table — attachment, zone maps, and
+    grafting see a single scan; only delivery is sharded."""
+
+    def __init__(
+        self,
+        sid: int,
+        table: Table,
+        morsel_size: int,
+        zone_maps: bool = False,
+        n_partitions: int = 1,
+    ):
         self.sid = sid
         self.table = table
         self.morsel_size = morsel_size
         self.n_morsels = max(1, math.ceil(table.nrows / morsel_size))
-        self.cursor = 0
+        p = max(1, min(int(n_partitions), self.n_morsels))
+        self.n_partitions = p
+        base, rem = divmod(self.n_morsels, p)
+        self.part_counts = np.array(
+            [base + (1 if i < rem else 0) for i in range(p)], dtype=np.int64
+        )
+        self.part_starts = np.concatenate(([0], np.cumsum(self.part_counts)[:-1]))
+        # per-partition cyclic cursor (absolute morsel index within the shard)
+        self.cursors = [int(s) for s in self.part_starts]
         self.pipelines: List[Pipeline] = []
         self.row_bytes = table.nbytes() / max(table.nrows, 1)
         self.zone_maps = zone_maps
         self._zone_cache: Optional[Tuple[tuple, np.ndarray]] = None
+
+    @property
+    def cursor(self) -> int:
+        """Partition-0 cursor (seed-compatible view for P == 1)."""
+        return self.cursors[0]
 
     def attach(self, p: Pipeline) -> None:
         self.pipelines.append(p)
@@ -550,10 +627,15 @@ class ScanNode:
         self._zone_cache = (key, possible)
         return possible
 
-    def advance(self, engine) -> float:
-        """Emit the next morsel to every attached pipeline with active
-        members. Physical read counted once (shared scan)."""
-        idx = self.cursor
+    def _bump_cursor(self, part: int) -> None:
+        lo = int(self.part_starts[part])
+        self.cursors[part] = lo + (self.cursors[part] + 1 - lo) % int(self.part_counts[part])
+
+    def advance(self, engine, part: int = 0) -> float:
+        """Emit partition ``part``'s next morsel to every attached pipeline
+        with members still owed that shard. Physical read counted once
+        (shared scan)."""
+        idx = self.cursors[part]
         if self.zone_maps and not self._wave_possible()[idx]:
             engine.counters["morsels_skipped"] += 1
             cost = engine.cost_model["scan"] * 8  # zone check, not a read
@@ -561,15 +643,19 @@ class ScanNode:
             # (zero rows pass their filters by construction)
             for p in list(self.pipelines):
                 finished = []
-                for m in p.active_members():
+                for m in p.active_members_for(part):
                     m.received += 1
+                    if m.part_received is not None:
+                        m.part_received[part] += 1
+                        if m.part_received[part] >= m.part_need[part]:
+                            engine.on_member_part_finished(p, m, part)
                     if m.received >= m.need:
                         m.done = True
                         m.active = False
                         finished.append(m)
                 for m in finished:
                     engine.on_member_finished(p, m)
-            self.cursor = (self.cursor + 1) % self.n_morsels
+            self._bump_cursor(part)
             return cost
         start = idx * self.morsel_size
         cols = self.table.morsel(start, self.morsel_size)
@@ -581,8 +667,8 @@ class ScanNode:
         cost = engine.cost_model["scan"] * n
 
         for p in list(self.pipelines):
-            cost += p.process(engine, cols, row_ids)
-        self.cursor = (self.cursor + 1) % self.n_morsels
+            cost += p.process(engine, cols, row_ids, part)
+        self._bump_cursor(part)
         return cost
 
     def detach(self, p: Pipeline) -> None:

@@ -1,19 +1,34 @@
-"""Ready-fragment extraction (Algorithm 2) and the single-worker executor.
+"""Ready-unit extraction (Algorithm 2, partition-lifted) and the worker-pool
+executor.
 
 The evaluated prototype (paper §6.1) uses one worker thread: inter-query
 concurrency comes from interleaving ready fragments of the shared execution
-DAG. We reproduce that model — the executor repeatedly extracts ready
-fragments and advances one shared cyclic scan by one morsel, which pushes
-the morsel through every attached pipeline for every active node-query pair.
+DAG. We reproduce that model and lift it to a partition-parallel pool
+(DESIGN.md §9): the schedulable unit is a (shared scan × partition) pair,
+and a ``WorkerPool`` of N logical workers repeatedly hands the next ready
+unit to the least-advanced worker, which advances that scan shard by one
+morsel — pushing the morsel through every attached pipeline for every
+active node-query pair. ``workers=1, partitions=1`` reduces exactly to the
+paper's single-worker round-robin loop.
 
 Clocks:
 
 * ``WorkClock`` — virtual time advanced by the modeled cost of each executed
   fragment (calibrated per-row constants). Makes the paper's hour-long
   open-loop sweeps reproducible in seconds, deterministically.
-* ``WallClock`` — real time (used by the fig.6 two-query experiment).
+* ``WallClock`` — real time (used by the fig.6 two-query experiment). Sleeps
+  are capped by ``max_sleep_s``: under virtual-dominant traces the remainder
+  of a long idle gap is skipped by advancing an internal skew instead of
+  blocking the process.
+* ``PoolClock`` — the engine-visible facade over N per-worker ``WorkClock``s.
+  Events (admission, activation, completion) are timestamped on the worker
+  executing them; cross-worker dependencies merge with max-at-barrier
+  semantics — a worker picking up a unit enabled at time t first advances
+  its own clock to t. The merged makespan is the max over worker clocks.
 
-Work-model counters (rows scanned / built / probed) are clock-independent.
+Work-model counters (rows scanned / built / probed) are clock-independent,
+and the whole pool is deterministic: unit choice depends only on clock
+values and (sid, partition) order, never on host timing.
 """
 
 from __future__ import annotations
@@ -45,24 +60,64 @@ class WorkClock:
 
 
 class WallClock:
-    def __init__(self):
+    """Real time. ``max_sleep_s`` caps each blocking sleep: when a trace is
+    virtual-dominant (arrivals far apart relative to real work), the
+    un-slept remainder is added to an internal skew so ``now`` still lands
+    on the requested timestamp without blocking the process for it."""
+
+    def __init__(self, max_sleep_s: Optional[float] = None):
         self._t0 = time.perf_counter()
+        self._skew = 0.0
+        self.max_sleep_s = max_sleep_s
 
     @property
     def now(self) -> float:
-        return time.perf_counter() - self._t0
+        return time.perf_counter() - self._t0 + self._skew
 
     def tick(self, cost: float) -> None:
         pass  # real work took real time
 
     def advance_to(self, t: float) -> None:
         dt = t - self.now
-        if dt > 0:
+        if dt <= 0:
+            return
+        if self.max_sleep_s is not None and dt > self.max_sleep_s:
+            time.sleep(self.max_sleep_s)
+            rem = t - self.now
+            if rem > 0:
+                self._skew += rem  # skip the idle remainder virtually
+        else:
             time.sleep(dt)
 
 
+class PoolClock:
+    """Engine-visible merge of the pool's per-worker clocks.
+
+    While a worker executes, ``now`` is that worker's local time (events it
+    causes are stamped on it); between steps ``now`` is the max over workers
+    (the pool's barrier-merged frontier). With one worker this is exactly
+    the seed single-clock behavior."""
+
+    def __init__(self, clocks: List):
+        self.clocks = clocks
+        self.current = None  # the executing worker's clock, if any
+
+    @property
+    def now(self) -> float:
+        if self.current is not None:
+            return self.current.now
+        return max(c.now for c in self.clocks)
+
+    def tick(self, cost: float) -> None:
+        (self.current or self.clocks[0]).tick(cost)
+
+    def advance_to(self, t: float) -> None:
+        for c in self.clocks:
+            c.advance_to(t)
+
+
 # ---------------------------------------------------------------------------
-# Algorithm 2 — ExtractReadyFragments
+# Algorithm 2 — ExtractReadyFragments, lifted to (fragment × partition)
 # ---------------------------------------------------------------------------
 
 
@@ -80,11 +135,15 @@ def state_consumer_blocked(m: Member) -> bool:
     return any(not g.open() for g in m.gates)
 
 
-def active_at_node(n: Pipeline) -> List[Member]:
-    """Lines 13-21 over one operator node (pipeline)."""
+def active_at_node(n: Pipeline, part: Optional[int] = None) -> List[Member]:
+    """Lines 13-21 over one operator node (pipeline); with ``part`` the
+    filter additionally requires the member to still be owed morsels from
+    that scan partition."""
     out = []
     for m in n.members:
         if m.done:
+            continue
+        if part is not None and not m.pending_in(part):
             continue
         if producer_inactive(n, m):
             continue
@@ -113,23 +172,70 @@ def extract_ready_fragments(engine: GraftEngine) -> List[ScanNode]:
     return frags
 
 
+def extract_ready_units(engine: GraftEngine) -> List[Tuple[ScanNode, int]]:
+    """The partition-lifted fragment set: every (scan, partition) shard with
+    at least one active member still owed morsels from it, ordered by
+    (sid, partition). Each unit is executable by advancing that shard one
+    morsel on any worker."""
+    units: List[Tuple[ScanNode, int]] = []
+    for node in engine.scans.values():
+        for part in range(node.n_partitions):
+            for p in node.pipelines:
+                if active_at_node(p, part):
+                    units.append((node, part))
+                    break
+    units.sort(key=lambda u: (u[0].sid, u[1]))
+    return units
+
+
+def unit_ready_time(node: ScanNode, part: int) -> float:
+    """Barrier time of one unit: the latest activation among the members it
+    would serve — a worker adopting the unit advances its clock here first
+    (max-at-barrier merge of the producing workers' clocks)."""
+    t = 0.0
+    for p in node.pipelines:
+        for m in p.active_members_for(part):
+            if m.t_activated > t:
+                t = m.t_activated
+    return t
+
+
 # ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
 
 
 class Runner:
-    """Drives one GraftEngine over an arrival trace.
+    """Drives one GraftEngine over an arrival trace with N logical workers.
 
     ``on_complete(handle) -> Optional[Query]`` implements closed-loop
     clients: returning a query enqueues it (arrival = completion time).
+
+    One worker with one partition is byte-identical to the seed
+    single-worker executor: same unit order, same clock, same timestamps.
     """
 
-    def __init__(self, engine: GraftEngine, clock=None):
+    def __init__(
+        self,
+        engine: GraftEngine,
+        clock=None,
+        workers: int = 1,
+        clock_factory: Optional[Callable[[], object]] = None,
+    ):
         self.engine = engine
-        self.clock = clock or WorkClock()
+        self.workers = max(1, int(workers))
+        if self.workers == 1:
+            base = clock if clock is not None else (clock_factory or WorkClock)()
+            self.clocks = [base]
+        else:
+            # N logical workers need N independent virtual clocks; a shared
+            # wall/instance clock cannot model parallel speedup
+            factory = clock_factory or WorkClock
+            self.clocks = [factory() for _ in range(self.workers)]
+        self.clock = PoolClock(self.clocks)
+        self.busy_s = [0.0] * self.workers
         engine.clock = self.clock
-        self._rr = 0
+        self._rr: Tuple[int, int] = (0, -1)  # last executed (sid, partition)
         self._seq = 0
         self._heap: List[Tuple[float, int, Query]] = []
         # Called with the query right before each admission (the Session
@@ -146,6 +252,24 @@ class Runner:
             self.submit_hook(query)
         return self.engine.submit(query)
 
+    def worker_stats(self) -> Dict[str, object]:
+        """Per-worker utilization of the run so far (QueryFuture.stats)."""
+        makespan = max(c.now for c in self.clocks)
+        return {
+            "n": self.workers,
+            "busy_s": [round(b, 9) for b in self.busy_s],
+            "makespan_s": makespan,
+            "utilization": [
+                (b / makespan if makespan > 0 else 0.0) for b in self.busy_s
+            ],
+        }
+
+    def _admit_due(self, now: float, on_complete) -> None:
+        while self._heap and self._heap[0][0] <= now:
+            _, _, q = heapq.heappop(self._heap)
+            self.submit_now(q)
+            self._after_events(on_complete)
+
     def run(
         self,
         arrivals: Iterable[Query] = (),
@@ -156,42 +280,53 @@ class Runner:
         for q in arrivals:
             self.add_arrival(q)
         steps = 0
-        while self._heap or engine.has_active_work():
-            steps += 1
-            if steps > max_steps:
-                raise RuntimeError("executor exceeded max_steps — livelock?")
-            # admit due arrivals (query grafting happens at submit)
-            while self._heap and self._heap[0][0] <= self.clock.now:
-                _, _, q = heapq.heappop(self._heap)
-                self.submit_now(q)
-                self._after_events(on_complete)
-            frags = extract_ready_fragments(engine)
-            if not frags:
-                if self._heap:
-                    self.clock.advance_to(self._heap[0][0])
-                    continue
-                if engine.has_active_work():
-                    # all remaining handles must be completable observers
-                    done = engine.sweep_completions()
-                    if done:
-                        self._after_events(on_complete, done)
+        try:
+            while self._heap or engine.has_active_work():
+                steps += 1
+                if steps > max_steps:
+                    raise RuntimeError("executor exceeded max_steps — livelock?")
+                # least-advanced worker takes the next scheduling decision
+                wi = min(range(self.workers), key=lambda i: self.clocks[i].now)
+                wclock = self.clocks[wi]
+                self.clock.current = wclock
+                # admit due arrivals (query grafting happens at submit)
+                self._admit_due(wclock.now, on_complete)
+                units = extract_ready_units(engine)
+                if not units:
+                    self.clock.current = None
+                    if self._heap:
+                        self.clock.advance_to(self._heap[0][0])
                         continue
-                    raise RuntimeError(
-                        f"deadlock: {len(engine.active_handles)} active queries, no ready fragments"
-                    )
-                break
-            # round-robin over ready fragments
-            node = None
-            for cand in frags:
-                if cand.sid > self._rr:
-                    node = cand
+                    if engine.has_active_work():
+                        # all remaining handles must be completable observers
+                        done = engine.sweep_completions()
+                        if done:
+                            self._after_events(on_complete, done)
+                            continue
+                        raise RuntimeError(
+                            f"deadlock: {len(engine.active_handles)} active queries, no ready fragments"
+                        )
                     break
-            if node is None:
-                node = frags[0]
-            self._rr = node.sid
-            cost = node.advance(engine)
-            self.clock.tick(cost)
-            self._after_events(on_complete)
+                # round-robin over ready (scan × partition) units
+                unit = None
+                for cand in units:
+                    if (cand[0].sid, cand[1]) > self._rr:
+                        unit = cand
+                        break
+                if unit is None:
+                    unit = units[0]
+                node, part = unit
+                self._rr = (node.sid, part)
+                # max-at-barrier: wait for the unit's enabling events, then
+                # re-admit anything that became due during the wait
+                wclock.advance_to(unit_ready_time(node, part))
+                self._admit_due(wclock.now, on_complete)
+                cost = node.advance(engine, part)
+                wclock.tick(cost)
+                self.busy_s[wi] += cost
+                self._after_events(on_complete)
+        finally:
+            self.clock.current = None
         return engine.completed
 
     def _after_events(self, on_complete, pre_done: Optional[List[QueryHandle]] = None) -> None:

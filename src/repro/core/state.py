@@ -36,6 +36,15 @@ arrays indexed by two batched hash structures (DESIGN.md §8):
   entries fall to a sorted duplicate run maintained by delta merge — no
   full re-argsort on growth.
 
+Partition-parallel sharding (DESIGN.md §9): under ``n_partitions > 1`` both
+index structures split into P shards routed by ``key_partition`` (splitmix64
+of the entry keycode). Entry *storage* stays one global SoA with ids
+assigned in batch-stream first-occurrence order, which makes the resident
+arrays (and therefore per-partition visibility words: each entry's packed
+word belongs to exactly one key shard) bit-identical for every P — only the
+index routing shards, so grafting/admission and the 1×1 oracle are
+untouched while (fragment × partition) units touch disjoint shards.
+
 The Pallas ``hash_probe`` kernel consumes the same SoA layout; aggregate
 group ids and count(distinct) seen-pairs run on ``MultiKeyIndex``.
 """
@@ -48,7 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .descriptors import StateSignature
-from .hashindex import HashIndex, MultiKeyIndex
+from .hashindex import HashIndex, MultiKeyIndex, key_partition
 from .predicates import Conjunction, Coverage, evaluate_conj
 from .visibility import SlotAllocator, bit_of
 
@@ -90,6 +99,120 @@ class GrowArray:
 
 
 # ---------------------------------------------------------------------------
+# One shard of the incremental multi-match probe index (DESIGN.md §8/§9)
+# ---------------------------------------------------------------------------
+
+
+class _KeyProbeIndex:
+    """Incremental multi-match probe index over one key shard.
+
+    Hash index for unique keys + sorted duplicate run with delta merge;
+    entry ids are *global* SoA positions, so shards compose without any id
+    translation. The unpartitioned state owns exactly one shard — this
+    class is the seed implementation moved verbatim."""
+
+    __slots__ = (
+        "_kindex",
+        "_key_first",
+        "_key_dup",
+        "_dup_keys",
+        "_dup_entries",
+        "_dup_pend_keys",
+        "_dup_pend_entries",
+    )
+
+    def __init__(self, counters: Optional[Dict] = None):
+        self._kindex = HashIndex(counters=counters)
+        self._key_first = GrowArray(np.int64)  # key id -> first entry idx
+        self._key_dup = GrowArray(np.bool_)  # key id -> key has >1 entry
+        self._dup_keys = np.empty(0, dtype=np.int64)  # sorted by (key, entry)
+        self._dup_entries = np.empty(0, dtype=np.int64)
+        self._dup_pend_keys: List[np.ndarray] = []
+        self._dup_pend_entries: List[np.ndarray] = []
+
+    def append(self, new_keycodes: np.ndarray, ent: np.ndarray, all_keycodes: np.ndarray) -> None:
+        """Register freshly appended entries: unique keys land in the hash
+        index; entries of duplicated keys queue for the sorted-run delta
+        merge. ``ent`` carries the entries' global SoA positions and
+        ``all_keycodes`` the state's full keycode column (for promoting a
+        key's first entry when it turns multi-entry)."""
+        kids, knew = self._kindex.lookup_or_insert(new_keycodes)
+        if knew.any():
+            ksel = np.flatnonzero(knew)
+            self._key_first.append(ent[ksel])
+            self._key_dup.append(np.zeros(len(ksel), dtype=np.bool_))
+        dup = ~knew
+        if dup.any():
+            dsel = np.flatnonzero(dup)
+            kd = kids[dsel]
+            fresh = np.unique(kd)
+            fresh = fresh[~self._key_dup.data[fresh]]
+            if len(fresh):
+                # key just became multi-entry: its first entry joins the run
+                self._key_dup.data[fresh] = True
+                first = self._key_first.data[fresh]
+                self._dup_pend_keys.append(all_keycodes[first])
+                self._dup_pend_entries.append(first)
+            self._dup_pend_keys.append(new_keycodes[dsel])
+            self._dup_pend_entries.append(ent[dsel])
+
+    def _flush_dups(self) -> None:
+        """Merge the pending duplicate delta into the sorted run. Cost is
+        O(run + delta) per growth episode, and zero for unique-key states."""
+        if not self._dup_pend_keys:
+            return
+        dk = np.concatenate(self._dup_pend_keys)
+        de = np.concatenate(self._dup_pend_entries)
+        self._dup_pend_keys = []
+        self._dup_pend_entries = []
+        order = np.lexsort((de, dk))
+        dk, de = dk[order], de[order]
+        if len(self._dup_keys):
+            # delta entries of an existing key are younger than the run's:
+            # side='right' keeps within-key entry order = insertion order
+            pos = np.searchsorted(self._dup_keys, dk, side="right")
+            self._dup_keys = np.insert(self._dup_keys, pos, dk)
+            self._dup_entries = np.insert(self._dup_entries, pos, de)
+        else:
+            self._dup_keys, self._dup_entries = dk, de
+
+    def probe(self, pk: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Match pairs (probe_row_idx, entry_idx) for this shard's keys —
+        probe-row-major, entries in insertion order."""
+        if self._key_first.n == 0 or len(pk) == 0:
+            return _EMPTY_PAIR
+        self._flush_dups()
+        kids = self._kindex.lookup(pk)
+        midx = np.flatnonzero(kids >= 0)
+        if len(midx) == 0:
+            return _EMPTY_PAIR
+        mk = kids[midx]
+        isdup = self._key_dup.data[mk]
+        single = midx[~isdup]
+        dup_rows = midx[isdup]
+        counts = np.zeros(len(pk), dtype=np.int64)
+        counts[single] = 1
+        if len(dup_rows):
+            lo = np.searchsorted(self._dup_keys, pk[dup_rows], side="left")
+            hi = np.searchsorted(self._dup_keys, pk[dup_rows], side="right")
+            counts[dup_rows] = hi - lo
+        total = int(counts.sum())
+        probe_idx = np.repeat(np.arange(len(pk), dtype=np.int64), counts)
+        entry_idx = np.empty(total, dtype=np.int64)
+        offs = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        entry_idx[offs[single]] = self._key_first.data[mk[~isdup]]
+        if len(dup_rows):
+            c = hi - lo
+            nd = int(c.sum())
+            within = np.arange(nd, dtype=np.int64) - np.repeat(
+                np.concatenate(([0], np.cumsum(c)[:-1])), c
+            )
+            dpos = np.repeat(offs[dup_rows], c) + within
+            entry_idx[dpos] = self._dup_entries[np.repeat(lo, c) + within]
+        return probe_idx, entry_idx
+
+
+# ---------------------------------------------------------------------------
 
 
 class SharedHashBuildState:
@@ -98,7 +221,9 @@ class SharedHashBuildState:
     Entries are identified by derivation id; insert-or-mark keeps one
     physical entry per derivation and ORs visibility/provenance bits (§4.3
     "GraftDB stores one build entry and records the visibility needed by
-    those queries")."""
+    those queries"). Under ``n_partitions > 1`` the did and probe indexes
+    shard by key hash (DESIGN.md §9) while entry storage stays one global
+    SoA with P-independent entry ids."""
 
     def __init__(
         self,
@@ -108,6 +233,7 @@ class SharedHashBuildState:
         payload: Tuple[str, ...],
         did_domain: int = 1 << 62,
         counters: Optional[Dict] = None,
+        n_partitions: int = 1,
     ):
         self.state_id = state_id
         self.sig = sig
@@ -115,6 +241,8 @@ class SharedHashBuildState:
         self.payload = tuple(payload)
         self.retained_attrs = frozenset(self.payload) | frozenset(self.key_attrs)
         self.did_domain = did_domain
+        self.n_partitions = max(1, int(n_partitions))
+        self._counters = counters
 
         self.keycode = GrowArray(np.int64)
         self.did = GrowArray(np.int64)
@@ -122,28 +250,34 @@ class SharedHashBuildState:
         self.emask = GrowArray(np.uint64)
         self.cols: Dict[str, GrowArray] = {a: GrowArray(np.float64) for a in self.retained_attrs}
 
-        self._did_index = HashIndex(counters=counters)
+        if self.n_partitions == 1:
+            self._did_index = HashIndex(counters=counters)
+        else:
+            # key-hash shards: a derivation's keycode determines its shard
+            # (a did always carries one keycode), so per-shard dedup is
+            # exact. Shard-dense ids map to global SoA positions.
+            self._did_shards = [HashIndex(counters=counters) for _ in range(self.n_partitions)]
+            self._did_gid = [GrowArray(np.int64) for _ in range(self.n_partitions)]
         self.slots = SlotAllocator()
 
         # extent registry: eid -> (conj | None, complete)
         self.extents: Dict[int, Tuple[Optional[Conjunction], bool]] = {}
         self._next_eid = 0
+        # per-extent per-scan-partition delivery frontier (§9): which of a
+        # producer's scan partitions have fully delivered. Introspection for
+        # per-partition gate views; extent *completion* stays all-partitions
+        # (probe rows hash across every key shard, so a partial frontier
+        # cannot soundly open a lens).
+        self.extent_parts: Dict[int, Tuple[int, set]] = {}
 
         # grants: qid -> list of (allowed_emask, retained_pred_conj)
         self.grants: Dict[int, List[Tuple[np.uint64, Conjunction]]] = {}
         self.refs: set = set()
 
-        # incremental multi-match probe index (DESIGN.md §8): hash index
-        # for unique keys + sorted duplicate run with delta merge. Synced
-        # lazily at probe time — build-only phases pay nothing for it.
-        self._kindex = HashIndex(counters=counters)
-        self._key_first = GrowArray(np.int64)  # key id -> first entry idx
-        self._key_dup = GrowArray(np.bool_)  # key id -> key has >1 entry
+        # incremental multi-match probe index shards (DESIGN.md §8/§9),
+        # synced lazily at probe time — build-only phases pay nothing.
+        self._kidx = [_KeyProbeIndex(counters=counters) for _ in range(self.n_partitions)]
         self._indexed_upto = 0  # entries registered with the probe index
-        self._dup_keys = np.empty(0, dtype=np.int64)  # sorted by (key, entry)
-        self._dup_entries = np.empty(0, dtype=np.int64)
-        self._dup_pend_keys: List[np.ndarray] = []
-        self._dup_pend_entries: List[np.ndarray] = []
 
         # counters
         self.rows_inserted = 0
@@ -166,6 +300,22 @@ class SharedHashBuildState:
         if eid >= 0:
             conj, _ = self.extents[eid]
             self.extents[eid] = (conj, True)
+
+    def complete_extent_partition(self, eid: int, part: int, n_parts: int) -> None:
+        """Record one scan partition of a producer extent as fully
+        delivered (the per-partition visibility frontier of §9)."""
+        if eid < 0:
+            return
+        total, done = self.extent_parts.get(eid, (n_parts, set()))
+        done.add(part)
+        self.extent_parts[eid] = (n_parts, done)
+
+    def extent_partition_frontier(self, eid: int) -> Tuple[int, int]:
+        """(partitions delivered, partitions total) for one extent."""
+        if eid < 0:
+            return (0, 0)
+        total, done = self.extent_parts.get(eid, (0, set()))
+        return (len(done), total)
 
     def coverage(self) -> Coverage:
         """Coverage metadata = union of completed extents (§4.3)."""
@@ -201,23 +351,32 @@ class SharedHashBuildState:
         """Insert rows absent by derivation id; OR visibility/provenance on
         present ones. Returns (inserted, marked).
 
-        One batched ``HashIndex.lookup_or_insert`` resolves every row's
-        entry position (deduping within the batch in first-occurrence
+        One batched ``HashIndex.lookup_or_insert`` per shard resolves every
+        row's entry position (deduping within the batch in first-occurrence
         order); a single ``bitwise_or.at`` pass then merges visibility and
         provenance for marks, fresh inserts, and in-batch duplicates alike.
+        Global entry ids are assigned in batch-stream first-occurrence
+        order for every P, so the resident SoA is partition-independent.
+
+        Sharding invariant: a derivation id always arrives with the same
+        keycode (the did identifies a row; the keycode is a function of
+        that row), so per-shard dedup by did is exact.
         """
         if len(dids) == 0:
             return 0, 0
         dids = np.asarray(dids, dtype=np.int64)
+        keycodes = np.asarray(keycodes, dtype=np.int64)
         n0 = self.did.n
-        ids, is_new = self._did_index.lookup_or_insert(dids)
-        n_inserted = int(is_new.sum())
+        if self.n_partitions == 1:
+            ids, is_new = self._did_index.lookup_or_insert(dids)
+            sel = np.flatnonzero(is_new)  # ids[sel] == n0 + arange(n_inserted)
+        else:
+            ids, sel = self._sharded_did_resolve(dids, keycodes, n0)
+        n_inserted = len(sel)
         n_marked = int((ids < n0).sum())
         if n_inserted:
-            sel = np.flatnonzero(is_new)  # ids[sel] == n0 + arange(n_inserted)
-            kc = np.asarray(keycodes, dtype=np.int64)[sel]
             self.did.append(dids[sel])
-            self.keycode.append(kc)
+            self.keycode.append(keycodes[sel])
             zeros = np.zeros(n_inserted, dtype=np.uint64)
             self.vis.append(zeros)
             self.emask.append(zeros)
@@ -229,6 +388,38 @@ class SharedHashBuildState:
         self.rows_marked += n_marked
         return n_inserted, n_marked
 
+    def _sharded_did_resolve(
+        self, dids: np.ndarray, keycodes: np.ndarray, n0: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Resolve a batch against the key-hash did shards: global entry id
+        per row plus the ascending batch positions of new first occurrences
+        (identical to the unsharded path's ``flatnonzero(is_new)``)."""
+        parts = key_partition(keycodes, self.n_partitions)
+        ids = np.empty(len(dids), dtype=np.int64)
+        pending: List[Tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
+        new_srcs: List[np.ndarray] = []
+        for s in range(self.n_partitions):
+            sub = np.flatnonzero(parts == s)
+            if not len(sub):
+                continue
+            sids, snew = self._did_shards[s].lookup_or_insert(dids[sub])
+            src = sub[np.flatnonzero(snew)]  # ascending batch positions
+            pending.append((s, sub, sids, src))
+            if len(src):
+                new_srcs.append(src)
+        if new_srcs:
+            allsrc = np.sort(np.concatenate(new_srcs))
+        else:
+            allsrc = np.empty(0, dtype=np.int64)
+        for s, sub, sids, src in pending:
+            if len(src):
+                # shard-dense new ids were handed out in sub-batch
+                # first-occurrence order == ascending src order, matching
+                # this append order exactly
+                self._did_gid[s].append(n0 + np.searchsorted(allsrc, src))
+            ids[sub] = self._did_gid[s].data[sids]
+        return ids, allsrc
+
     # -- grants ---------------------------------------------------------------
     def add_grant(self, qid: int, allowed_emask: np.uint64, retained_conj: Conjunction) -> None:
         self.slots.get(qid)
@@ -238,15 +429,29 @@ class SharedHashBuildState:
         """FV(P) ⊆ RetainedAttrs(S) (§4.2 evaluability)."""
         return conj.attrs() <= self.retained_attrs
 
-    def count_granted(self, allowed_emask: np.uint64, retained_conj: Conjunction) -> int:
-        """Entries currently observable through a grant (counters only)."""
-        if self.did.n == 0:
-            return 0
+    def _granted_mask(self, allowed_emask: np.uint64, retained_conj: Conjunction) -> np.ndarray:
         m = (self.emask.data & allowed_emask) != 0
         if retained_conj.attrs():
             cols = {a: self.cols[a].data for a in retained_conj.attrs()}
             m = m & evaluate_conj(retained_conj, cols)
-        return int(m.sum())
+        return m
+
+    def count_granted(self, allowed_emask: np.uint64, retained_conj: Conjunction) -> int:
+        """Entries currently observable through a grant (counters only)."""
+        if self.did.n == 0:
+            return 0
+        return int(self._granted_mask(allowed_emask, retained_conj).sum())
+
+    def count_granted_by_part(
+        self, allowed_emask: np.uint64, retained_conj: Conjunction, n_parts: int
+    ) -> np.ndarray:
+        """Per-key-partition split of ``count_granted`` (EXPLAIN GRAFT's
+        per-partition represented accounting)."""
+        if self.did.n == 0:
+            return np.zeros(n_parts, dtype=np.int64)
+        m = self._granted_mask(allowed_emask, retained_conj)
+        parts = key_partition(self.keycode.data, n_parts)
+        return np.bincount(parts[m], minlength=n_parts).astype(np.int64)
 
     # -- consumer side -------------------------------------------------------
     def _sync_index(self) -> None:
@@ -254,92 +459,53 @@ class SharedHashBuildState:
         index costs nothing while a state is only being built)."""
         n = self.keycode.n
         if self._indexed_upto < n:
-            self._index_append(self.keycode.data[self._indexed_upto :], self._indexed_upto)
+            new = self.keycode.data[self._indexed_upto : n]
+            ent = self._indexed_upto + np.arange(len(new), dtype=np.int64)
+            allkc = self.keycode.data
+            if self.n_partitions == 1:
+                self._kidx[0].append(new, ent, allkc)
+            else:
+                parts = key_partition(new, self.n_partitions)
+                for s in range(self.n_partitions):
+                    sub = np.flatnonzero(parts == s)
+                    if len(sub):
+                        self._kidx[s].append(new[sub], ent[sub], allkc)
             self._indexed_upto = n
-
-    def _index_append(self, new_keycodes: np.ndarray, base: int) -> None:
-        """Register freshly appended entries with the incremental probe
-        index: unique keys land in the hash index; entries of duplicated
-        keys queue for the sorted-run delta merge."""
-        ent = base + np.arange(len(new_keycodes), dtype=np.int64)
-        kids, knew = self._kindex.lookup_or_insert(new_keycodes)
-        if knew.any():
-            ksel = np.flatnonzero(knew)
-            self._key_first.append(ent[ksel])
-            self._key_dup.append(np.zeros(len(ksel), dtype=np.bool_))
-        dup = ~knew
-        if dup.any():
-            dsel = np.flatnonzero(dup)
-            kd = kids[dsel]
-            fresh = np.unique(kd)
-            fresh = fresh[~self._key_dup.data[fresh]]
-            if len(fresh):
-                # key just became multi-entry: its first entry joins the run
-                self._key_dup.data[fresh] = True
-                first = self._key_first.data[fresh]
-                self._dup_pend_keys.append(self.keycode.data[first])
-                self._dup_pend_entries.append(first)
-            self._dup_pend_keys.append(new_keycodes[dsel])
-            self._dup_pend_entries.append(ent[dsel])
-
-    def _flush_dups(self) -> None:
-        """Merge the pending duplicate delta into the sorted run. Cost is
-        O(run + delta) per growth episode, and zero for unique-key states."""
-        if not self._dup_pend_keys:
-            return
-        dk = np.concatenate(self._dup_pend_keys)
-        de = np.concatenate(self._dup_pend_entries)
-        self._dup_pend_keys = []
-        self._dup_pend_entries = []
-        order = np.lexsort((de, dk))
-        dk, de = dk[order], de[order]
-        if len(self._dup_keys):
-            # delta entries of an existing key are younger than the run's:
-            # side='right' keeps within-key entry order = insertion order
-            pos = np.searchsorted(self._dup_keys, dk, side="right")
-            self._dup_keys = np.insert(self._dup_keys, pos, dk)
-            self._dup_entries = np.insert(self._dup_entries, pos, de)
-        else:
-            self._dup_keys, self._dup_entries = dk, de
 
     def probe(self, probe_keycodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Vectorized probe: returns (probe_row_idx, entry_idx) match pairs
         — before any visibility filtering. Unique keys resolve through the
         hash index in O(batch); multi-entry keys expand from the sorted
         duplicate run. Match pairs are emitted probe-row-major with entries
-        in insertion order, matching the old sort-based probe exactly."""
+        in insertion order, independent of the shard count (each probe key
+        lives in exactly one shard, so a stable row-major gather of the
+        per-shard results reproduces the unsharded order exactly)."""
         if self.keycode.n == 0 or len(probe_keycodes) == 0:
             return _EMPTY_PAIR
         self._sync_index()
-        self._flush_dups()
         pk = np.asarray(probe_keycodes, dtype=np.int64)
-        kids = self._kindex.lookup(pk)
-        midx = np.flatnonzero(kids >= 0)
-        if len(midx) == 0:
+        if self.n_partitions == 1:
+            return self._kidx[0].probe(pk)
+        parts = key_partition(pk, self.n_partitions)
+        pidx_parts: List[np.ndarray] = []
+        eidx_parts: List[np.ndarray] = []
+        for s in range(self.n_partitions):
+            sub = np.flatnonzero(parts == s)
+            if not len(sub):
+                continue
+            lp, le = self._kidx[s].probe(pk[sub])
+            if len(lp):
+                pidx_parts.append(sub[lp])
+                eidx_parts.append(le)
+        if not pidx_parts:
             return _EMPTY_PAIR
-        mk = kids[midx]
-        isdup = self._key_dup.data[mk]
-        single = midx[~isdup]
-        dup_rows = midx[isdup]
-        counts = np.zeros(len(pk), dtype=np.int64)
-        counts[single] = 1
-        if len(dup_rows):
-            lo = np.searchsorted(self._dup_keys, pk[dup_rows], side="left")
-            hi = np.searchsorted(self._dup_keys, pk[dup_rows], side="right")
-            counts[dup_rows] = hi - lo
-        total = int(counts.sum())
-        probe_idx = np.repeat(np.arange(len(pk), dtype=np.int64), counts)
-        entry_idx = np.empty(total, dtype=np.int64)
-        offs = np.concatenate(([0], np.cumsum(counts)[:-1]))
-        entry_idx[offs[single]] = self._key_first.data[mk[~isdup]]
-        if len(dup_rows):
-            c = hi - lo
-            nd = int(c.sum())
-            within = np.arange(nd, dtype=np.int64) - np.repeat(
-                np.concatenate(([0], np.cumsum(c)[:-1])), c
-            )
-            dpos = np.repeat(offs[dup_rows], c) + within
-            entry_idx[dpos] = self._dup_entries[np.repeat(lo, c) + within]
+        probe_idx = np.concatenate(pidx_parts)
+        entry_idx = np.concatenate(eidx_parts)
+        if len(pidx_parts) > 1:
+            order = np.argsort(probe_idx, kind="stable")
+            probe_idx, entry_idx = probe_idx[order], entry_idx[order]
+            if self._counters is not None:
+                self._counters["partition_probe_merges"] += 1
         return probe_idx, entry_idx
 
     def visible_mask(self, qid: int, entry_idx: np.ndarray) -> np.ndarray:
@@ -383,49 +549,46 @@ class SharedHashBuildState:
 # ---------------------------------------------------------------------------
 
 
-class SharedAggregateState:
-    """Shared aggregate state under exact aggregate identity (§4.5).
+class _AggPartial:
+    """One partition's partial accumulators — exactly the seed engine's
+    accumulator layout (partition 0 of an unpartitioned state IS the seed
+    path; P > 1 states merge partials deterministically in partition-id
+    order, DESIGN.md §9)."""
 
-    Input occurrences collapse into group accumulators, so the state cannot
-    be repartitioned under a different predicate/grouping — sharing is
-    all-or-nothing per identity, enforced by the signature. Supports
-    sum/count/avg/min/max; group-id assignment and the count(distinct expr)
-    seen-pairs both run on batched ``MultiKeyIndex`` lookups (DESIGN.md §8)."""
+    __slots__ = (
+        "group_keys",
+        "aggs",
+        "distinct_global",
+        "_gidx",
+        "_global_ready",
+        "group_cols",
+        "_acc",
+        "_counts",
+    )
 
-    def __init__(
-        self,
-        state_id: int,
-        sig: Optional[StateSignature],
-        group_keys: Tuple[str, ...],
-        aggs,
-        counters: Optional[Dict] = None,
-    ):
-        self.state_id = state_id
-        self.sig = sig
-        self.group_keys = tuple(group_keys)
-        self.aggs = tuple(aggs)
-
+    def __init__(self, group_keys, aggs, counters: Optional[Dict] = None, distinct_global=False):
+        self.group_keys = group_keys
+        self.aggs = aggs
+        # distinct-pair keying: the seed path keys on (partial-local gid,
+        # value) — bijective with the key tuple inside one partial;
+        # partitioned states key on the actual group-key values + value so
+        # dedup is global across partials.
+        self.distinct_global = distinct_global
         self._gidx = (
-            MultiKeyIndex(len(self.group_keys), counters=counters)
-            if self.group_keys
-            else None
+            MultiKeyIndex(len(group_keys), counters=counters) if group_keys else None
         )
         self._global_ready = False  # global aggregate: single group, lazily init
-        self.group_cols: List[GrowArray] = [GrowArray(np.float64) for _ in self.group_keys]
-        self._acc: List[GrowArray] = [GrowArray(np.float64) for _ in self.aggs]
+        self.group_cols: List[GrowArray] = [GrowArray(np.float64) for _ in group_keys]
+        self._acc: List[GrowArray] = [GrowArray(np.float64) for _ in aggs]
         self._counts = GrowArray(np.float64)
-        self._distinct_idx: List[Optional[MultiKeyIndex]] = [
-            MultiKeyIndex(2, counters=counters) if a.distinct else None for a in self.aggs
-        ]
 
-        self.complete = False
-        self.refs: set = set()
-        self.rows_consumed = 0
+    @staticmethod
+    def _init_of(spec) -> float:
+        return math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
 
     def _new_groups(self, n_new: int) -> None:
         for acc, spec in zip(self._acc, self.aggs):
-            init = math.inf if spec.func == "min" else (-math.inf if spec.func == "max" else 0.0)
-            acc.append(np.full(n_new, init))
+            acc.append(np.full(n_new, self._init_of(spec)))
         self._counts.append(np.zeros(n_new))
 
     def _group_ids(self, keys: List[np.ndarray], n: int) -> np.ndarray:
@@ -444,33 +607,19 @@ class SharedAggregateState:
             self._new_groups(n_new)
         return gids
 
-    def update(
-        self,
-        key_cols: List[np.ndarray],
-        agg_values: List[Optional[np.ndarray]],
-        n: int,
-        segment_sum=None,
-    ) -> None:
-        """Fold one morsel of rows into the accumulators (segment reduce).
-
-        ``segment_sum(gids, values_or_None, n_groups)`` lets an execution
-        backend (api/backends.py) supply the grouped reduction — e.g. the
-        Pallas one-hot MXU kernel; defaults to ``np.bincount``."""
-        if n == 0:
-            return
+    def update(self, key_cols, agg_values, n, segment_sum, distinct_idx) -> None:
         gids = self._group_ids(key_cols, n)
         ngroups = self._counts.n
-        self.rows_consumed += n
-        if segment_sum is None:
-            segment_sum = _bincount_segment_sum
         cnt = segment_sum(gids, None, ngroups)
         self._counts.data[:] += cnt
         for j, (acc, spec) in enumerate(zip(self._acc, self.aggs)):
             vals = agg_values[j]
             if spec.distinct:
                 # count(distinct expr): one batched lookup flags the
-                # never-seen (group, value) pairs
-                _, fresh = self._distinct_idx[j].lookup_or_insert([gids, vals])
+                # never-seen pairs (state-level index: dedup is global
+                # across partitions, so merged counts stay exact)
+                dkey = list(key_cols) + [vals] if self.distinct_global else [gids, vals]
+                _, fresh = distinct_idx[j].lookup_or_insert(dkey)
                 if fresh.any():
                     acc.data[:] += np.bincount(gids[fresh], minlength=ngroups)
             elif spec.func == "count":
@@ -484,14 +633,150 @@ class SharedAggregateState:
             else:
                 raise ValueError(spec.func)
 
+    @property
+    def n_groups(self) -> int:
+        return self._counts.n
+
+
+class SharedAggregateState:
+    """Shared aggregate state under exact aggregate identity (§4.5).
+
+    Input occurrences collapse into group accumulators, so the state cannot
+    be repartitioned under a different predicate/grouping — sharing is
+    all-or-nothing per identity, enforced by the signature. Supports
+    sum/count/avg/min/max; group-id assignment and the count(distinct expr)
+    seen-pairs both run on batched ``MultiKeyIndex`` lookups (DESIGN.md §8).
+
+    Under ``n_partitions > 1`` each scan partition folds into its own
+    partial accumulator; ``result()`` merges partials in partition-id order
+    (DESIGN.md §9) — deterministic under any worker interleaving because
+    each partition's morsel stream is fixed. count(distinct) seen-pairs
+    dedup through one state-level index keyed on the actual group-key
+    values (not partial-local gids), so cross-partition duplicates count
+    once no matter which partial observed them first."""
+
+    def __init__(
+        self,
+        state_id: int,
+        sig: Optional[StateSignature],
+        group_keys: Tuple[str, ...],
+        aggs,
+        counters: Optional[Dict] = None,
+        n_partitions: int = 1,
+    ):
+        self.state_id = state_id
+        self.sig = sig
+        self.group_keys = tuple(group_keys)
+        self.aggs = tuple(aggs)
+        self.n_partitions = max(1, int(n_partitions))
+        self._counters = counters
+
+        self._parts = [
+            _AggPartial(
+                self.group_keys, self.aggs, counters, distinct_global=self.n_partitions > 1
+            )
+            for _ in range(self.n_partitions)
+        ]
+        if self.n_partitions == 1:
+            # seed layout: (partial-local gid, value) pairs — bijective with
+            # the key tuple inside one partial
+            self._distinct_idx: List[Optional[MultiKeyIndex]] = [
+                MultiKeyIndex(2, counters=counters) if a.distinct else None
+                for a in self.aggs
+            ]
+        else:
+            self._distinct_idx = [
+                MultiKeyIndex(len(self.group_keys) + 1, counters=counters)
+                if a.distinct
+                else None
+                for a in self.aggs
+            ]
+        self._merge_cache = None  # (stamp, gcols, accs, counts)
+
+        self.complete = False
+        self.refs: set = set()
+        self.rows_consumed = 0
+
+    def update(
+        self,
+        key_cols: List[np.ndarray],
+        agg_values: List[Optional[np.ndarray]],
+        n: int,
+        segment_sum=None,
+        part: int = 0,
+    ) -> None:
+        """Fold one morsel of rows into partition ``part``'s accumulators
+        (segment reduce).
+
+        ``segment_sum(gids, values_or_None, n_groups)`` lets an execution
+        backend (api/backends.py) supply the grouped reduction — e.g. the
+        Pallas one-hot MXU kernel; defaults to ``np.bincount``."""
+        if n == 0:
+            return
+        self.rows_consumed += n
+        if segment_sum is None:
+            segment_sum = _bincount_segment_sum
+        self._parts[part].update(key_cols, agg_values, n, segment_sum, self._distinct_idx)
+
+    # -- deterministic partial merge (DESIGN.md §9) ---------------------------
+    def _merged(self):
+        """Merge partials in partition-id order; cached by a consumption
+        stamp. Only reached when n_partitions > 1."""
+        stamp = (self.rows_consumed, tuple(p.n_groups for p in self._parts))
+        if self._merge_cache is not None and self._merge_cache[0] == stamp:
+            return self._merge_cache[1:]
+        K = len(self.group_keys)
+        midx = MultiKeyIndex(K) if K else None
+        gcols = [GrowArray(np.float64) for _ in range(K)]
+        accs = [GrowArray(np.float64) for _ in self.aggs]
+        counts = GrowArray(np.float64)
+        for p in self._parts:
+            npg = p.n_groups
+            if npg == 0:
+                continue
+            if K:
+                keys = [gc.data for gc in p.group_cols]
+                gids, is_new = midx.lookup_or_insert(keys)
+                n_new = int(is_new.sum())
+                if n_new:
+                    sel = np.flatnonzero(is_new)
+                    for k in range(K):
+                        gcols[k].append(keys[k][sel])
+                    for acc, spec in zip(accs, self.aggs):
+                        acc.append(np.full(n_new, _AggPartial._init_of(spec)))
+                    counts.append(np.zeros(n_new))
+            else:
+                gids = np.zeros(1, dtype=np.int64)
+                if counts.n == 0:
+                    for acc, spec in zip(accs, self.aggs):
+                        acc.append(np.full(1, _AggPartial._init_of(spec)))
+                    counts.append(np.zeros(1))
+            np.add.at(counts.data, gids, p._counts.data)
+            for acc, pacc, spec in zip(accs, p._acc, self.aggs):
+                if spec.func == "min":
+                    np.minimum.at(acc.data, gids, pacc.data)
+                elif spec.func == "max":
+                    np.maximum.at(acc.data, gids, pacc.data)
+                else:  # sum / avg / count / count-distinct partials add
+                    np.add.at(acc.data, gids, pacc.data)
+        if self._counters is not None:
+            self._counters["partition_merges"] += 1
+        self._merge_cache = (stamp, gcols, accs, counts)
+        return gcols, accs, counts
+
     def result(self) -> Dict[str, np.ndarray]:
+        if self.n_partitions == 1:
+            p = self._parts[0]
+            gcols, accs, counts = p.group_cols, p._acc, p._counts
+        else:
+            gcols, accs, counts = self._merged()
         out: Dict[str, np.ndarray] = {}
         for k, name in enumerate(self.group_keys):
-            out[name] = self.group_cols[k].data.copy()
-        for acc, spec in zip(self._acc, self.aggs):
+            out[name] = gcols[k].data.copy()
+        for acc, spec in zip(accs, self.aggs):
             if spec.func == "avg":
                 with np.errstate(invalid="ignore", divide="ignore"):
-                    out[spec.name] = acc.data / np.maximum(self._counts.data, 1e-300)
+                    out[spec.name] = acc.data / np.maximum(counts.data, 1e-300)
             else:
                 out[spec.name] = acc.data.copy()
         return out
@@ -504,4 +789,6 @@ class SharedAggregateState:
 
     @property
     def n_groups(self) -> int:
-        return self._counts.n
+        if self.n_partitions == 1:
+            return self._parts[0].n_groups
+        return self._merged()[2].n

@@ -16,7 +16,12 @@ def _q3(db, date, seg=1.0, arrival=0.0):
 
 
 def _run(db, qs, mode, morsel=4096, invariant_checks=False):
-    session = graftdb.connect(db, EngineConfig(mode=mode, morsel_size=morsel))
+    # workers/partitions pinned to 1: these scenarios fix arrival offsets in
+    # single-stream virtual time (mid-flight overlap, OSP windows); the
+    # partition-parallel pool is exercised in test_partition_parallel
+    session = graftdb.connect(
+        db, EngineConfig(mode=mode, morsel_size=morsel, workers=1, partitions=1)
+    )
     eng = session.engine  # mechanism tests observe the internal layer
     if invariant_checks:
         orig = eng.check_activations

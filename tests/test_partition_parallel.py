@@ -1,0 +1,430 @@
+"""Partition-parallel execution core (DESIGN.md §9): parity of the sharded
+scan/state/scheduler stack against the 1×1 oracle across every mode,
+determinism of partial-aggregate merges under permuted interleavings,
+sharded-state index parity, worker-pool scheduling/utilization, the
+per-partition EXPLAIN GRAFT accounting, and the WallClock sleep cap."""
+
+import time
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import graftdb
+from graftdb import EngineConfig
+from repro.core.descriptors import StateSignature
+from repro.core.plans import AggSpec
+from repro.core.runtime import ScanNode
+from repro.core.scheduler import WallClock
+from repro.core.state import SharedAggregateState, SharedHashBuildState
+from repro.relational import queries, refexec
+from repro.relational.table import days
+
+ALL_MODES = ["isolated", "scan_sharing", "qpipe_osp", "residual", "graft"]
+
+
+def _workload(db, n=6, seed=123, spacing=0.001):
+    rng = np.random.default_rng(seed)
+    return [queries.sample_query(db, rng, arrival=i * spacing) for i in range(n)]
+
+
+def _run(db, mode, workers, partitions, qs, morsel=4096):
+    session = graftdb.connect(
+        db,
+        EngineConfig(mode=mode, morsel_size=morsel, workers=workers, partitions=partitions),
+    )
+    futs = session.submit_all(qs)
+    session.run()
+    return session, futs
+
+
+def _canon(res):
+    """Canonical row order: lexsort over all columns (group order is
+    partition-merge order under P > 1, which is not the oracle's)."""
+    keys = sorted(res)
+    order = np.lexsort([res[k] for k in keys])
+    return {k: np.asarray(res[k])[order] for k in keys}
+
+
+def assert_results_match(ra, rb, ctx=""):
+    """Element-wise identity after canonical row ordering. Keys, counts,
+    min/max merge exactly; sum/avg accumulate per-partition partials, so
+    they are compared at 1-ulp-scale tolerance (reassociation only)."""
+    ca, cb = _canon(ra), _canon(rb)
+    assert set(ca) == set(cb), ctx
+    for k in ca:
+        assert ca[k].shape == cb[k].shape, (ctx, k)
+        np.testing.assert_allclose(ca[k], cb[k], rtol=1e-12, atol=1e-12, err_msg=f"{ctx}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# Parity: workers>1, partitions>1 vs the 1×1 oracle, all five modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_partition_parity_vs_1x1_oracle(db, mode):
+    qs1 = _workload(db)
+    _, f1 = _run(db, mode, 1, 1, qs1)
+    qs2 = _workload(db)  # fresh Query objects (qids are unique per build)
+    _, f2 = _run(db, mode, 4, 8, qs2)
+    for a, b, q in zip(f1, f2, qs1):
+        assert_results_match(a.result(), b.result(), ctx=f"{mode}/q{q.template}")
+        # and both agree with the reference executor
+        assert_results_match(b.result(), refexec.execute(db, q.plan), ctx=f"{mode}/ref")
+
+
+@given(workers=st.integers(1, 5), partitions=st.integers(1, 9), seed=st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_partition_parity_property(db, workers, partitions, seed):
+    """Any (workers, partitions) grid point reproduces the 1×1 oracle."""
+    qs1 = _workload(db, n=4, seed=seed)
+    _, f1 = _run(db, "graft", 1, 1, qs1)
+    qs2 = _workload(db, n=4, seed=seed)
+    _, f2 = _run(db, "graft", workers, partitions, qs2)
+    for a, b in zip(f1, f2):
+        assert_results_match(a.result(), b.result(), ctx=f"w{workers}p{partitions}s{seed}")
+
+
+def test_run_is_deterministic(db):
+    """The pool is a deterministic simulation: identical configs produce
+    bit-identical latencies, timestamps, and counters."""
+    runs = []
+    for _ in range(2):
+        s, futs = _run(db, "graft", 3, 5, _workload(db))
+        runs.append(
+            (
+                [f.latency() for f in futs],
+                [f.stats()["t_complete"] for f in futs],
+                {k: v for k, v in s.counters.items()},
+            )
+        )
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic partial-aggregate merge under permuted worker interleavings
+# ---------------------------------------------------------------------------
+
+
+def _mk_agg(n_partitions):
+    aggs = (
+        AggSpec("sum", None, name="s"),
+        AggSpec("count", None, name="c"),
+        AggSpec("min", None, name="lo"),
+        AggSpec("max", None, name="hi"),
+        AggSpec("avg", None, name="m"),
+        AggSpec("count", None, distinct=True, name="d"),
+    )
+    return SharedAggregateState(1, None, ("g",), aggs, n_partitions=n_partitions)
+
+
+def _agg_streams(n_parts, n_batches=6, seed=0):
+    """Fixed per-partition update streams (what the scan shards deliver)."""
+    rng = np.random.default_rng(seed)
+    streams = []
+    for p in range(n_parts):
+        batches = []
+        for _ in range(n_batches):
+            n = int(rng.integers(5, 40))
+            g = rng.integers(0, 7, n).astype(np.float64)
+            v = rng.normal(size=n)
+            batches.append((p, [g], n, v))
+        streams.append(batches)
+    return streams
+
+
+def _feed(state, order, streams):
+    cursors = [0] * len(streams)
+    for p in order:
+        part, keys, n, v = streams[p][cursors[p]]
+        cursors[p] += 1
+        vals = [v, v, v, v, v, np.round(v, 1)]
+        state.update(keys, vals, n, part=part)
+
+
+def test_merge_determinism_under_permuted_interleavings():
+    """The same per-partition streams, delivered in any cross-partition
+    interleaving (= any worker schedule), merge to bit-identical results —
+    including count(distinct), whose seen-pairs dedup globally."""
+    P, B = 4, 6
+    streams = _agg_streams(P, B)
+    round_robin = [p for _ in range(B) for p in range(P)]
+    reversed_rr = [p for _ in range(B) for p in reversed(range(P))]
+    rng = np.random.default_rng(42)
+    shuffled = list(round_robin)
+    # permute while preserving each partition's internal order
+    order = np.argsort(rng.random(len(shuffled)), kind="stable")
+    shuffled = [x for _, x in sorted(zip(order, shuffled), key=lambda t: t[0])]
+    results = []
+    for order_ in (round_robin, reversed_rr, shuffled):
+        st_ = _mk_agg(P)
+        _feed(st_, order_, streams)
+        results.append(st_.result())
+    for other in results[1:]:
+        assert set(other) == set(results[0])
+        for k in results[0]:
+            a, b = _canon(results[0]), _canon(other)
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_partitioned_distinct_counts_match_unpartitioned():
+    """count(distinct) with global seen-pair dedup: P partials agree with
+    the single-stream oracle exactly."""
+    P = 3
+    streams = _agg_streams(P, 4, seed=9)
+    order = [p for _ in range(4) for p in range(P)]
+    sp = _mk_agg(P)
+    _feed(sp, order, streams)
+    s1 = _mk_agg(1)
+    # oracle: same rows, single partition, same delivery order
+    cursors = [0] * P
+    for p in order:
+        part, keys, n, v = streams[p][cursors[p]]
+        cursors[p] += 1
+        vals = [v, v, v, v, v, np.round(v, 1)]
+        s1.update(keys, vals, n, part=0)
+    a, b = _canon(sp.result()), _canon(s1.result())
+    for k in ("g", "c", "d", "lo", "hi"):
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    np.testing.assert_allclose(a["s"], b["s"], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Sharded hash-build state: storage is partition-independent, probes exact
+# ---------------------------------------------------------------------------
+
+
+def _fill_state(state, rng):
+    for _ in range(8):
+        n = int(rng.integers(10, 200))
+        dids = rng.integers(0, 500, n)
+        # a derivation always carries one keycode (did -> row -> build key),
+        # the invariant key-hash did-sharding relies on; % keeps plenty of
+        # duplicate keys across and within batches (multi-match states)
+        kc = dids % 97
+        state.insert_or_mark(
+            dids,
+            kc,
+            {"k": kc.astype(float), "x": dids.astype(float)},
+            rng.integers(1, 4, n).astype(np.uint64),
+            rng.integers(0, 2, n).astype(np.uint64),
+        )
+
+
+@pytest.mark.parametrize("n_partitions", [2, 5, 8])
+def test_hash_state_shard_parity(n_partitions):
+    """P-sharded did/probe indexes leave the SoA bit-identical to P=1 and
+    return byte-identical probe match pairs (probe-row-major, entries in
+    insertion order), including multi-match keys."""
+    sig = StateSignature("hash_build", ("t", ("k",), ("x",)))
+    s1 = SharedHashBuildState(1, sig, ("k",), ("x",))
+    sp = SharedHashBuildState(2, sig, ("k",), ("x",), n_partitions=n_partitions)
+    _fill_state(s1, np.random.default_rng(3))
+    _fill_state(sp, np.random.default_rng(3))
+    np.testing.assert_array_equal(s1.did.data, sp.did.data)
+    np.testing.assert_array_equal(s1.keycode.data, sp.keycode.data)
+    np.testing.assert_array_equal(s1.vis.data, sp.vis.data)
+    np.testing.assert_array_equal(s1.emask.data, sp.emask.data)
+    assert (s1.rows_inserted, s1.rows_marked) == (sp.rows_inserted, sp.rows_marked)
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        pk = rng.integers(-5, 120, int(rng.integers(1, 300)))
+        p1, e1 = s1.probe(pk)
+        p2, e2 = sp.probe(pk)
+        np.testing.assert_array_equal(p1, p2)
+        np.testing.assert_array_equal(e1, e2)
+        # interleave growth with probing (lazy index sync under sharding)
+        _fill_state(s1, np.random.default_rng(77))
+        _fill_state(sp, np.random.default_rng(77))
+
+
+# ---------------------------------------------------------------------------
+# Worker pool: utilization stats, modeled speedup, scan shard geometry
+# ---------------------------------------------------------------------------
+
+
+def test_worker_utilization_stats(db):
+    s, futs = _run(db, "graft", 4, 8, _workload(db))
+    w = s.worker_stats()
+    assert w["n"] == 4 and len(w["busy_s"]) == 4 and len(w["utilization"]) == 4
+    assert all(b > 0 for b in w["busy_s"])  # every worker executed units
+    assert all(0.0 <= u <= 1.0 + 1e-9 for u in w["utilization"])
+    assert w["makespan_s"] == pytest.approx(s.now)
+    # futures surface the same block
+    assert futs[0].stats()["workers"]["n"] == 4
+
+
+def test_modeled_speedup_at_4_workers(db):
+    """The pool models real parallel speedup: 4×8 must finish the same
+    graft workload in well under half the 1×1 virtual makespan."""
+    s1, _ = _run(db, "graft", 1, 1, _workload(db, n=8, seed=5))
+    s4, _ = _run(db, "graft", 4, 8, _workload(db, n=8, seed=5))
+    assert s4.now < 0.6 * s1.now, (s1.now, s4.now)
+
+
+def test_scan_partitions_cover_cycle(db):
+    node = ScanNode(1, db["lineitem"], 1024, n_partitions=5)
+    assert node.part_counts.sum() == node.n_morsels
+    assert (node.part_counts > 0).all()
+    assert node.part_starts[0] == 0
+    assert (np.diff(node.part_starts) == node.part_counts[:-1]).all()
+    # more partitions than morsels: clamped, never empty shards
+    tiny = ScanNode(2, db["nation"], 1 << 20, n_partitions=16)
+    assert tiny.n_partitions == tiny.n_morsels == 1
+
+
+def test_partitions_default_to_workers(db):
+    cfg = EngineConfig(workers=3)
+    assert cfg.n_partitions == 3
+    assert EngineConfig(workers=3, partitions=7).n_partitions == 7
+    with pytest.raises(ValueError):
+        EngineConfig(workers=0)
+    with pytest.raises(ValueError):
+        EngineConfig(partitions=-2)
+    # the pool needs virtual clocks: name, class, and instance all rejected
+    with pytest.raises(ValueError):
+        EngineConfig(workers=2, clock="wall")
+    with pytest.raises(ValueError):
+        EngineConfig(workers=2, clock=WallClock)
+    with pytest.raises(ValueError):
+        EngineConfig(workers=2, clock=WallClock())
+
+
+def test_env_default_workers_downgrade_on_wall_clock(monkeypatch):
+    """GRAFTDB_TEST_WORKERS is a *default*: wall-clock configs silently
+    stay single-worker instead of failing scripts that never asked for a
+    pool; explicitly conflicting requests still raise."""
+    monkeypatch.setenv("GRAFTDB_TEST_WORKERS", "4")
+    cfg = EngineConfig(clock="wall")
+    assert cfg.workers == 1
+    assert EngineConfig(clock="work").workers == 4
+    with pytest.raises(ValueError):
+        EngineConfig(workers=2, clock="wall")  # explicit: still an error
+
+
+def test_gate_partition_frontier_progresses(db_mid):
+    """The per-partition visibility frontier (§9): a consumer's gate
+    reports producer scan-shard delivery while closed, and the DAG
+    snapshot surfaces it on state-ref edges."""
+    from repro.core.dag import snapshot
+
+    session = graftdb.connect(
+        db_mid, EngineConfig(mode="graft", morsel_size=4096, workers=1, partitions=4)
+    )
+    q = queries.make_query(
+        db_mid, "q3", {"segment": 1.0, "date": float(days("1995-03-15"))}, 0.0
+    )
+    session.submit(q)
+    eng = session.engine
+    # drive the engine unit by unit and watch a closed gate's frontier
+    # advance toward (total, total)
+    from repro.core.scheduler import extract_ready_units
+
+    main_member = next(m for h in eng.handles.values() for m in h.members if m.kind == "main")
+    gate = main_member.gates[0]
+    assert not gate.open()
+    seen = set()
+    for _ in range(2000):
+        units = extract_ready_units(eng)
+        if not units or gate.open():
+            break
+        node, part = units[0]
+        node.advance(eng, part)
+        eng.check_activations()
+        seen.add(gate.partition_frontier())
+    done_totals = sorted(seen)
+    assert len(done_totals) > 1, "frontier never progressed"
+    assert all(d <= t for d, t in done_totals)
+    # snapshot surfaces the frontier tuple on every state-ref edge
+    snap = snapshot(eng)
+    assert snap.state_ref_edges
+    for _, _, _, gate_open, frontier in snap.state_ref_edges:
+        d, t = frontier
+        assert 0 <= d <= t
+    session.run()
+
+
+# ---------------------------------------------------------------------------
+# Per-partition EXPLAIN GRAFT accounting
+# ---------------------------------------------------------------------------
+
+
+def test_explain_partition_splits_sum_to_demand(db_mid):
+    """Per-partition represented/residual splits partition each boundary's
+    isolated-plan demand exactly (workers=1 keeps the overlap offset valid;
+    partitions>1 shards the accounting)."""
+    session = graftdb.connect(
+        db_mid,
+        EngineConfig(
+            mode="graft", morsel_size=4096, workers=1, partitions=4, capture_explain=True
+        ),
+    )
+    qa = queries.make_query(
+        db_mid, "q3", {"segment": 1.0, "date": float(days("1995-03-15"))}, 0.0
+    )
+    qb = queries.make_query(
+        db_mid, "q3", {"segment": 1.0, "date": float(days("1995-03-20"))}, 0.02
+    )
+    fa, fb = session.submit_all([qa, qb])
+    session.run()
+    for fut in (fa, fb):
+        exp = fut.explain()
+        for b in [x for root in exp.boundaries for x in root.flat()]:
+            assert len(b.part_demand_rows) == 4
+            assert sum(b.part_demand_rows) == b.demand_rows
+            for p in range(4):
+                assert (
+                    b.part_represented_rows[p]
+                    + b.part_residual_rows[p]
+                    + b.part_unattached_rows[p]
+                    == b.part_demand_rows[p]
+                ), (b, p)
+        totals = exp.partition_totals()
+        assert sum(r["demand_rows"] for r in totals) == exp.total_demand_rows
+        assert sum(r["represented_rows"] for r in totals) == exp.represented_rows
+        d = exp.to_dict()
+        assert d["partition_totals"] == totals
+    assert fb.explain().represented_rows > 0  # the overlap did graft
+
+
+# ---------------------------------------------------------------------------
+# WallClock sleep cap (virtual-dominant traces must not block)
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_caps_long_sleeps():
+    clk = WallClock(max_sleep_s=0.02)
+    target = clk.now + 5.0
+    t0 = time.perf_counter()
+    clk.advance_to(target)
+    assert time.perf_counter() - t0 < 1.0  # capped: no 5s block
+    assert clk.now >= target  # the remainder was skipped virtually
+    # short gaps still sleep for real (clock stays near real time)
+    t1 = time.perf_counter()
+    clk.advance_to(clk.now + 0.01)
+    assert 0.005 < time.perf_counter() - t1 < 0.5
+
+
+def test_wallclock_uncapped_still_sleeps():
+    clk = WallClock()
+    t0 = time.perf_counter()
+    clk.advance_to(clk.now + 0.02)
+    assert time.perf_counter() - t0 >= 0.015
+
+
+def test_wall_sessions_use_configured_cap(db):
+    # wall clocks are single-worker by validation (pin against the
+    # GRAFTDB_TEST_WORKERS matrix leg)
+    session = graftdb.connect(
+        db, EngineConfig(mode="graft", clock="wall", max_sleep_s=0.05, workers=1)
+    )
+    assert session.clock.clocks[0].max_sleep_s == 0.05
+    q = queries.make_query(
+        db, "q3", {"segment": 1.0, "date": float(days("1995-03-15"))}, arrival=2.0
+    )
+    t0 = time.perf_counter()
+    fut = session.submit(q)
+    fut.result()  # arrival 2s in the future: uncapped this would sleep ~2s
+    assert time.perf_counter() - t0 < 1.5
+    assert fut.latency() >= 0.0

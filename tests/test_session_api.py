@@ -108,8 +108,14 @@ def test_explain_graft_extents_sum_to_demand(db_mid):
     """TPC-H Q3 overlap scenario (the paper's Fig. 3 instance): the captured
     EXPLAIN GRAFT partitions every boundary's demand exactly into
     represented + residual + unattached."""
+    # workers/partitions pinned: the 0.02s offset must land mid-flight in
+    # single-stream time (the pool finishes Q_A earlier at higher worker
+    # counts; overlap under workers>1 is covered in test_partition_parallel)
     session = graftdb.connect(
-        db_mid, EngineConfig(mode="graft", morsel_size=4096, capture_explain=True)
+        db_mid,
+        EngineConfig(
+            mode="graft", morsel_size=4096, capture_explain=True, workers=1, partitions=1
+        ),
     )
     qa = _q3(db_mid, "1995-03-15")
     qb = _q3(db_mid, "1995-03-20", arrival=0.02)  # broader, arrives mid-flight
@@ -254,10 +260,19 @@ def test_stats_expose_data_plane_counters(db):
     fut = session.submit(_q3(db, "1995-03-15"))
     fut.result()
     counters = fut.stats()["counters"]
-    assert set(counters) == {"index_rebuilds", "kernel_lens_probes", "fused_filter_rows"}
+    assert set(counters) == {
+        "index_rebuilds",
+        "kernel_lens_probes",
+        "fused_filter_rows",
+        "partition_merges",
+        "partition_probe_merges",
+    }
     assert counters["fused_filter_rows"] > 0  # source predicates ran fused
     assert counters["index_rebuilds"] > 0  # did/key indexes doubled under growth
     assert counters["kernel_lens_probes"] == 0  # reference backend: no kernel lens
+    # the worker-pool utilization block rides along on every stats dict
+    wstats = fut.stats()["workers"]
+    assert wstats["n"] >= 1 and len(wstats["busy_s"]) == wstats["n"]
     # engine-level stats mirror the same counters
     stats = session.stats()
     for k, v in counters.items():
