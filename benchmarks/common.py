@@ -32,13 +32,14 @@ def get_db(sf: float = DEFAULT_SF):
 
 
 def open_session(
-    db, mode: str, wall: bool = False, workers: int = 1, partitions: int = 1
+    db, mode: str, wall: bool = False, workers: int = 1, partitions: int = 1, **extra
 ) -> graftdb.Session:
     """One place where every benchmark obtains its engine: the Session API.
 
     Paper figures pin workers=partitions=1 (the prototype's single-worker
     loop, byte-stable across PRs); the partition-parallel grid lives in
-    scale_sweep.py."""
+    scale_sweep.py. ``extra`` passes further EngineConfig knobs through
+    (retention / memory_budget / admission for the open-loop overload sweep)."""
     return graftdb.connect(
         db,
         EngineConfig(
@@ -47,6 +48,7 @@ def open_session(
             clock="wall" if wall else "work",
             workers=workers,
             partitions=partitions,
+            **extra,
         ),
     )
 
@@ -114,10 +116,13 @@ def run_open_loop(
     warm_qph: float = 1000.0,
     warm_s: float = 120.0,
     seed: int = 11,
+    config_extra: Optional[Dict] = None,
 ) -> Dict:
     """Open loop (paper §6.5): Poisson arrivals at the offered load; the run
     drains after the measurement phase. Response time = scheduled arrival ->
-    completion. All systems replay the same trace."""
+    completion. All systems replay the same trace. ``config_extra`` forwards
+    EngineConfig knobs (retention / memory_budget / admission — the §10
+    overload path) and their queue/eviction stats ride back in the result."""
     rng = np.random.default_rng(seed)
     trace = []
     t = 0.0
@@ -136,16 +141,26 @@ def run_open_loop(
     arrivals = [
         queries.sample_query(db, qrng, arrival=at) for at in trace
     ]
-    session = open_session(db, mode)
+    session = open_session(db, mode, **(config_extra or {}))
     futures = session.submit_all(arrivals)
     session.run()
     lats = np.array([f.latency() for f in futures[measured_from:]])
+    stats = session.stats()
     return {
         "mode": mode,
         "offered_qph": offered_qph,
         "n_measured": len(lats),
         "p95_s": float(np.percentile(lats, 95)) if len(lats) else float("nan"),
         "median_s": float(np.median(lats)) if len(lats) else float("nan"),
+        "completed": int(stats["completed"]),
+        "queued_admissions": int(stats["queued_admissions"]),
+        "queue_delay_s_total": float(stats["queue_delay_s_total"]),
+        "forced_admissions": int(stats["forced_admissions"]),
+        "evictions": int(stats["evictions"]),
+        "evicted_bytes": int(stats["evicted_bytes"]),
+        "state_revivals": int(stats["state_revivals"]),
+        "retained_high_water_bytes": int(stats["retained_high_water_bytes"]),
+        "mem_high_water_bytes": int(stats["mem_high_water_bytes"]),
     }
 
 

@@ -18,7 +18,10 @@ from ..core.scheduler import WallClock, WorkClock
 
 CLOCKS = ("work", "wall")
 BACKENDS = ("reference", "pallas")
-RETENTION_POLICIES = ("refcount",)  # paper §6.1: release at zero references
+# 'refcount' — paper §6.1: release at zero references. 'epoch' — retire
+# zero-ref states for later grafts under a memory-budgeted evictor (§10).
+RETENTION_POLICIES = ("refcount", "epoch")
+ADMISSION_POLICIES = ("always", "adaptive")
 
 
 def _default_workers() -> int:
@@ -46,8 +49,19 @@ class EngineConfig:
     * ``backend`` — ``"reference"`` (NumPy row engine) or ``"pallas"``
       (vectorized jax_pallas probe/aggregate kernels), or an
       ``ExecutionBackend`` instance.
-    * ``retention`` — shared-state retention policy; ``"refcount"`` is the
-      evaluated prototype's release-at-zero-refs policy.
+    * ``retention`` — shared-state retention policy: ``"refcount"`` is the
+      evaluated prototype's release-at-zero-refs policy; ``"epoch"``
+      retires zero-ref states (kept observable for later grafts) and
+      reclaims them oldest-epoch-first under ``memory_budget`` (§10).
+    * ``memory_budget`` — bytes of *retired* shared state the epoch
+      evictor retains (None = retain without bound). Pinned state — live
+      lenses or queued-but-admissible ones — is never evicted; its
+      footprint is bounded by admission control, not by this budget.
+    * ``admission`` — open-loop arrival admission: ``"always"`` admits
+      every due arrival (seed behavior); ``"adaptive"`` admits freely below
+      ``admission_max_inflight`` active queries and past that only arrivals
+      whose graft potential reaches ``admission_share_threshold`` — the
+      rest queue until load drops (queue delays surface in ``stats()``).
     * ``zone_maps`` — beyond-paper morsel skipping on min/max zones.
     * ``capture_explain`` — record a structured grafting explanation
       (``QueryFuture.explain()``) at each query's admission.
@@ -67,6 +81,10 @@ class EngineConfig:
     clock: Union[str, object] = "work"
     backend: Union[str, object] = "reference"
     retention: str = "refcount"
+    memory_budget: Optional[int] = None
+    admission: str = "always"
+    admission_max_inflight: int = 8
+    admission_share_threshold: float = 0.5
     zone_maps: bool = False
     capture_explain: bool = False
     max_steps: int = 50_000_000
@@ -98,6 +116,31 @@ class EngineConfig:
         if self.retention not in RETENTION_POLICIES:
             raise ValueError(
                 f"retention must be one of {RETENTION_POLICIES}, got {self.retention!r}"
+            )
+        if self.memory_budget is not None:
+            if not isinstance(self.memory_budget, int) or self.memory_budget < 0:
+                raise ValueError(
+                    f"memory_budget must be a non-negative int (bytes) or None, "
+                    f"got {self.memory_budget!r}"
+                )
+            if self.retention != "epoch":
+                raise ValueError(
+                    "memory_budget requires retention='epoch' (the refcount "
+                    "policy frees state at zero refs — there is nothing to budget)"
+                )
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"admission must be one of {ADMISSION_POLICIES}, got {self.admission!r}"
+            )
+        if not isinstance(self.admission_max_inflight, int) or self.admission_max_inflight < 1:
+            raise ValueError(
+                f"admission_max_inflight must be a positive int, "
+                f"got {self.admission_max_inflight!r}"
+            )
+        if not (0.0 < self.admission_share_threshold <= 1.0):
+            raise ValueError(
+                f"admission_share_threshold must be in (0, 1], "
+                f"got {self.admission_share_threshold!r}"
             )
         if self.cost_model is not None:
             unknown = set(self.cost_model) - set(DEFAULT_COST_MODEL)
@@ -176,6 +219,17 @@ class EngineConfig:
 
         return resolve_backend(self.backend)
 
+    def make_admission(self):
+        """Admission controller for the session's Runner (None = admit all)."""
+        if self.admission == "always":
+            return None
+        from ..core.scheduler import AdmissionController
+
+        return AdmissionController(
+            max_inflight=self.admission_max_inflight,
+            share_threshold=self.admission_share_threshold,
+        )
+
     def with_(self, **kw) -> "EngineConfig":
         """Functional update (frozen dataclass)."""
         return replace(self, **kw)
@@ -190,15 +244,32 @@ class ServingConfig:
     * ``min_share`` — minimum shared-prefix length (tokens) worth attaching.
     * ``prefill_tok_s`` / ``decode_step_s`` — SimExecutor cost model; ignored
       when an explicit ``executor`` is passed to ``connect_serving``.
+    * ``retain_prefixes`` — keep zero-ref prefix states (their covered KV
+      cache serves later matching requests) instead of dropping them (§10).
+    * ``memory_budget_tokens`` — token budget of retained prefixes; the
+      evictor reclaims retired states oldest-epoch-first past it (None =
+      retain without bound; requires ``retain_prefixes``).
     """
 
     fold: bool = True
     min_share: int = 16
     prefill_tok_s: float = 8000.0
     decode_step_s: float = 0.02
+    retain_prefixes: bool = False
+    memory_budget_tokens: Optional[int] = None
 
     def __post_init__(self):
         if self.min_share < 0:
             raise ValueError(f"min_share must be >= 0, got {self.min_share!r}")
         if self.prefill_tok_s <= 0 or self.decode_step_s <= 0:
             raise ValueError("executor cost-model rates must be positive")
+        if self.memory_budget_tokens is not None:
+            if not isinstance(self.memory_budget_tokens, int) or self.memory_budget_tokens < 0:
+                raise ValueError(
+                    f"memory_budget_tokens must be a non-negative int or None, "
+                    f"got {self.memory_budget_tokens!r}"
+                )
+            if not self.retain_prefixes:
+                raise ValueError(
+                    "memory_budget_tokens requires retain_prefixes=True"
+                )

@@ -59,6 +59,9 @@ class BoundaryExplain:
     residual_rows: int
     unattached_rows: int
     state_id: Optional[int] = None  # selected shared state (None = fresh)
+    # the selected state is retired (zero refs, kept by the epoch retention
+    # policy §10) — attaching would revive it out of the evictor's reach
+    state_retired: bool = False
     nested: Tuple["BoundaryExplain", ...] = ()
     part_demand_rows: Tuple[int, ...] = ()
     part_represented_rows: Tuple[int, ...] = ()
@@ -146,6 +149,7 @@ class GraftExplain:
                     "residual_rows": b.residual_rows,
                     "unattached_rows": b.unattached_rows,
                     "state_id": b.state_id,
+                    "state_retired": b.state_retired,
                     "part_demand_rows": list(b.part_demand_rows),
                     "part_represented_rows": list(b.part_represented_rows),
                     "part_residual_rows": list(b.part_residual_rows),
@@ -175,7 +179,11 @@ class GraftExplain:
         for root in self.boundaries:
             for b in root.flat():
                 pad = "    " + "  " * b.depth
-                tgt = f" -> state #{b.state_id}" if b.state_id is not None else " -> fresh state"
+                if b.state_id is not None:
+                    tag = " (retired)" if b.state_retired else ""
+                    tgt = f" -> state #{b.state_id}{tag}"
+                else:
+                    tgt = " -> fresh state"
                 lines.append(
                     f"{pad}build[{b.build_table}] {b.decision}{tgt}: "
                     f"demand {b.demand_rows:,} (rep {b.represented_rows:,} / "
@@ -281,6 +289,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
         for s in engine.state_index.get(sig, ()):
             candidate = s
             break
+    retired = bool(candidate is not None and candidate.retired_epoch is not None)
 
     # Represented extent: proven containment against allowed coverage.
     if candidate is not None and mode.allow_represented and b_q is not None:
@@ -310,6 +319,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                     residual_rows=0,
                     unattached_rows=0,
                     state_id=candidate.state_id,
+                    state_retired=retired,
                     nested=nested,
                     part_demand_rows=tuple(int(x) for x in split),
                     part_represented_rows=tuple(int(x) for x in split),
@@ -336,6 +346,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                 residual_rows=demand - granted,
                 unattached_rows=0,
                 state_id=candidate.state_id,
+                state_retired=retired,
                 nested=nested,
                 part_demand_rows=tuple(int(x) for x in split),
                 part_represented_rows=tuple(int(x) for x in rep_parts),
@@ -357,6 +368,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
             residual_rows=demand,
             unattached_rows=0,
             state_id=candidate.state_id,
+            state_retired=retired,
             nested=nested,
             part_demand_rows=tuple(int(x) for x in split),
             part_represented_rows=_zeros_like(split),

@@ -68,6 +68,7 @@ class QueryFuture:
             kinds[m.kind] = kinds.get(m.kind, 0) + 1
             rows_sunk += m.rows_sunk
         eng_counters = self._session._engine.counters
+        admission = self._session._runner.admission_log.get(self.qid)
         return {
             "qid": self.qid,
             "template": self.query.template,
@@ -90,8 +91,19 @@ class QueryFuture:
                     "fused_filter_rows",
                     "partition_merges",
                     "partition_probe_merges",
+                    # lifecycle + admission (engine-wide, §10)
+                    "evictions",
+                    "evicted_bytes",
+                    "state_revivals",
+                    "queued_admissions",
+                    "forced_admissions",
                 )
             },
+            # per-query admission record (§10): decision ('graft'/'fresh'/
+            # 'forced'), whether it queued, and the queue delay. None when
+            # the session runs without an admission controller.
+            "admission": admission,
+            "queue_delay_s": (admission or {}).get("queue_delay_s", 0.0),
             # partition-parallel pool utilization (engine-wide, §9)
             "workers": self._session.worker_stats(),
         }

@@ -35,7 +35,11 @@ class ServingSession:
             decode_step_s=self.config.decode_step_s,
         )
         self._sched = FoldingScheduler(
-            self.executor, fold=self.config.fold, min_share=self.config.min_share
+            self.executor,
+            fold=self.config.fold,
+            min_share=self.config.min_share,
+            retain_prefixes=self.config.retain_prefixes,
+            memory_budget_tokens=self.config.memory_budget_tokens,
         )
         self._sched.on_admit = self._capture_admit
         self._futures: Dict[int, RequestFuture] = {}
@@ -124,6 +128,9 @@ class ServingSession:
             "live_states": self.live_states,
             "completed": sum(e["completed"] for e in self._episodes),
             "prefill_tokens": dict(self._sched.metrics),
+            # prefix-state lifecycle (§10): retention/eviction gauges
+            "retain_prefixes": self.config.retain_prefixes,
+            "lifecycle": dict(self._sched.lifecycle_metrics),
         }
 
     def __repr__(self) -> str:

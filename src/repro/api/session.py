@@ -43,14 +43,20 @@ class Session:
             zone_maps=self.config.zone_maps,
             backend=self.backend,
             partitions=self.config.n_partitions,
+            retention=self.config.retention,
+            memory_budget=self.config.memory_budget,
         )
+        admission = self.config.make_admission()
         if self.config.workers == 1:
-            self._runner = Runner(self._engine, clock=self.config.make_clock())
+            self._runner = Runner(
+                self._engine, clock=self.config.make_clock(), admission=admission
+            )
         else:
             self._runner = Runner(
                 self._engine,
                 workers=self.config.workers,
                 clock_factory=self.config.clock_factory(),
+                admission=admission,
             )
         if self.config.capture_explain:
             self._runner.submit_hook = self._capture_explain
@@ -75,7 +81,9 @@ class Session:
         fut = QueryFuture(self, query)
         self._futures[query.qid] = fut
         if query.arrival <= self.clock.now:
-            self._runner.submit_now(query)
+            # due now: still subject to the admission controller — a
+            # deferred query is admitted by run() when load drops
+            self._runner.submit_arrival(query)
         else:
             self._runner.add_arrival(query)
         return fut
@@ -165,6 +173,10 @@ class Session:
         out["backend"] = self.backend.name
         out["workers"] = self.config.workers
         out["partitions"] = self._engine.n_partitions
+        # overload path (§10): admission queue + lifecycle gauges
+        out["admission"] = self.config.admission
+        out["queued_pending"] = len(self._runner._admit_queue)
+        out["memory_budget"] = self.config.memory_budget
         backend_stats = getattr(self.backend, "stats", None)
         if backend_stats is not None:
             for k, v in backend_stats().items():

@@ -30,7 +30,7 @@ from .grafting import all_boundaries, estimate_demand, plan_spine, resolve_bound
 from .plans import Aggregate, OrderBy, Query
 from .predicates import TRUE
 from .runtime import AggGate, AggSink, Member, Pipeline, ProbeOp, ScanNode
-from .state import SharedAggregateState, SharedHashBuildState
+from .state import SharedAggregateState, SharedHashBuildState, StateLifecycle
 
 
 @dataclass(frozen=True)
@@ -112,6 +112,8 @@ class GraftEngine:
         zone_maps: bool = False,
         backend=None,
         partitions: int = 1,
+        retention: str = "refcount",
+        memory_budget: Optional[int] = None,
     ):
         self.db = db
         self.mode = MODES[mode]
@@ -127,6 +129,13 @@ class GraftEngine:
         if not isinstance(partitions, int) or partitions < 1:
             raise ValueError(f"partitions must be a positive int, got {partitions!r}")
         self.n_partitions = partitions
+        # Shared-state lifecycle (DESIGN.md §10): 'refcount' drops state at
+        # zero refs (paper §6.1); 'epoch' retires it for later grafts under
+        # a memory-budgeted evictor.
+        if retention not in ("refcount", "epoch"):
+            raise ValueError(f"retention must be 'refcount' or 'epoch', got {retention!r}")
+        self.retention = retention
+        self.memory_budget = memory_budget
 
         self.scans: Dict[object, ScanNode] = {}
         self.pipelines: Dict[object, Pipeline] = {}
@@ -145,8 +154,21 @@ class GraftEngine:
             "fused_filter_rows",
             "partition_merges",
             "partition_probe_merges",
+            # lifecycle + admission counters (§10) — present (zero) from the
+            # start so stats dicts stay shape-stable
+            "evictions",
+            "evicted_bytes",
+            "state_revivals",
+            "queued_admissions",
+            "queue_delay_s_total",
+            "forced_admissions",
+            "retained_bytes",
+            "retained_high_water_bytes",
+            "state_bytes",
+            "mem_high_water_bytes",
         ):
             self.counters[k] = 0.0
+        self.lifecycle = StateLifecycle(retention, memory_budget, self.counters)
         self.demand_cache: Dict = {}
         self._domains: Dict[str, int] = {}
         self._next_state_id = 0
@@ -161,6 +183,13 @@ class GraftEngine:
         self.clock = None
 
     # -- helpers -------------------------------------------------------------
+    def attach_shared(self, handle: QueryHandle, state: SharedHashBuildState) -> None:
+        """Attach a query lens to a (possibly retired) shared hash state:
+        the grafting admission path — revives retired states (§10)."""
+        state.attach(handle.qid)
+        handle.attached_states.append(state)
+        self.lifecycle.revive(state)
+
     def next_member_id(self) -> int:
         self._next_mid += 1
         return self._next_mid
@@ -213,6 +242,7 @@ class GraftEngine:
             existing = self.agg_index.get(agg_sig)
             if existing is not None and self._agg_attachable(existing):
                 existing.attach(handle.qid)
+                self.lifecycle.revive(existing)
                 handle.agg_state = existing
                 handle.agg_gate = AggGate(existing)
                 self.counters["agg_attaches"] += 1
@@ -354,23 +384,85 @@ class GraftEngine:
         return True
 
     def _release(self, handle: QueryHandle) -> None:
-        """Retention policy of the evaluated prototype: release operator
-        state once no query in the shared execution references it."""
+        """Release a completed query's lenses. ``retention='refcount'`` is
+        the evaluated prototype's policy — drop operator state the moment no
+        query references it; ``retention='epoch'`` retires zero-pin states
+        for later grafts and enforces the memory budget (§10)."""
         for s in handle.attached_states:
             s.detach(handle.qid)
             if not s.refs:
-                lst = self.state_index.get(s.sig)
-                if lst and s in lst:
-                    lst.remove(s)
-                # drop stale qpipe registry entries targeting this state
-                for k, (m, st) in list(self.qpipe_registry.items()):
-                    if st is s:
-                        self.qpipe_registry.pop(k, None)
+                if self.retention == "epoch":
+                    self.lifecycle.retire(s)
+                else:
+                    self._remove_from_indexes(s)
         agg = handle.agg_state
         if agg is not None:
             agg.detach(handle.qid)
             if not agg.refs and agg.sig is not None and self.agg_index.get(agg.sig) is agg:
-                self.agg_index.pop(agg.sig, None)
+                if self.retention == "epoch":
+                    self.lifecycle.retire(agg)
+                else:
+                    self._remove_from_indexes(agg)
+        if self.retention == "epoch":
+            self.enforce_memory_budget()
+
+    # -- lifecycle: eviction + memory accounting (§10) -----------------------
+    def _remove_from_indexes(self, state) -> None:
+        """Unregister a state from every admission-visible index — the one
+        place refcount release and eviction share, so the invalidation rule
+        cannot diverge between the two paths."""
+        if isinstance(state, SharedHashBuildState):
+            lst = self.state_index.get(state.sig)
+            if lst and state in lst:
+                lst.remove(state)
+            # drop stale qpipe registry entries targeting this state
+            for k, (m, st) in list(self.qpipe_registry.items()):
+                if st is state:
+                    self.qpipe_registry.pop(k, None)
+        else:
+            if state.sig is not None and self.agg_index.get(state.sig) is state:
+                self.agg_index.pop(state.sig, None)
+
+    def enforce_memory_budget(self, budget: Optional[int] = None) -> int:
+        """Evict retired states oldest-epoch-first until the retained bytes
+        fit the budget (default: the configured ``memory_budget``; pass 0 to
+        force-evict everything retired). Returns states evicted."""
+        victims = self.lifecycle.victims(budget)
+        for v in victims:
+            self._evict(v)
+        self._note_memory()
+        return len(victims)
+
+    def _evict(self, state) -> None:
+        """Reclaim one retired state: only legal at zero pins — a live or
+        admissible lens can never lose fragments it may still observe."""
+        if not state.evictable:
+            raise RuntimeError(
+                f"evicting pinned state #{state.state_id}: "
+                f"refs={state.refs} pins={state.pins}"
+            )
+        self.counters["evictions"] += 1
+        self.counters["evicted_bytes"] += state.nbytes()
+        self.lifecycle.drop(state)
+        state.evicted = True
+        self._remove_from_indexes(state)
+
+    def state_bytes(self) -> int:
+        """Resident bytes of every live + retired shared state."""
+        total = sum(s.nbytes() for lst in self.state_index.values() for s in lst)
+        total += sum(a.nbytes() for a in self.agg_index.values())
+        return total
+
+    def _note_memory(self) -> None:
+        """Refresh the memory gauges + high-water marks (epoch retention)."""
+        rb = self.lifecycle.retired_bytes()
+        self.counters["retained_bytes"] = rb
+        if rb > self.counters["retained_high_water_bytes"]:
+            self.counters["retained_high_water_bytes"] = rb
+        tb = self.state_bytes()
+        self.counters["state_bytes"] = tb
+        if tb > self.counters["mem_high_water_bytes"]:
+            self.counters["mem_high_water_bytes"] = tb
 
     # -- introspection -----------------------------------------------------------
     def has_active_work(self) -> bool:
@@ -380,6 +472,8 @@ class GraftEngine:
         out = dict(self.counters)
         out["live_states"] = sum(len(v) for v in self.state_index.values())
         out["live_agg_states"] = len(self.agg_index)
+        out["retained_states"] = len(self.lifecycle.retired)
+        out["retention"] = self.retention
         return out
 
 

@@ -179,6 +179,59 @@ def demand_keycodes(engine, node: PlanNode, key_attrs: Tuple[str, ...]) -> np.nd
     return codes
 
 
+def graft_potential(engine, query) -> float:
+    """Fraction of the query's isolated-plan demand that would ride existing
+    shared state if admitted right now (the admission controller's
+    cost-model signal, §10).
+
+    1.0 when the whole plan collapses onto an attachable shared aggregate
+    (exact identity); otherwise the demand-weighted share of stateful
+    boundaries with a live or retained candidate state under the exact
+    signature (represented and residual attachment both count — either way
+    the boundary's build work rides the shared execution). Read-only and
+    cached through ``engine.demand_cache`` like EXPLAIN GRAFT."""
+    from .descriptors import aggregate_signature, hash_build_signature
+
+    scan, joins, agg, _ = plan_spine(query.plan)
+    agg_sig = aggregate_signature(agg)
+    if agg_sig is not None and engine.mode.agg_share != "none":
+        existing = engine.agg_index.get(agg_sig)
+        if existing is not None and engine._agg_attachable(existing):
+            return 1.0
+    if not engine.mode.share_state:
+        return 0.0
+    total = shared = 0
+    for j in all_boundaries(query.plan):
+        d = estimate_demand(engine, j.build)
+        total += d
+        if engine.state_index.get(hash_build_signature(j)):
+            shared += d
+    return shared / total if total else 0.0
+
+
+def candidate_states(engine, query) -> List:
+    """The shared states an admission of ``query`` would select right now —
+    the admission controller pins these for deferred-but-admissible
+    arrivals so the evictor cannot reclaim coverage a queued lens is
+    waiting to observe (§10). Read-only; mirrors the signature selection of
+    ``resolve_boundary`` and the aggregate-identity attach."""
+    from .descriptors import aggregate_signature, hash_build_signature
+
+    out: List = []
+    _, _, agg, _ = plan_spine(query.plan)
+    agg_sig = aggregate_signature(agg)
+    if agg_sig is not None and engine.mode.agg_share != "none":
+        existing = engine.agg_index.get(agg_sig)
+        if existing is not None and engine._agg_attachable(existing):
+            out.append(existing)
+    if engine.mode.share_state:
+        for j in all_boundaries(query.plan):
+            lst = engine.state_index.get(hash_build_signature(j))
+            if lst:
+                out.append(lst[0])
+    return out
+
+
 def _probe_side_table(engine, join: HashJoin):
     scan, _ = build_spine(join)
     return engine.db[scan.table]
@@ -247,8 +300,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
             fully_covered = candidate.covers_with(b_q, allowed)
             if fully_covered:
                 # Fully represented: state-ref edge only, gate open now.
-                candidate.attach(qid)
-                handle.attached_states.append(candidate)
+                engine.attach_shared(handle, candidate)
                 candidate.add_grant(qid, allowed, b_ret)
                 engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
                 # upstream producer work eliminated by this state-lens obs.
@@ -261,21 +313,26 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
             # Partially represented: grant what is covered, install a
             # residual producer for the rest (its extent bit joins the
             # allowed set so the gate can open on its completion).
-            candidate.attach(qid)
-            handle.attached_states.append(candidate)
+            engine.attach_shared(handle, candidate)
             candidate.add_grant(qid, allowed, b_ret)
             engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
             member, eid = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
-            gate_allowed = allowed | (np.uint64(1) << np.uint64(eid)) if eid >= 0 else allowed
-            gate = Gate(candidate, b_q, gate_allowed)
+            if eid >= 0:
+                gate_allowed = allowed | (np.uint64(1) << np.uint64(eid))
+                gate = Gate(candidate, b_q, gate_allowed)
+            else:
+                # provenance bits exhausted (long-retained state, §10): the
+                # residual producer re-delivers every B_q row under the
+                # query's own visibility bit, so its completion alone is a
+                # sound gate — only coverage-based accounting is lost.
+                gate = Gate(candidate, None)
             gate.pending.add(member)
             member.waiting_gates.append(gate)
             return Attachment(candidate, gate, created=False, producer_member=member)
 
     # -- Residual-only attachment (no coverage observation)
     if candidate is not None and mode.allow_residual:
-        candidate.attach(qid)
-        handle.attached_states.append(candidate)
+        engine.attach_shared(handle, candidate)
         member, _ = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
         gate = Gate(candidate, None)  # own producer completion suffices
         gate.pending.add(member)
@@ -392,8 +449,7 @@ def _qpipe_try_merge(engine, handle, join, sig, b_q) -> Optional[Attachment]:
     if member.done or member.received > 0 or state.n_entries > 0:
         return None  # OSP window closed — only near-simultaneous arrivals merge
     # Merge: the existing physical producer also tags this query's bit.
-    state.attach(handle.qid)
-    handle.attached_states.append(state)
+    engine.attach_shared(handle, state)
     member.beneficiaries.append(handle.qid)
     gate = Gate(state, None)
     gate.pending.add(member)

@@ -39,6 +39,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from .engine import GraftEngine, QueryHandle
+from .grafting import candidate_states, graft_potential
 from .plans import Query
 from .runtime import Member, Pipeline, ScanNode
 
@@ -201,6 +202,51 @@ def unit_ready_time(node: ScanNode, part: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Admission control (overload-aware open-loop serving, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+class AdmissionController:
+    """Per-arrival admission decision for the open-loop queue.
+
+    ``decide(engine, query) -> (verdict, reason)`` where verdict is
+    ``'admit'`` or ``'defer'`` and reason labels the admitted path:
+    ``'graft'`` (rides existing shared state) or ``'fresh'`` (ordinary
+    plan). The adaptive policy admits freely below ``max_inflight`` active
+    queries; past it, only arrivals whose ``graft_potential`` — the
+    demand-weighted fraction of their isolated plan that existing shared
+    state would absorb — reaches ``share_threshold`` are admitted (their
+    marginal work is small and their lens pins state the evictor would
+    otherwise reclaim). Everything else queues until load drops; the
+    Runner pins a deferred arrival's candidate states
+    (``candidate_states``) so the evictor cannot reclaim coverage a
+    queued-but-admissible lens is waiting to observe.
+
+    Decisions depend only on engine state, so the whole pool stays a
+    deterministic simulation under any ``PoolClock`` schedule.
+    """
+
+    def __init__(self, max_inflight: int = 8, share_threshold: float = 0.5):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight!r}")
+        if not (0.0 < share_threshold <= 1.0):
+            raise ValueError(
+                f"share_threshold must be in (0, 1], got {share_threshold!r}"
+            )
+        self.max_inflight = max_inflight
+        self.share_threshold = share_threshold
+
+    def decide(self, engine: GraftEngine, query: Query) -> Tuple[str, str]:
+        potential = graft_potential(engine, query)
+        reason = "graft" if potential > 0.0 else "fresh"
+        if len(engine.active_handles) < self.max_inflight:
+            return ("admit", reason)
+        if potential >= self.share_threshold:
+            return ("admit", "graft")
+        return ("defer", "overload")
+
+
+# ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
 
@@ -221,6 +267,7 @@ class Runner:
         clock=None,
         workers: int = 1,
         clock_factory: Optional[Callable[[], object]] = None,
+        admission: Optional[AdmissionController] = None,
     ):
         self.engine = engine
         self.workers = max(1, int(workers))
@@ -236,21 +283,126 @@ class Runner:
         self.busy_s = [0.0] * self.workers
         engine.clock = self.clock
         self._rr: Tuple[int, int] = (0, -1)  # last executed (sid, partition)
-        self._seq = 0
         self._heap: List[Tuple[float, int, Query]] = []
+        # overload-aware admission (§10): None = admit every due arrival
+        # (the seed open-loop behavior); a controller may defer arrivals
+        # into the FIFO admit queue until load drops.
+        self.admission = admission
+        self._admit_queue: List[Tuple[float, int, Query, float]] = []
+        self._queued_pins: Dict[int, List] = {}  # qid -> pinned candidate states
+        # drain memo: controller verdicts depend only on engine state
+        # (active handles + shared-state indexes), which changes exactly at
+        # submissions and completions — skip replaying the queue through
+        # decide()/graft_potential when neither has happened
+        self._drain_ver: Optional[Tuple[float, float, int]] = None
+        self.admission_log: Dict[int, Dict[str, object]] = {}
         # Called with the query right before each admission (the Session
         # facade captures EXPLAIN GRAFT snapshots through this).
         self.submit_hook: Optional[Callable[[Query], None]] = None
 
     def add_arrival(self, query: Query) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (query.arrival, self._seq, query))
+        # keyed by (arrival, qid): permuted add_arrival orders of one trace
+        # replay identically (qids are allocated in trace order)
+        heapq.heappush(self._heap, (query.arrival, query.qid, query))
 
     def submit_now(self, query: Query) -> QueryHandle:
         """Admit one query immediately (query grafting happens here)."""
         if self.submit_hook is not None:
             self.submit_hook(query)
         return self.engine.submit(query)
+
+    def submit_arrival(self, query: Query) -> Optional[QueryHandle]:
+        """Admission-controlled immediate submission (the Session.submit
+        path for due arrivals). Returns the handle, or None if deferred."""
+        if self._try_admit(query, self.clock.now):
+            return self.engine.handles[query.qid]
+        return None
+
+    # -- admission path (§10) ------------------------------------------------
+    def _try_admit(self, q: Query, now: float, t_queued: Optional[float] = None) -> bool:
+        """Run one query through the admission controller; submit on admit,
+        enqueue first-time deferrals. Returns True iff submitted."""
+        if self.admission is None:
+            self.submit_now(q)
+            return True
+        verdict, reason = self.admission.decide(self.engine, q)
+        if verdict == "admit":
+            delay = (now - t_queued) if t_queued is not None else 0.0
+            if t_queued is not None:
+                self.engine.counters["queue_delay_s_total"] += delay
+                self._unpin_candidates(q.qid)
+            self.admission_log[q.qid] = {
+                "decision": reason,
+                "queued": t_queued is not None,
+                "queue_delay_s": delay,
+                "t_admitted": now,
+            }
+            self.submit_now(q)
+            return True
+        if t_queued is None:
+            self.engine.counters["queued_admissions"] += 1
+            self._admit_queue.append((q.arrival, q.qid, q, now))
+            # pin the candidate states this arrival would graft onto: a
+            # queued-but-admissible lens must not lose its coverage to the
+            # evictor while it waits (§10)
+            self._pin_candidates(q)
+        return False
+
+    def _pin_candidates(self, q: Query) -> None:
+        """(Re-)snapshot the pins of one queued arrival: states that became
+        candidates while it waited are pinned too, states that left the
+        index drop off. Idempotent — called at defer and at every
+        effective drain retry."""
+        token = ("queued", q.qid)
+        for s in self._queued_pins.pop(q.qid, ()):
+            s.unpin(token)
+        pinned = []
+        for s in candidate_states(self.engine, q):
+            s.pin(token)
+            pinned.append(s)
+        if pinned:
+            self._queued_pins[q.qid] = pinned
+
+    def _unpin_candidates(self, qid: int) -> None:
+        token = ("queued", qid)
+        for s in self._queued_pins.pop(qid, ()):
+            s.unpin(token)
+
+    def _drain_admit_queue(self, now: float, on_complete=None) -> None:
+        """Retry deferred arrivals in FIFO order; keep the still-deferred.
+        Memoized on (submitted, completed, queue length): re-deciding is
+        pointless until the engine state a verdict reads has changed."""
+        if not self._admit_queue:
+            return
+        c = self.engine.counters
+        ver = (c["submitted"], c["completed"], len(self._admit_queue))
+        if ver == self._drain_ver:
+            return
+        pending, self._admit_queue = self._admit_queue, []
+        for arr, qid, q, t0 in pending:
+            if self._try_admit(q, now, t_queued=t0):
+                self._after_events(on_complete)
+            else:
+                self._admit_queue.append((arr, qid, q, t0))
+                self._pin_candidates(q)  # re-snapshot against fresh state
+        self._drain_ver = (c["submitted"], c["completed"], len(self._admit_queue))
+
+    def _force_admit_head(self, now: float, on_complete=None) -> None:
+        """Liveness valve: admit the queue head unconditionally (reached
+        only if a policy defers while nothing can otherwise progress)."""
+        arr, qid, q, t0 = self._admit_queue.pop(0)
+        self._unpin_candidates(qid)
+        delay = now - t0
+        self.engine.counters["queue_delay_s_total"] += delay
+        self.engine.counters["forced_admissions"] += 1
+        self.admission_log[qid] = {
+            "decision": "forced",
+            "queued": True,
+            "queue_delay_s": delay,
+            "t_admitted": now,
+        }
+        self.submit_now(q)
+        self._after_events(on_complete)
 
     def worker_stats(self) -> Dict[str, object]:
         """Per-worker utilization of the run so far (QueryFuture.stats)."""
@@ -265,10 +417,11 @@ class Runner:
         }
 
     def _admit_due(self, now: float, on_complete) -> None:
+        self._drain_admit_queue(now, on_complete)
         while self._heap and self._heap[0][0] <= now:
             _, _, q = heapq.heappop(self._heap)
-            self.submit_now(q)
-            self._after_events(on_complete)
+            if self._try_admit(q, now):
+                self._after_events(on_complete)
 
     def run(
         self,
@@ -281,7 +434,7 @@ class Runner:
             self.add_arrival(q)
         steps = 0
         try:
-            while self._heap or engine.has_active_work():
+            while self._heap or self._admit_queue or engine.has_active_work():
                 steps += 1
                 if steps > max_steps:
                     raise RuntimeError("executor exceeded max_steps — livelock?")
@@ -303,9 +456,16 @@ class Runner:
                         if done:
                             self._after_events(on_complete, done)
                             continue
+                        if self._admit_queue:
+                            # nothing completable: free the admit queue head
+                            self._force_admit_head(self.clock.now, on_complete)
+                            continue
                         raise RuntimeError(
                             f"deadlock: {len(engine.active_handles)} active queries, no ready fragments"
                         )
+                    if self._admit_queue:
+                        self._force_admit_head(self.clock.now, on_complete)
+                        continue
                     break
                 # round-robin over ready (scan × partition) units
                 unit = None
@@ -343,6 +503,6 @@ class Runner:
                     # admit immediately if due (closed loop)
                     while self._heap and self._heap[0][0] <= self.clock.now:
                         _, _, q = heapq.heappop(self._heap)
-                        self.submit_now(q)
+                        self._try_admit(q, self.clock.now)
             engine.check_activations()
             done += engine.sweep_completions()

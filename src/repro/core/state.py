@@ -47,6 +47,19 @@ untouched while (fragment × partition) units touch disjoint shards.
 
 The Pallas ``hash_probe`` kernel consumes the same SoA layout; aggregate
 group ids and count(distinct) seen-pairs run on ``MultiKeyIndex``.
+
+Lifecycle (DESIGN.md §10): every shared state carries *pin counts* — the
+active lenses (attached queries, ``refs``) plus external admission pins
+(``pins``, held by the admission controller for queued-but-admissible
+lenses). Under the ``epoch`` retention policy a state whose pins drop to
+zero is *retired* (stamped with a monotonically increasing retention epoch
+and kept observable for later grafts) rather than dropped; the
+``StateLifecycle`` evictor reclaims retired states oldest-epoch-first when
+their bytes exceed the session's ``memory_budget``. Eviction is safe by
+construction — only zero-pin states are evictable, and every observation
+path (``probe`` / ``visible_mask`` / ``insert_or_mark`` / ``attach``)
+hard-fails on an evicted state, so no lens can ever read reclaimed
+fragments.
 """
 
 from __future__ import annotations
@@ -273,6 +286,12 @@ class SharedHashBuildState:
         # grants: qid -> list of (allowed_emask, retained_pred_conj)
         self.grants: Dict[int, List[Tuple[np.uint64, Conjunction]]] = {}
         self.refs: set = set()
+        # lifecycle (DESIGN.md §10): external admission pins, retirement
+        # epoch stamp (None while any lens or pin holds the state), and the
+        # evicted tombstone every observation path checks.
+        self.pins: set = set()
+        self.retired_epoch: Optional[int] = None
+        self.evicted = False
 
         # incremental multi-match probe index shards (DESIGN.md §8/§9),
         # synced lazily at probe time — build-only phases pay nothing.
@@ -282,6 +301,30 @@ class SharedHashBuildState:
         # counters
         self.rows_inserted = 0
         self.rows_marked = 0
+
+    # -- lifecycle guards ----------------------------------------------------
+    def _check_live(self) -> None:
+        """Eviction-vs-lens soundness (§10): an evicted state's fragments
+        are reclaimed — any observation attempt is a lifecycle bug, never a
+        silently wrong (empty) answer."""
+        if self.evicted:
+            raise RuntimeError(
+                f"state #{self.state_id} was evicted — no lens may observe it"
+            )
+
+    def pin(self, token) -> None:
+        """External admission pin: a queued-but-admissible lens holds the
+        state out of the evictor's reach until it attaches or withdraws."""
+        self._check_live()
+        self.pins.add(token)
+
+    def unpin(self, token) -> None:
+        self.pins.discard(token)
+
+    @property
+    def evictable(self) -> bool:
+        """No live lens (refs) and no admission pin observes this state."""
+        return not self.refs and not self.pins and not self.evicted
 
     # -- extent registry -----------------------------------------------------
     def register_extent(self, conj: Optional[Conjunction]) -> int:
@@ -364,6 +407,7 @@ class SharedHashBuildState:
         """
         if len(dids) == 0:
             return 0, 0
+        self._check_live()
         dids = np.asarray(dids, dtype=np.int64)
         keycodes = np.asarray(keycodes, dtype=np.int64)
         n0 = self.did.n
@@ -422,6 +466,7 @@ class SharedHashBuildState:
 
     # -- grants ---------------------------------------------------------------
     def add_grant(self, qid: int, allowed_emask: np.uint64, retained_conj: Conjunction) -> None:
+        self._check_live()
         self.slots.get(qid)
         self.grants.setdefault(qid, []).append((allowed_emask, retained_conj))
 
@@ -480,6 +525,7 @@ class SharedHashBuildState:
         in insertion order, independent of the shard count (each probe key
         lives in exactly one shard, so a stable row-major gather of the
         per-shard results reproduces the unsharded order exactly)."""
+        self._check_live()
         if self.keycode.n == 0 or len(probe_keycodes) == 0:
             return _EMPTY_PAIR
         self._sync_index()
@@ -511,6 +557,7 @@ class SharedHashBuildState:
     def visible_mask(self, qid: int, entry_idx: np.ndarray) -> np.ndarray:
         """Per-query state lens on entries: per-entry visibility bit OR an
         extent-scoped grant the entry's provenance+retained attrs satisfy."""
+        self._check_live()
         slot = self.slots.peek(qid)
         if slot is None:
             vis = np.zeros(len(entry_idx), dtype=bool)
@@ -529,11 +576,20 @@ class SharedHashBuildState:
 
     # -- lifecycle ------------------------------------------------------------
     def attach(self, qid: int) -> None:
+        self._check_live()
         self.refs.add(qid)
         self.slots.get(qid)
 
     def detach(self, qid: int) -> None:
         self.refs.discard(qid)
+        # Clear the query's visibility bit before its slot recycles: a state
+        # that outlives the query (live co-refs, or §10 epoch retention)
+        # must not leak its rows to the slot's next owner through a stale
+        # bit — the lens of a later query is exactly its own slot + grants.
+        slot = self.slots.peek(qid)
+        if slot is not None and self.vis.n:
+            v = self.vis.data
+            v &= ~(np.uint64(1) << np.uint64(slot))
         self.slots.release(qid)
         self.grants.pop(qid, None)
 
@@ -542,8 +598,11 @@ class SharedHashBuildState:
         return self.did.n
 
     def nbytes(self) -> int:
+        # floored at the fixed per-state overhead (object + index headers):
+        # a zero-entry state still occupies memory, which keeps force-evict
+        # (budget 0) able to select it
         per_entry = 8 * (3 + len(self.retained_attrs)) + 8
-        return self.did.n * per_entry
+        return 64 + self.did.n * per_entry
 
 
 # ---------------------------------------------------------------------------
@@ -696,6 +755,10 @@ class SharedAggregateState:
         self.complete = False
         self.refs: set = set()
         self.rows_consumed = 0
+        # lifecycle (§10): same pin/epoch/tombstone surface as hash states
+        self.pins: set = set()
+        self.retired_epoch: Optional[int] = None
+        self.evicted = False
 
     def update(
         self,
@@ -713,6 +776,7 @@ class SharedAggregateState:
         Pallas one-hot MXU kernel; defaults to ``np.bincount``."""
         if n == 0:
             return
+        self._check_live()
         self.rows_consumed += n
         if segment_sum is None:
             segment_sum = _bincount_segment_sum
@@ -782,13 +846,139 @@ class SharedAggregateState:
         return out
 
     def attach(self, qid: int) -> None:
+        self._check_live()
         self.refs.add(qid)
 
     def detach(self, qid: int) -> None:
         self.refs.discard(qid)
+
+    # -- lifecycle (§10, shared with SharedHashBuildState) -------------------
+    def _check_live(self) -> None:
+        if self.evicted:
+            raise RuntimeError(
+                f"aggregate state #{self.state_id} was evicted — no lens may observe it"
+            )
+
+    def pin(self, token) -> None:
+        self._check_live()
+        self.pins.add(token)
+
+    def unpin(self, token) -> None:
+        self.pins.discard(token)
+
+    @property
+    def evictable(self) -> bool:
+        return not self.refs and not self.pins and not self.evicted
+
+    def nbytes(self) -> int:
+        """Accumulator footprint estimate: per-group key + agg + count
+        columns (float64) summed over partials, plus the fixed per-state
+        overhead (floor — keeps empty states selectable by force-evict)."""
+        per_group = 8 * (len(self.group_keys) + len(self.aggs) + 1)
+        groups = sum(p.n_groups for p in self._parts)
+        return 64 + groups * per_group
 
     @property
     def n_groups(self) -> int:
         if self.n_partitions == 1:
             return self._parts[0].n_groups
         return self._merged()[2].n
+
+
+# ---------------------------------------------------------------------------
+# Retention lifecycle (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+class StateLifecycle:
+    """Retention lifecycle of shared operator state.
+
+    ``refcount`` — the evaluated prototype's policy (paper §6.1): the engine
+    drops a state the moment no query references it; the lifecycle manager
+    is inert. ``epoch`` — zero-pin states are *retired* instead: stamped
+    with the next retention epoch and kept in the shared-state index so
+    later arrivals can graft represented extents onto their coverage. A
+    memory-budgeted evictor reclaims retired states oldest-epoch-first
+    whenever their total bytes exceed ``memory_budget`` (None = retain
+    without bound).
+
+    Invariants (asserted throughout):
+
+    * retirement tracks *lenses*: a state retires when its last ref
+      detaches, whether or not admission pins are held — pins block
+      EVICTION, not retirement (``victims`` skips non-evictable states,
+      and a pinned retired state resumes eviction eligibility, at its
+      original epoch, the moment its pins drop);
+    * pinned ⇒ not evictable: a state with a live lens (``refs``) or an
+      admission pin (``pins``) is never handed to the evictor;
+    * retired ⇔ ``retired_epoch is not None`` ⇔ present in ``retired``;
+    * the budget governs the *evictable* retained bytes: pinned-retired
+      bytes belong to the admission-bounded working set (no evictor can
+      reclaim what a queued-but-admissible lens may still observe);
+    * evicted states are tombstoned (``evicted``) and removed from every
+      index — re-observation raises instead of answering from reclaimed
+      fragments.
+    """
+
+    def __init__(self, policy: str = "refcount", memory_budget: Optional[int] = None,
+                 counters: Optional[Dict] = None):
+        self.policy = policy
+        self.memory_budget = memory_budget
+        self.counters = counters if counters is not None else {}
+        self._epoch = 0
+        # state_id -> state, values ordered by retirement epoch (dicts are
+        # insertion-ordered and every retire stamps a fresh epoch)
+        self.retired: Dict[int, object] = {}
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def retire(self, state) -> None:
+        """Stamp a zero-ref state with the next retention epoch. Admission
+        pins do not block retirement — only eviction (``victims`` skips
+        pinned states until their pins drop)."""
+        if state.refs or state.evicted:
+            raise RuntimeError(
+                f"retiring state #{state.state_id} with live lenses: refs={state.refs}"
+            )
+        if state.retired_epoch is not None:
+            return
+        self._epoch += 1
+        state.retired_epoch = self._epoch
+        self.retired[state.state_id] = state
+
+    def revive(self, state) -> None:
+        """A new lens attached (or pinned) a retired state: back to live."""
+        if state.retired_epoch is not None:
+            state.retired_epoch = None
+            self.retired.pop(state.state_id, None)
+            self.counters["state_revivals"] = self.counters.get("state_revivals", 0) + 1
+
+    def drop(self, state) -> None:
+        self.retired.pop(state.state_id, None)
+        state.retired_epoch = None
+
+    def retired_bytes(self) -> int:
+        """Bytes of *evictable* retained state — the budget's domain.
+        Pinned-retired states (a queued-but-admissible lens holds them)
+        count toward the admission-bounded working set instead."""
+        return sum(s.nbytes() for s in self.retired.values() if s.evictable)
+
+    def victims(self, budget: Optional[int] = None) -> List:
+        """Retired states to evict, oldest epoch first, until the evictable
+        retained bytes fit ``budget`` (defaults to the configured memory
+        budget). Pinned states are skipped — never evicted."""
+        budget = self.memory_budget if budget is None else budget
+        if budget is None:
+            return []
+        total = self.retired_bytes()
+        out: List = []
+        for s in list(self.retired.values()):  # epoch order by construction
+            if total <= budget:
+                break
+            if not s.evictable:
+                continue
+            out.append(s)
+            total -= s.nbytes()
+        return out

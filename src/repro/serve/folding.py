@@ -15,7 +15,10 @@ Mapping (DESIGN.md §6, beyond-paper):
 |                                  | prefill work)                          |
 | per-query state lens             | request may read cache[0:matched_len)  |
 | state-readiness gate             | covered_tokens >= matched_len          |
-| retention policy                 | release prefix states with no refs     |
+| retention policy                 | release prefix states with no refs, or |
+|                                  | retain them under a token budget (§10) |
+| retention epoch / evictor        | zero-ref prefixes stamped + reclaimed  |
+|                                  | oldest-first past memory_budget_tokens |
 
 The scheduler is executor-agnostic: `SimExecutor` models token costs (used
 by tests/benchmarks); a real executor runs models/model.py prefill/decode.
@@ -55,6 +58,9 @@ class PrefixState:
         self.tokens = tokens
         self.covered = 0
         self.refs: set = set()
+        # retention epoch stamp (§10): None while any request pins the
+        # state; set when retired under retain_prefixes
+        self.retired_epoch: Optional[int] = None
 
     def visible_len(self, request_prefix_len: int) -> int:
         """Per-request state lens: a request observes only its matched
@@ -78,12 +84,33 @@ class FoldingScheduler:
     single-worker evaluation: the executor serves one token-batch at a time.
     """
 
-    def __init__(self, executor, fold: bool = True, min_share: int = 16):
+    def __init__(
+        self,
+        executor,
+        fold: bool = True,
+        min_share: int = 16,
+        retain_prefixes: bool = False,
+        memory_budget_tokens: Optional[int] = None,
+    ):
         self.ex = executor
         self.fold = fold
         self.min_share = min_share
+        # §10 lifecycle: retain zero-ref prefix states (their covered KV
+        # cache keeps serving later requests with the same prefix) and
+        # evict oldest-epoch-first past the token budget.
+        self.retain_prefixes = retain_prefixes
+        self.memory_budget_tokens = memory_budget_tokens
+        self._epoch = 0
         self.states: List[PrefixState] = []
         self.metrics = {"represented": 0, "residual": 0, "ordinary": 0}
+        # lifecycle gauges kept apart from the per-episode token metrics
+        self.lifecycle_metrics = {
+            "evicted_states": 0,
+            "evicted_tokens": 0,
+            "revived_states": 0,
+            "retained_tokens": 0,
+            "retained_tokens_high_water": 0,
+        }
         self._next_sid = 0  # scheduler-scoped state ids (no cross-instance leaks)
         # Admission hook for the Session facade (api/serving.py): called as
         # on_admit(req, attachment) right after each request is admitted.
@@ -146,6 +173,9 @@ class FoldingScheduler:
             return {**att, "state": st, "matched": len(req.prompt), "suffix": 0}
         st: PrefixState = att["state"]
         st.refs.add(req.rid)
+        if st.retired_epoch is not None:  # revive a retained prefix (§10)
+            st.retired_epoch = None
+            self.lifecycle_metrics["revived_states"] += 1
         req.represented_tokens = att["represented"]
         req.residual_tokens = att["residual"]
         req.ordinary_tokens = att["suffix"]
@@ -157,7 +187,43 @@ class FoldingScheduler:
     def release(self, req: Request) -> None:
         for st in self.states:
             st.refs.discard(req.rid)
-        self.states = [s for s in self.states if s.refs]  # retention policy
+        if not self.retain_prefixes:
+            self.states = [s for s in self.states if s.refs]  # drop at zero refs
+            return
+        # §10: retire zero-ref prefixes (their KV cache keeps serving later
+        # matching requests), then enforce the token budget oldest-first
+        for s in self.states:
+            if not s.refs and s.retired_epoch is None:
+                self._epoch += 1
+                s.retired_epoch = self._epoch
+        self._enforce_token_budget()
+
+    def _enforce_token_budget(self) -> None:
+        """Evict retired prefix states oldest-epoch-first until the retained
+        tokens fit ``memory_budget_tokens``. Pinned (ref'd) states are never
+        evicted — a request's lens may still read them."""
+        retired = sorted(
+            (s for s in self.states if s.retired_epoch is not None),
+            key=lambda s: s.retired_epoch,
+        )
+        total = sum(len(s.tokens) for s in retired)
+        budget = self.memory_budget_tokens
+        evicted: set = set()
+        if budget is not None:
+            for s in retired:
+                if total <= budget:
+                    break
+                assert not s.refs, "evicting a pinned prefix state"
+                evicted.add(s.sid)
+                total -= len(s.tokens)
+                self.lifecycle_metrics["evicted_states"] += 1
+                self.lifecycle_metrics["evicted_tokens"] += len(s.tokens)
+        if evicted:
+            self.states = [s for s in self.states if s.sid not in evicted]
+        lm = self.lifecycle_metrics
+        lm["retained_tokens"] = total
+        if total > lm["retained_tokens_high_water"]:
+            lm["retained_tokens_high_water"] = total
 
     # -- execution ------------------------------------------------------------
     def run(self, requests: List[Request]) -> Dict:

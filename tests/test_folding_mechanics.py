@@ -1,14 +1,29 @@
 """Mechanism-level tests: represented/residual extents, gates, retention,
-aggregate identity, QPipe-OSP window, and Algorithm-2 invariants."""
+aggregate identity, QPipe-OSP window, and Algorithm-2 invariants.
+
+These scenarios pin arrival offsets in virtual time (mid-flight overlap,
+OSP windows). They run under the partition-parallel pool — the session is
+built on an explicit per-worker ``WorkClock`` factory honoring
+``$GRAFTDB_TEST_WORKERS`` — with the offsets scaled by the pool speedup
+(``_t``): an N-worker pool finishes the same work in ~1/N virtual time, so
+a mid-flight instant at workers=1 stays mid-flight at workers=N."""
 
 import numpy as np
 
 import graftdb
 from graftdb import EngineConfig
 from repro.core.dag import check_invariants, snapshot
-from repro.core.scheduler import extract_ready_fragments
+from repro.core.scheduler import WorkClock, extract_ready_fragments
 from repro.relational import queries
 from repro.relational.table import days
+
+# pool geometry under test: the CI matrix leg sets GRAFTDB_TEST_WORKERS=4
+POOL = EngineConfig().workers
+
+
+def _t(base: float) -> float:
+    """Scale a single-worker arrival offset to the pool's virtual time."""
+    return base / POOL
 
 
 def _q3(db, date, seg=1.0, arrival=0.0):
@@ -16,11 +31,13 @@ def _q3(db, date, seg=1.0, arrival=0.0):
 
 
 def _run(db, qs, mode, morsel=4096, invariant_checks=False):
-    # workers/partitions pinned to 1: these scenarios fix arrival offsets in
-    # single-stream virtual time (mid-flight overlap, OSP windows); the
-    # partition-parallel pool is exercised in test_partition_parallel
+    # explicit WorkClock fixture: one fresh virtual clock per worker, so the
+    # timing-pinned scenarios replay deterministically at any pool size
     session = graftdb.connect(
-        db, EngineConfig(mode=mode, morsel_size=morsel, workers=1, partitions=1)
+        db,
+        EngineConfig(
+            mode=mode, morsel_size=morsel, clock=WorkClock, workers=POOL, partitions=POOL
+        ),
     )
     eng = session.engine  # mechanism tests observe the internal layer
     if invariant_checks:
@@ -41,7 +58,7 @@ def test_represented_extent_on_midflight_arrival(db_mid):
     """Q_B (broader) arriving while Q_A's order-side state is live must
     observe a represented extent and register residual production (Fig.3)."""
     qa = _q3(db_mid, "1995-03-15")
-    qb = _q3(db_mid, "1995-03-20", arrival=0.02)
+    qb = _q3(db_mid, "1995-03-20", arrival=_t(0.02))
     eng, _ = _run(db_mid, [qa, qb], "graft")
     c = eng.counters
     assert c["represented_rows"] > 0, "no represented-extent observation"
@@ -52,7 +69,7 @@ def test_narrower_arrival_fully_covered(db_mid):
     """Q_B narrower than live coverage: fully represented, zero residual at
     the order-side boundary (customer state also covered)."""
     qa = _q3(db_mid, "1995-03-20")
-    qb = _q3(db_mid, "1995-03-10", arrival=0.04)
+    qb = _q3(db_mid, "1995-03-10", arrival=_t(0.04))
     eng, done = _run(db_mid, [qa, qb], "graft")
     assert eng.counters["represented_rows"] > 0
 
@@ -70,7 +87,7 @@ def test_no_sharing_after_release(db_mid):
 def test_aggregate_identity_sharing(db_mid):
     """Exact duplicate instances share one aggregate state (§4.5)."""
     qa = _q3(db_mid, "1995-03-15")
-    qb = _q3(db_mid, "1995-03-15", arrival=0.01)  # exact duplicate, overlapping
+    qb = _q3(db_mid, "1995-03-15", arrival=_t(0.01))  # exact duplicate, overlapping
     eng, done = _run(db_mid, [qa, qb], "graft")
     assert eng.counters.get("agg_attaches", 0) >= 1
     a, b = done[0].result(), done[1].result()
@@ -86,14 +103,14 @@ def test_qpipe_window_closes(db_mid):
     assert eng.counters.get("qpipe_merges", 0) > 0 or eng.counters.get("agg_attaches", 0) > 0
     # delayed identical arrival -> window closed, no merge
     qa = _q3(db_mid, "1995-03-15")
-    qb = _q3(db_mid, "1995-03-15", arrival=0.05)
+    qb = _q3(db_mid, "1995-03-15", arrival=_t(0.05))
     eng, _ = _run(db_mid, [qa, qb], "qpipe_osp")
     assert eng.counters.get("qpipe_merges", 0) == 0
 
 
 def test_algorithm2_invariants_throughout(db):
     rng = np.random.default_rng(17)
-    qs = [queries.sample_query(db, rng, arrival=i * 0.001) for i in range(6)]
+    qs = [queries.sample_query(db, rng, arrival=_t(i * 0.001)) for i in range(6)]
     _run(db, qs, "graft", invariant_checks=True)
 
 

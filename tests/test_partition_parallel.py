@@ -103,6 +103,73 @@ def test_run_is_deterministic(db):
 
 
 # ---------------------------------------------------------------------------
+# Open-loop stress: queued admissions stay deterministic under permutation
+# ---------------------------------------------------------------------------
+
+OVERLOAD_CFG = dict(
+    mode="graft",
+    morsel_size=4096,
+    retention="epoch",
+    memory_budget=300_000,
+    admission="adaptive",
+    admission_max_inflight=2,
+    admission_share_threshold=0.4,
+)
+
+
+@pytest.mark.parametrize("workers,partitions", [(1, 1), (4, 4)])
+def test_open_loop_permuted_arrival_determinism(db, workers, partitions):
+    """§10 extension of the determinism grid to queued admissions: one fixed
+    arrival trace submitted in permuted orders (the arrival heap keys on
+    (arrival, qid)) produces bit-identical results, latencies, admission
+    decisions, and counters — through the full retention + admission path,
+    including same-instant arrival ties."""
+    rng = np.random.default_rng(77)
+    n = 8
+    # arrival times with deliberate ties (same-instant bursts)
+    offsets = [0.01, 0.01, 0.013, 0.02, 0.02, 0.02, 0.05, 0.08]
+    runs = []
+    for perm_seed in (None, 1, 2):
+        qs = _workload(db, n=n, seed=777, spacing=0.0)
+        for q, t in zip(qs, offsets):
+            q.arrival = t
+        order = list(range(n))
+        if perm_seed is not None:
+            order = list(np.random.default_rng(perm_seed).permutation(n))
+        session = graftdb.connect(
+            db,
+            EngineConfig(workers=workers, partitions=partitions, **OVERLOAD_CFG),
+        )
+        futs = [None] * n
+        for i in order:
+            futs[i] = session.submit(qs[i])
+        session.run()
+        decisions = [
+            (session._runner.admission_log.get(q.qid) or {}).get("decision")
+            for q in qs
+        ]
+        delays = [
+            round((session._runner.admission_log.get(q.qid) or {}).get("queue_delay_s", 0.0), 12)
+            for q in qs
+        ]
+        runs.append(
+            (
+                [round(f.latency(), 12) for f in futs],
+                decisions,
+                delays,
+                {k: v for k, v in session.counters.items()},
+                [tuple(np.asarray(v).tolist() for _, v in sorted(f.result().items())) for f in futs],
+            )
+        )
+    for other in runs[1:]:
+        assert other[0] == runs[0][0], "latencies differ across submission orders"
+        assert other[1] == runs[0][1], "admission decisions differ"
+        assert other[2] == runs[0][2], "queue delays differ"
+        assert other[3] == runs[0][3], "counters differ"
+        assert other[4] == runs[0][4], "results differ"
+
+
+# ---------------------------------------------------------------------------
 # Deterministic partial-aggregate merge under permuted worker interleavings
 # ---------------------------------------------------------------------------
 

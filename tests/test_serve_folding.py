@@ -151,3 +151,58 @@ def test_folding_prefill_work_conservation(n, prefix, suffix, gap):
         fold["prefill_tokens"].get("computed", 0)
         <= iso["prefill_tokens"].get("computed", 0) + 1e-9
     )
+
+
+# ---------------------------------------------------------------------------
+# Prefix-state lifecycle (§10): retention, revival, token-budget eviction
+# ---------------------------------------------------------------------------
+
+
+def test_retained_prefix_serves_later_wave():
+    """retain_prefixes keeps a zero-ref prefix state alive across episodes:
+    a later wave with the same shared prefix folds onto it (refcount-only
+    would drop the state and re-prefill the prefix)."""
+    session = graftdb.connect_serving(
+        fold=True, retain_prefixes=True, memory_budget_tokens=2048
+    )
+    session.submit_all(_reqs(4))
+    session.run()
+    assert session.live_states >= 1  # retained, not dropped
+    wave2 = [
+        Request(100 + i, r.prompt, r.n_decode, arrival=10.0 + i * 0.01)
+        for i, r in enumerate(_reqs(3))
+    ]
+    futs = session.submit_all(wave2)
+    session.run()
+    for f in futs:
+        assert f.result()["represented_tokens"] > 0  # folded onto retained KV
+    # the drop-at-zero-refs baseline rebuilds instead
+    base = graftdb.connect_serving(fold=True)
+    base.submit_all(_reqs(4))
+    base.run()
+    assert base.live_states == 0
+
+
+def test_prefix_token_budget_evicts_oldest_and_is_respected():
+    """Retired prefixes are evicted oldest-epoch-first past the token
+    budget; the retained high-water never exceeds it and pinned states are
+    never touched."""
+    session = graftdb.connect_serving(
+        fold=True, retain_prefixes=True, memory_budget_tokens=300
+    )
+    rng = np.random.default_rng(3)
+    # distinct prompts -> distinct prefix states, each ~144 tokens
+    waves = [
+        [Request(w * 10 + i, tuple(rng.integers(0, 1000, 144).tolist()), 4,
+                 arrival=w * 5.0 + i * 0.01) for i in range(2)]
+        for w in range(3)
+    ]
+    for wave in waves:
+        session.submit_all(wave)
+        session.run()
+    lc = session.stats()["lifecycle"]
+    assert lc["evicted_states"] > 0
+    assert lc["retained_tokens"] <= 300
+    assert lc["retained_tokens_high_water"] <= 300
+    with pytest.raises(ValueError):
+        graftdb.connect_serving(memory_budget_tokens=100)  # needs retain_prefixes

@@ -266,8 +266,17 @@ def test_stats_expose_data_plane_counters(db):
         "fused_filter_rows",
         "partition_merges",
         "partition_probe_merges",
+        "evictions",
+        "evicted_bytes",
+        "state_revivals",
+        "queued_admissions",
+        "forced_admissions",
     }
     assert counters["fused_filter_rows"] > 0  # source predicates ran fused
+    # refcount retention + always-admission (defaults): lifecycle idle
+    assert counters["evictions"] == 0 and counters["queued_admissions"] == 0
+    assert fut.stats()["admission"] is None  # no controller on this session
+    assert fut.stats()["queue_delay_s"] == 0.0
     assert counters["index_rebuilds"] > 0  # did/key indexes doubled under growth
     assert counters["kernel_lens_probes"] == 0  # reference backend: no kernel lens
     # the worker-pool utilization block rides along on every stats dict
