@@ -137,10 +137,15 @@ class PallasBackend:
     ):
         import jax  # noqa: F401 — fail fast if jax is unavailable
 
-        from ..kernels.hash_probe import hash_build_insert, hash_probe_lens
+        from ..kernels.hash_probe import (
+            hash_build_insert,
+            hash_probe_lens,
+            hash_probe_lens_multi,
+        )
         from ..kernels.seg_aggregate import seg_aggregate
 
         self._hash_probe_lens = hash_probe_lens
+        self._hash_probe_lens_multi = hash_probe_lens_multi
         self._hash_build_insert = hash_build_insert
         self._seg_aggregate = seg_aggregate
         self.interpret = interpret
@@ -157,6 +162,7 @@ class PallasBackend:
         self._qmask = None  # constant all-ones lens mask, built lazily
         self.kernel_probes = 0
         self.kernel_lens_probes = 0
+        self.kernel_multi_probes = 0
         self.fallback_probes = 0
 
     def stats(self) -> dict:
@@ -170,6 +176,7 @@ class PallasBackend:
         return {
             "kernel_probes": self.kernel_probes,
             "kernel_lens_probes": self.kernel_lens_probes,
+            "kernel_multi_probes": self.kernel_multi_probes,
             "fallback_probes": self.fallback_probes,
         }
 
@@ -241,6 +248,37 @@ class PallasBackend:
         probe_idx = np.flatnonzero(found_slots >= 0).astype(np.int64)
         entry_idx = ent.slot_entry[found_slots[probe_idx]]
         return probe_idx, entry_idx
+
+    def probe_visible_multi(self, state, keycodes):
+        """Multi-member probe with the packed lens words gathered in-kernel
+        (§11): returns ``(probe_idx, entry_idx, vis_words)`` where
+        ``vis_words[i]`` is the matched entry's uint32 visibility word, or
+        None when the kernel cannot serve the state. The pair stream is
+        pre-visibility and identical to ``probe`` — ownership filtering
+        happens in the runtime's packed translation — so results stay
+        bit-identical to the reference path for every member count."""
+        if state.keycode.n == 0 or len(keycodes) == 0:
+            return None
+        table = self._table_for(state)
+        if table is None or keycodes.min() < 0 or keycodes.max() > self._KEY_LIMIT:
+            return None
+        import jax.numpy as jnp
+
+        ent = self._tables[state]
+        self._refresh_vis(ent, state)
+        found, words = self._hash_probe_lens_multi(
+            jnp.asarray(keycodes, dtype=jnp.int32),
+            ent.jkeys,
+            ent.jvis,
+            interpret=self.interpret,
+        )
+        found = np.asarray(found)
+        self.kernel_probes += 1
+        self.kernel_multi_probes += 1
+        probe_idx = np.flatnonzero(found >= 0).astype(np.int64)
+        entry_idx = ent.slot_entry[found[probe_idx]]
+        vis_words = np.asarray(words)[probe_idx].astype(np.uint64)
+        return probe_idx, entry_idx, vis_words
 
     def _refresh_vis(self, ent: "_ProbeTable", state) -> None:
         """Mirror the state's per-entry visibility words into the table

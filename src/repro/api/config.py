@@ -73,6 +73,11 @@ class EngineConfig:
       ``workers=1, partitions=1`` is byte-identical to the seed engine.
     * ``max_sleep_s`` — WallClock sleep cap: longer idle gaps are skipped
       virtually instead of blocking (None = sleep the full gap).
+    * ``member_major`` — the fused packed-mask morsel pipeline (DESIGN.md
+      §11): per-morsel data-plane cost independent of the folded member
+      count. False selects the retained per-member loops — the
+      differential oracle the fused path is verified against (results,
+      probe pair streams, and EXPLAIN GRAFT accounting are bit-identical).
     """
 
     mode: str = "graft"
@@ -91,6 +96,7 @@ class EngineConfig:
     workers: int = field(default_factory=_default_workers)
     partitions: Optional[int] = None
     max_sleep_s: Optional[float] = 0.25
+    member_major: bool = True
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -171,6 +177,10 @@ class EngineConfig:
                 )
         if self.max_sleep_s is not None and self.max_sleep_s <= 0:
             raise ValueError(f"max_sleep_s must be positive or None, got {self.max_sleep_s!r}")
+        if not isinstance(self.member_major, bool):
+            raise ValueError(
+                f"member_major must be a bool, got {self.member_major!r}"
+            )
 
     def _wall_clocked(self) -> bool:
         """The configured clock is real-time: the 'wall' name, the

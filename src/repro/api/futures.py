@@ -89,6 +89,13 @@ class QueryFuture:
                     "index_rebuilds",
                     "kernel_lens_probes",
                     "fused_filter_rows",
+                    # member-major fused data plane (§11)
+                    "kernel_multi_lens_probes",
+                    "fused_vis_rows",
+                    "fused_stage_filter_rows",
+                    "fused_sink_rows",
+                    "agg_cohort_rows",
+                    "overflow_members",
                     "partition_merges",
                     "partition_probe_merges",
                     # lifecycle + admission (engine-wide, §10)

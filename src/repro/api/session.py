@@ -45,6 +45,7 @@ class Session:
             partitions=self.config.n_partitions,
             retention=self.config.retention,
             memory_budget=self.config.memory_budget,
+            member_major=self.config.member_major,
         )
         admission = self.config.make_admission()
         if self.config.workers == 1:

@@ -114,6 +114,7 @@ class GraftEngine:
         partitions: int = 1,
         retention: str = "refcount",
         memory_budget: Optional[int] = None,
+        member_major: bool = True,
     ):
         self.db = db
         self.mode = MODES[mode]
@@ -136,6 +137,11 @@ class GraftEngine:
             raise ValueError(f"retention must be 'refcount' or 'epoch', got {retention!r}")
         self.retention = retention
         self.memory_budget = memory_budget
+        # Member-major fused morsel pipeline (DESIGN.md §11): packed-mask
+        # passes make per-morsel data-plane cost independent of the folded
+        # member count. False retains the per-member loops — the
+        # differential oracle the fused path is verified against.
+        self.member_major = bool(member_major)
 
         self.scans: Dict[object, ScanNode] = {}
         self.pipelines: Dict[object, Pipeline] = {}
@@ -152,6 +158,14 @@ class GraftEngine:
             "index_rebuilds",
             "kernel_lens_probes",
             "fused_filter_rows",
+            # member-major fused data plane (§11) — present (zero) from the
+            # start so stats dicts stay shape-stable
+            "kernel_multi_lens_probes",
+            "fused_vis_rows",
+            "fused_stage_filter_rows",
+            "fused_sink_rows",
+            "agg_cohort_rows",
+            "overflow_members",
             "partition_merges",
             "partition_probe_merges",
             # lifecycle + admission counters (§10) — present (zero) from the
@@ -290,7 +304,11 @@ class GraftEngine:
         pipeline = self.pipelines.get(pkey)
         if pipeline is None:
             pipeline = Pipeline(
-                self.next_pipeline_id(), pkey, self.get_scan(scan.table, handle.qid), ops
+                self.next_pipeline_id(),
+                pkey,
+                self.get_scan(scan.table, handle.qid),
+                ops,
+                counters=self.counters,
             )
             self.pipelines[pkey] = pipeline
         member = Member(
@@ -331,6 +349,7 @@ class GraftEngine:
 
     def on_member_finished(self, pipeline: Pipeline, m: Member) -> None:
         pipeline.slots.release(m.mid)
+        pipeline.release_member(m)  # drop its cohort gid maps (§11)
         if pipeline.build_target is not None:
             pipeline.build_target.state.complete_extent(m.eid)
             for g in m.waiting_gates:

@@ -395,6 +395,7 @@ def _install_producer(
             inner_ops,
             build_target=BuildTarget(state, tuple(join.build_keys)),
             compose_did=bool(inner_ops),
+            counters=engine.counters,
         )
         engine.pipelines[pkey] = pipeline
 

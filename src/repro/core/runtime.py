@@ -15,11 +15,30 @@ The shared execution DAG (§5.1) is realized by three kinds of live objects:
   residual producer members installed for it have completed.
 
 Morsels are the TPU adaptation of the paper's row fragments (DESIGN.md §2):
-every step is a vectorized column-batch operation. The per-member source
-predicates of one pipeline are fused into a single SoA bound-check pass
-(members × attrs lo/hi matrices -> packed visibility bitmask), and
-single-member probes route through the backend's fused-lens kernel so
-visibility resolves in-kernel (DESIGN.md §8).
+every step is a vectorized column-batch operation. The data plane is
+*member-major and mask-packed end to end* (DESIGN.md §11): each morsel
+carries one ``uint64`` per-row ownership word through every stage, and
+per-stage work is independent of the folded member count —
+
+* source + post-join stage filters fuse into interval matrices
+  (``FusedBoundFilter``: SIMD compare sweeps, or per-attribute interval
+  stabbing past ~8 members/attr);
+* probe-stage semijoin visibility is one gather of the matched entries'
+  packed lens words + one byte-table translation into pipeline ownership
+  bits (``core.visibility.translate_bits``); single-member probes resolve
+  the lens in-kernel, multi-member probes take the ``probe_visible_multi``
+  kernel that returns the packed words in one launch;
+* build-sink tagging for all beneficiaries is two translations feeding the
+  single ``bitwise_or.at`` scatter inside ``insert_or_mark``;
+* identically-shaped aggregate sinks fold as a cohort in one segmented
+  pass keyed by (group id × member bit), scattering per-member partials
+  through cached cohort-gid -> accumulator-id maps (``_CohortIndex``).
+
+The pre-§11 per-member loop is retained verbatim
+(``EngineConfig(member_major=False)``) as the differential oracle — the
+fused path is bit-identical to it in results, pair streams, counters, and
+modeled cost. Members beyond the 64-bit packed word (slot overflow) run a
+member-at-a-time slow lane that never drops rows.
 
 Partition-parallel execution (DESIGN.md §9): each scan splits its morsel
 cycle into P contiguous partition shards with independent cyclic cursors;
@@ -43,13 +62,35 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..relational.table import Table
-from .plans import AggSpec, expr_eval
-from .predicates import AttrConstraint, Conjunction, Pred, TRUE, evaluate
-from .state import ALL_EXTENTS, SharedAggregateState, SharedHashBuildState
-from .visibility import SlotAllocator, bit_of
+from .hashindex import MultiKeyIndex
+from .plans import AggSpec, expr_attrs, expr_eval
+from .predicates import AttrConstraint, Conjunction, Pred, TRUE, evaluate, pred_and
+from .state import (
+    ALL_EXTENTS,
+    GrowArray,
+    SharedAggregateState,
+    SharedHashBuildState,
+    _bincount_segment_sum,
+)
+from .visibility import (
+    SlotAllocator,
+    bit_of,
+    slot_popcounts,
+    translate_bits,
+    translation_table,
+    unpack_slots,
+)
 
 U64_1 = np.uint64(1)
 U64_0 = np.uint64(0)
+
+# de Bruijn single-bit -> bit-index table (branch-free vectorized log2 for
+# the disjoint-ownership fast path of the cohort fold, §11)
+_DB64 = np.uint64(0x03F79D71B4CB0A89)
+_DB_SHIFT = np.uint64(58)
+_DB_TABLE = np.zeros(64, dtype=np.int64)
+for _i in range(64):
+    _DB_TABLE[(((1 << _i) * 0x03F79D71B4CB0A89) & ((1 << 64) - 1)) >> 58] = _i
 
 
 def _member_conj(m: "Member"):
@@ -80,47 +121,166 @@ def encode_keys(cols: Dict[str, np.ndarray], attrs: Sequence[str]) -> np.ndarray
 # ---------------------------------------------------------------------------
 
 
+def _bounds_of_conj(conj: Optional[Conjunction]):
+    """Per-attribute inclusive [lo, hi] intervals of a canonical
+    conjunction (membership sets of size one become point intervals;
+    exclusive bounds tighten by one float64 ulp so a single inclusive
+    compare is exact), or None when any constraint is not an interval.
+
+    Bounds live in float64 — exact over the engine's float64 column
+    domain (every table column, see relational.table). Integer columns
+    with values beyond 2^53 would lose the int-exact comparison the
+    per-predicate ``evaluate`` path performs; such domains must not fuse.
+    """
+    if conj is None:
+        return None
+    bounds: Dict[str, Tuple[float, float]] = {}
+    for attr, c in conj.constraints.items():
+        if c.members is not None and len(c.members) != 1:
+            return None
+        lo = c.lo if c.lo_inc else np.nextafter(c.lo, math.inf)
+        hi = c.hi if c.hi_inc else np.nextafter(c.hi, -math.inf)
+        if c.members is not None:
+            v = next(iter(c.members))
+            lo, hi = max(lo, v), min(hi, v)
+        bounds[attr] = (lo, hi)
+    return bounds
+
+
+def _pack_bound_matrices(pairs):
+    """[(member, bounds)] -> (attrs, lo[M, A], hi[M, A]) SoA matrices."""
+    attrs = sorted({a for _, b in pairs for a in b})
+    lo = np.full((len(pairs), len(attrs)), -math.inf)
+    hi = np.full((len(pairs), len(attrs)), math.inf)
+    for i, (_, bounds) in enumerate(pairs):
+        for j, a in enumerate(attrs):
+            if a in bounds:
+                lo[i, j], hi[i, j] = bounds[a]
+    return attrs, lo, hi
+
+
 def member_bound_matrices(members: Sequence["Member"]):
     """SoA bound matrices for the fused source-predicate pass.
 
     A member fuses when its predicate canonicalizes into per-attribute
-    intervals (membership sets of size one become point intervals;
-    exclusive bounds tighten by one float64 ulp so a single inclusive
-    compare is exact). Returns ``(attrs, lo[M,A], hi[M,A], fused, slow)``
-    where ``slow`` members fall back to per-member evaluation."""
-    fused: List["Member"] = []
+    intervals. Returns ``(attrs, lo[M,A], hi[M,A], fused, slow)`` where
+    ``slow`` members fall back to per-member evaluation."""
+    pairs = []
     slow: List["Member"] = []
-    per_member: List[Dict[str, Tuple[float, float]]] = []
     for m in members:
-        conj = _member_conj(m)
-        if conj is None:
+        bounds = _bounds_of_conj(_member_conj(m))
+        if bounds is None:
             slow.append(m)
+        else:
+            pairs.append((m, bounds))
+    attrs, lo, hi = _pack_bound_matrices(pairs)
+    return attrs, lo, hi, [m for m, _ in pairs], slow
+
+
+def stage_filter_matrices(members: Sequence["Member"], stage: int):
+    """Fused bound matrices for the members' post-join filters at one probe
+    stage — the §11 generalization of ``member_bound_matrices`` beyond the
+    source stage. Members whose filter conjunction does not canonicalize to
+    intervals (e.g. Q5's column-equality) fall back to per-member
+    evaluation; members with no filter at this stage are ignored."""
+    pairs = []
+    slow: List["Member"] = []
+    for m in members:
+        preds = m.stage_filters.get(stage, ())
+        if not preds:
             continue
-        bounds: Dict[str, Tuple[float, float]] = {}
-        ok = True
-        for attr, c in conj.constraints.items():
-            if c.members is not None and len(c.members) != 1:
-                ok = False
-                break
-            lo = c.lo if c.lo_inc else np.nextafter(c.lo, math.inf)
-            hi = c.hi if c.hi_inc else np.nextafter(c.hi, -math.inf)
-            if c.members is not None:
-                v = next(iter(c.members))
-                lo, hi = max(lo, v), min(hi, v)
-            bounds[attr] = (lo, hi)
-        if not ok:
+        bounds = _bounds_of_conj(Conjunction.from_pred(pred_and(*preds)))
+        if bounds is None:
             slow.append(m)
-            continue
-        fused.append(m)
-        per_member.append(bounds)
-    attrs = sorted({a for b in per_member for a in b})
-    lo = np.full((len(fused), len(attrs)), -math.inf)
-    hi = np.full((len(fused), len(attrs)), math.inf)
-    for i, bounds in enumerate(per_member):
-        for j, a in enumerate(attrs):
-            if a in bounds:
-                lo[i, j], hi[i, j] = bounds[a]
-    return attrs, lo, hi, fused, slow
+        else:
+            pairs.append((m, bounds))
+    attrs, lo, hi = _pack_bound_matrices(pairs)
+    return attrs, lo, hi, [m for m, _ in pairs], slow
+
+
+class FusedBoundFilter:
+    """Compiled fused member filter over per-attribute interval bounds.
+
+    Two evaluation strategies, bit-identical on every finite input:
+
+    * **Interval stabbing** (member count >= STAB_FACTOR × attrs): each
+      attribute's [lo, hi] intervals become a sorted boundary array + a
+      prefix-XOR segment-mask table (closed intervals turned half-open by
+      one float64 ulp, so coverage is exact); a row's admitted-member word
+      is one ``searchsorted`` + one gather — per-row cost O(log members),
+      not O(members). Columns containing non-finite values fall back (NaN
+      ordering under searchsorted differs from comparison semantics).
+    * **SoA compare matrix** (small member counts / fallback): scalar-bound
+      sweeps per attribute with a per-member OR-reduction. SIMD compares
+      have a far lower per-element constant than binary search, so the
+      crossover grows with the attribute count (measured ~8 members/attr).
+    """
+
+    STAB_FACTOR = 8
+
+    __slots__ = ("attrs", "lo", "hi", "bitvals", "_all_mask", "_stab", "_con")
+
+    def __init__(self, attrs: Sequence[str], lo: np.ndarray, hi: np.ndarray,
+                 bitvals: np.ndarray):
+        self.attrs = tuple(attrs)
+        self.lo = lo
+        self.hi = hi
+        self.bitvals = bitvals
+        self._all_mask = np.uint64(np.bitwise_or.reduce(bitvals)) if len(bitvals) else np.uint64(0)
+        # which (member, attr) cells carry a real constraint: a member with
+        # no constraint on an attribute admits every row of it — including
+        # NaN, matching per-predicate ``evaluate`` semantics
+        self._con = (lo != -math.inf) | (hi != math.inf)
+        self._stab = None
+        m = len(bitvals)
+        if self.attrs and m >= self.STAB_FACTOR * len(self.attrs):
+            stab = []
+            for j in range(len(self.attrs)):
+                lo_j = lo[:, j]
+                # closed [lo, hi] == half-open [lo, nextafter(hi)); empty
+                # intervals collapse (toggle on+off at one coordinate)
+                hi_plus = np.maximum(np.nextafter(hi[:, j], math.inf), lo_j)
+                coords = np.concatenate([lo_j, hi_plus])
+                masks = np.concatenate([bitvals, bitvals])
+                order = np.argsort(coords, kind="stable")
+                seg = np.zeros(len(coords) + 1, dtype=np.uint64)
+                np.bitwise_xor.accumulate(masks[order], out=seg[1:])
+                stab.append((coords[order], seg))
+            self._stab = stab
+
+    def __call__(self, n: int, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        m = len(self.bitvals)
+        if not m:
+            return np.zeros(n, dtype=np.uint64)
+        if not self.attrs:
+            return np.full(n, self._all_mask, dtype=np.uint64)
+        if self._stab is not None:
+            bits = None
+            for j, a in enumerate(self.attrs):
+                col = cols[a]
+                if not np.isfinite(col).all():
+                    break
+                bounds, seg = self._stab[j]
+                w = seg[np.searchsorted(bounds, col, side="right")]
+                bits = w if bits is None else bits & w
+            else:
+                return bits
+        ok = None
+        buf = np.empty((m, n), dtype=bool)
+        for j, a in enumerate(self.attrs):
+            col = cols[a]
+            aj = np.greater_equal(col, self.lo[:, j, None])
+            np.less_equal(col, self.hi[:, j, None], out=buf)
+            np.logical_and(aj, buf, out=aj)
+            if not self._con[:, j].all() and np.isnan(col).any():
+                # NaN fails every compare, but members that do not
+                # constrain this attribute must still admit the row
+                np.logical_or(aj, ~self._con[:, j, None], out=aj)
+            ok = aj if ok is None else np.logical_and(ok, aj, out=ok)
+        bits = np.zeros(n, dtype=np.uint64)
+        for i in range(m):
+            bits |= ok[i] * self.bitvals[i]
+        return bits
 
 
 def fused_bound_bits(
@@ -131,23 +291,9 @@ def fused_bound_bits(
     hi: np.ndarray,
     bitvals: np.ndarray,
 ) -> np.ndarray:
-    """One SoA pass: per-row packed visibility bitmask over all fused
-    members — ``bits[r]`` ORs ``bitvals[m]`` for every member whose bounds
-    admit row r on every attribute. Member-major layout keeps every
-    compare a contiguous scalar-bound sweep (row-major broadcasting is
-    ~3x slower: stride-0 inner loops and (rows, members) temporaries)."""
-    m = len(bitvals)
-    if not m:
-        return np.zeros(n, dtype=np.uint64)
-    ok = np.ones((m, n), dtype=bool)
-    for j, a in enumerate(attrs):
-        col = cols[a]
-        np.logical_and(ok, col >= lo[:, j, None], out=ok)
-        np.logical_and(ok, col <= hi[:, j, None], out=ok)
-    bits = np.zeros(n, dtype=np.uint64)
-    for i in range(m):
-        bits |= ok[i] * bitvals[i]
-    return bits
+    """One-shot form of :class:`FusedBoundFilter` (the pipeline caches the
+    compiled filter per wave; standalone callers pay the compile per call)."""
+    return FusedBoundFilter(attrs, lo, hi, bitvals)(n, cols)
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +469,54 @@ class ProbeOp:
 # ---------------------------------------------------------------------------
 
 
+class _CohortIndex:
+    """Pipeline-persistent shared group index for one aggregate cohort
+    (§11): one batched lookup per morsel maps the cohort's group-key rows
+    to cohort-local dense gids; per-(member, partition) translation arrays
+    then turn cohort gids into member-local accumulator ids, so the
+    steady-state per-member residue is a gather + scatter — no hashing."""
+
+    __slots__ = ("_idx", "_gvals", "maps")
+
+    def __init__(self, n_keys: int):
+        self._idx = MultiKeyIndex(n_keys) if n_keys else None
+        # per-gid key values, created lazily with the columns' ORIGINAL
+        # dtypes: a member's accumulator index keys integer columns by
+        # value and floats by bit pattern, so a float64 cast here would
+        # assign different ids than the row-level `update` path
+        self._gvals: Optional[List[GrowArray]] = None
+        self.maps: Dict[tuple, np.ndarray] = {}  # (mid, part) -> local gid
+
+    def resolve(self, key_cols: List[np.ndarray], n: int):
+        """(cohort gids for the rows, per-gid key values, n groups)."""
+        if self._idx is None:
+            return np.zeros(n, dtype=np.int64), [], 1
+        gids, is_new = self._idx.lookup_or_insert(key_cols)
+        if self._gvals is None:
+            self._gvals = [GrowArray(np.asarray(c).dtype) for c in key_cols]
+        if is_new.any():
+            firsts = np.flatnonzero(is_new)
+            for c, gv in zip(key_cols, self._gvals):
+                gv.append(np.asarray(c)[firsts])
+        return gids, [gv.data for gv in self._gvals], self._idx.n
+
+    def member_map(self, mid: int, part: int, ng: int) -> np.ndarray:
+        """Cohort gid -> member-local accumulator id (-1 = unmapped)."""
+        key = (mid, part)
+        cur = self.maps.get(key)
+        if cur is None or len(cur) < ng:
+            grown = np.full(ng, -1, dtype=np.int64)
+            if cur is not None:
+                grown[: len(cur)] = cur
+            self.maps[key] = cur = grown
+        return cur
+
+    def release(self, mid: int) -> None:
+        """Drop a finished member's gid maps (all partitions)."""
+        for key in [k for k in self.maps if k[0] == mid]:
+            del self.maps[key]
+
+
 class Pipeline:
     def __init__(
         self,
@@ -332,6 +526,7 @@ class Pipeline:
         ops: List[ProbeOp],
         build_target: Optional[BuildTarget] = None,
         compose_did: bool = False,
+        counters: Optional[Dict] = None,
     ):
         self.pid = pid
         self.key = key
@@ -341,15 +536,41 @@ class Pipeline:
         self.compose_did = compose_did
         self.members: List[Member] = []
         self.slots = SlotAllocator()
-        # per-wave bound-matrix cache, keyed by the active member set (with
+        self._counters = counters
+        # per-wave plan caches, keyed by the active member set (with
         # partitions the set differs per shard near completion)
         self._filter_plans: Dict[tuple, tuple] = {}
+        self._mm_plans: Dict[tuple, dict] = {}
+        # shared cohort group indexes + member gid maps (§11) — persistent
+        # across waves (a member's accumulator mapping outlives wave churn)
+        self._cohort_state: Dict[tuple, _CohortIndex] = {}
         source.attach(self)
 
     # -- membership ---------------------------------------------------------
     def add_member(self, m: Member) -> None:
-        m.slot = self.slots.get(m.mid)
+        """Assign the member a packed-word bit slot, or route it to the
+        overflow slow lane (slot == -1) when all 64 bits of the pipeline
+        word are taken (§11: overflow members are processed member-at-a-time
+        on a plain boolean mask — sound, never silently dropped)."""
+        slot = self.slots.try_get(m.mid)
+        if slot is None:
+            m.slot = -1
+            if self._counters is not None:
+                self._counters["overflow_members"] += 1
+        else:
+            m.slot = slot
         self.members.append(m)
+
+    def release_member(self, m: Member) -> None:
+        """Drop a finished member's cohort gid maps (§11): long-lived
+        shared pipelines (open-loop serving) must not accumulate
+        per-member cache state. A cohort index with no mapped members is
+        dropped entirely (rebuilt on demand), bounding ``_cohort_state``
+        by the live membership."""
+        for ck, ci in list(self._cohort_state.items()):
+            ci.release(m.mid)
+            if not ci.maps:
+                del self._cohort_state[ck]
 
     def active_members(self) -> List[Member]:
         return [m for m in self.members if m.active and not m.done]
@@ -374,27 +595,436 @@ class Pipeline:
         if plan is None:
             attrs, lo, hi, fused, slow = member_bound_matrices(act)
             bitvals = np.array([m.bitval for m in fused], dtype=np.uint64)
-            plan = (attrs, lo, hi, bitvals, fused, slow)
+            plan = (FusedBoundFilter(attrs, lo, hi, bitvals), fused, slow)
             if len(self._filter_plans) > 64:  # bounded: waves churn members
                 self._filter_plans.clear()
             self._filter_plans[key] = plan
-        attrs, lo, hi, bitvals, fused, slow = plan
-        bits = fused_bound_bits(n, cols, attrs, lo, hi, bitvals)
+        ff, fused, slow = plan
+        bits = ff(n, cols)
         engine.counters["fused_filter_rows"] += n * len(fused)
         for m in slow:
             mask = evaluate(m.pred, cols)
             bits |= np.where(mask, m.bitval, U64_0)
         return bits
 
+    def _member_major_plan(self, act: List[Member]) -> dict:
+        """Per-wave member-major execution plan (§11), cached on the active
+        member set: per-stage lens translation tables + grant fallbacks,
+        fused stage-filter matrices, sink tag tables, and aggregate
+        cohorts. Beneficiary counts key the cache because qpipe merges can
+        extend a zero-progress member's beneficiary list mid-wave."""
+        key = tuple((m.mid, m.slot, len(m.beneficiaries)) for m in act)
+        plan = self._mm_plans.get(key)
+        if plan is not None:
+            return plan
+        stages = []
+        filters = []
+        for stage, op in enumerate(self.ops):
+            # lens targets: state slot -> pipeline ownership bit. Members
+            # with extent-scoped grants need predicate evaluation on entry
+            # columns — they keep the per-member lens; members with no slot
+            # and no grants can never see an entry (no target bit).
+            target = np.zeros(64, dtype=np.uint64)
+            grant_members: List[Member] = []
+            kernelable = True
+            for m in act:
+                if op.state.grants.get(m.qid):
+                    grant_members.append(m)
+                    kernelable = False
+                    continue
+                slot = op.state.slots.peek(m.qid)
+                if slot is not None:
+                    target[slot] |= m.bitval
+                    if slot >= 32:  # the kernel lens mirror is uint32
+                        kernelable = False
+            stages.append((translation_table(target), tuple(grant_members), kernelable))
+            attrs, lo, hi, fused, slow = stage_filter_matrices(act, stage)
+            fmask = np.uint64(0)
+            for m in fused:
+                fmask |= m.bitval
+            bitvals = np.array([m.bitval for m in fused], dtype=np.uint64)
+            filters.append(
+                (FusedBoundFilter(attrs, lo, hi, bitvals), len(fused), fmask, tuple(slow))
+            )
+        plan = {"stages": stages, "filters": filters}
+        if self.build_target is not None:
+            bt = self.build_target
+            tvis = np.zeros(64, dtype=np.uint64)
+            tem = np.zeros(64, dtype=np.uint64)
+            for m in act:
+                w = np.uint64(0)
+                for b in m.beneficiaries:
+                    w |= bt.state.slots.mask(b)
+                tvis[m.slot] = w
+                if m.eid >= 0:
+                    tem[m.slot] = U64_1 << np.uint64(m.eid)
+            plan["sink"] = (translation_table(tvis), translation_table(tem))
+        # aggregate cohorts: members with identically-shaped sinks fold in
+        # one segmented pass; distinct aggs take the per-member path
+        # (count-distinct dedups through per-state seen-pair indexes)
+        cohorts: Dict[tuple, List[Member]] = {}
+        for m in act:
+            if m.sink is None:
+                continue
+            s = m.sink
+            ck = (s.group_keys, tuple((a.func, a.distinct, repr(a.expr)) for a in s.aggs))
+            cohorts.setdefault(ck, []).append(m)
+        plan["cohorts"] = [
+            (
+                ck,
+                ms,
+                not any(a.distinct for a in ms[0].sink.aggs),
+                # columns the fold actually reads: group keys + expr attrs
+                tuple(
+                    dict.fromkeys(
+                        list(ms[0].sink.group_keys)
+                        + [
+                            attr
+                            for a in ms[0].sink.aggs
+                            if a.expr is not None
+                            for attr in sorted(expr_attrs(a.expr))
+                        ]
+                    )
+                ),
+            )
+            for ck, ms in cohorts.items()
+        ]
+        if len(self._mm_plans) > 64:  # bounded: waves churn members
+            self._mm_plans.clear()
+        self._mm_plans[key] = plan
+        return plan
+
     def process(
         self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray, part: int = 0
     ) -> float:
         """Run one morsel of scan partition ``part`` through the pipeline
         for every member still owed that shard. Returns the modeled cost
-        (seconds) of the work performed."""
+        (seconds) of the work performed.
+
+        Members with a packed-word bit slot run the member-major fused
+        path (§11) — or the retained per-member oracle path when the
+        engine disables ``member_major``; slot-overflow members (beyond the
+        64-bit word) run the member-at-a-time slow lane."""
         act = self.active_members_for(part)
         if not act:
             return 0.0
+        packed = [m for m in act if m.slot >= 0]
+        overflow = [m for m in act if m.slot < 0]
+        cost = 0.0
+        if packed:
+            if getattr(engine, "member_major", True):
+                cost += self._process_packed_fused(engine, packed, cols, row_ids, part)
+            else:
+                cost += self._process_packed_members(engine, packed, cols, row_ids, part)
+        for m in overflow:
+            cost += self._process_overflow(engine, m, cols, row_ids, part)
+        # morsel accounting (per partition, §9)
+        finished: List[Member] = []
+        for m in act:
+            m.received += 1
+            if m.part_received is not None:
+                m.part_received[part] += 1
+                if m.part_received[part] >= m.part_need[part]:
+                    engine.on_member_part_finished(self, m, part)
+            if m.received >= m.need:
+                m.done = True
+                m.active = False
+                finished.append(m)
+        for m in finished:
+            engine.on_member_finished(self, m)
+        return cost
+
+    # -- member-major fused path (§11) --------------------------------------
+    def _process_packed_fused(
+        self, engine, act: List[Member], cols, row_ids: np.ndarray, part: int
+    ) -> float:
+        """One morsel through every stage as packed uint64 mask
+        transformations — per-stage cost independent of the member count:
+        semijoin visibility is one lens-word translation, stage filters are
+        one fused bound-check, sink tagging is one translate + scatter, and
+        aggregate cohorts fold via one (group × member) segmented pass."""
+        n = len(row_ids)
+        cm = engine.cost_model
+        cost = 0.0
+        plan = self._member_major_plan(act)
+
+        bits = self._source_bits(act, cols, n, engine)
+        cost += cm["filter"] * n * len(act)
+
+        keep = np.flatnonzero(bits)
+        cols = {k: v[keep] for k, v in cols.items()}
+        bits = bits[keep]
+        did = row_ids[keep].astype(np.int64)
+
+        backend = engine.backend
+        for stage, op in enumerate(self.ops):
+            if len(did) == 0:
+                break
+            keycodes = encode_keys(cols, op.probe_attrs)
+            vis_tables, grant_members, kernelable = plan["stages"][stage]
+            lens_fused = False
+            words = None
+            if backend is not None:
+                if len(act) == 1 and not grant_members:
+                    probe_visible = getattr(backend, "probe_visible", None)
+                    if probe_visible is not None:
+                        fused_pair = probe_visible(op.state, keycodes, act[0].qid)
+                        if fused_pair is not None:
+                            probe_idx, entry_idx = fused_pair
+                            lens_fused = True
+                            engine.counters["kernel_lens_probes"] += 1
+                elif kernelable and len(act) > 1:
+                    # multi-member lens: one launch returns every probing
+                    # member's ownership word (the matched entry's packed
+                    # visibility word), translated below
+                    probe_multi = getattr(backend, "probe_visible_multi", None)
+                    if probe_multi is not None:
+                        trip = probe_multi(op.state, keycodes)
+                        if trip is not None:
+                            probe_idx, entry_idx, words = trip
+                            engine.counters["kernel_multi_lens_probes"] += 1
+                if not lens_fused and words is None:
+                    probe_idx, entry_idx = backend.probe(op.state, keycodes)
+            else:
+                probe_idx, entry_idx = op.state.probe(keycodes)
+            cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
+            engine.counters["probe_rows"] += len(keycodes)
+            bits_in = bits[probe_idx]
+            if lens_fused:
+                new_bits = bits_in & act[0].bitval
+            else:
+                if words is None:
+                    words = op.state.vis.data[entry_idx]
+                vis_pl = translate_bits(words, vis_tables)
+                for m in grant_members:
+                    vm = op.state.visible_mask(m.qid, entry_idx)
+                    vis_pl = vis_pl | np.where(vm, m.bitval, U64_0)
+                new_bits = bits_in & vis_pl
+                engine.counters["fused_vis_rows"] += len(probe_idx) * (
+                    len(act) - len(grant_members)
+                )
+            cols = {k: v[probe_idx] for k, v in cols.items()}
+            for a, out in zip(op.payload, op.out_names):
+                cols[out] = op.state.cols[a].data[entry_idx]
+            if self.compose_did:
+                did = did[probe_idx] * np.int64(op.state.did_domain) + op.state.did.data[entry_idx]
+            else:
+                did = did[probe_idx]
+            bits = new_bits
+            # post-join stage filters: one fused bound-check over all
+            # interval-canonical members (§11); the rest evaluate per-member
+            ff, n_fused, fmask, slow = plan["filters"][stage]
+            if n_fused:
+                fbits = ff(len(bits), cols)
+                bits = bits & (~fmask | fbits)
+                engine.counters["fused_stage_filter_rows"] += len(bits) * n_fused
+            for m in slow:
+                for p in m.stage_filters.get(stage, ()):  # e.g. Q5 ColEq
+                    bm = bit_of(bits, m.slot) & evaluate(p, cols)
+                    bits = (bits & ~m.bitval) | np.where(bm, m.bitval, U64_0)
+            keep = np.flatnonzero(bits)
+            if len(keep) != len(bits):
+                cols = {k: v[keep] for k, v in cols.items()}
+                did = did[keep]
+                bits = bits[keep]
+
+        # sinks
+        if self.build_target is not None and len(did) > 0:
+            bt = self.build_target
+            vis_tables, em_tables = plan["sink"]
+            # all beneficiaries of all members tag in ONE translate +
+            # one bitwise_or.at scatter inside insert_or_mark (§11)
+            vismask = translate_bits(bits, vis_tables)
+            emask = translate_bits(bits, em_tables)
+            counts = slot_popcounts(bits)
+            engine.counters["fused_sink_rows"] += len(bits)
+            idx = np.flatnonzero(vismask)
+            if len(idx):
+                keycodes = encode_keys(cols, bt.key_attrs)
+                ins, mrk = bt.state.insert_or_mark(
+                    did[idx],
+                    keycodes[idx],
+                    {a: cols[a][idx] for a in bt.state.retained_attrs},
+                    vismask[idx],
+                    emask[idx],
+                )
+                cost += cm["insert"] * ins + cm["mark"] * mrk
+            for m in act:
+                nsel = int(counts[m.slot])
+                m.rows_sunk += nsel
+                key = "residual_build_rows" if m.kind == "residual" else "ordinary_build_rows"
+                engine.counters[key] += nsel * len(m.beneficiaries)
+        else:
+            nsel_of: Dict[int, int] = {}
+            for ck, ms, fold, needed in plan["cohorts"]:
+                if len(did) == 0:
+                    break
+                if fold and len(ms) > 1:
+                    self._agg_fold_cohort(engine, ck, ms, needed, cols, bits, part, nsel_of)
+                else:
+                    for m in ms:
+                        sel = bit_of(bits, m.slot)
+                        nsel = int(sel.sum())
+                        if nsel == 0:
+                            continue
+                        scols = {k: v[sel] for k, v in cols.items()}
+                        self._agg_sink_rows(engine, m, scols, nsel, part)
+                        nsel_of[m.mid] = nsel
+            # accumulate modeled agg cost in member order so the running
+            # float sum is bit-identical to the per-member oracle path
+            for m in act:
+                if m.sink is not None and nsel_of.get(m.mid):
+                    cost += cm["agg"] * nsel_of[m.mid]
+        return cost
+
+    def _agg_fold_cohort(
+        self, engine, ck, ms: List[Member], needed, cols, bits: np.ndarray,
+        part: int, nsel_of: Dict[int, int],
+    ) -> None:
+        """Fold a cohort of identically-shaped aggregate sinks in one
+        segmented pass keyed by (group id × member bit) (§11): group ids
+        and aggregate expressions are computed once over the cohort's row
+        union, per-(group, member) partials come from one composite
+        ``segment_sum``, and each member's scatter goes through a cached
+        cohort-gid -> accumulator-id map — in steady state the per-member
+        residue is a gather + scatter over its touched groups, no hashing.
+        Unseen groups enter a member's accumulator index in that member's
+        own first-occurrence row order, so layout and float accumulation
+        stay bit-identical to the per-member oracle path."""
+        sink = ms[0].sink
+        k = len(ms)
+        cmask = np.uint64(0)
+        for m in ms:
+            cmask |= m.bitval
+        rows = np.flatnonzero(bits & cmask)
+        if not len(rows):
+            return
+        sub = bits[rows] & cmask
+        slots = np.array([m.slot for m in ms], dtype=np.int64)
+        nkept = len(rows)
+        if not (sub & (sub - U64_1)).any():
+            # disjoint ownership (one cohort bit per row — the common fold
+            # shape): pairs ARE the rows, no member matrix and no gathers;
+            # bit index via branch-free de Bruijn multiply, not float log2
+            inv = np.full(64, -1, dtype=np.int64)
+            inv[slots] = np.arange(len(ms), dtype=np.int64)
+            pm = inv[_DB_TABLE[((sub * _DB64) >> _DB_SHIFT).astype(np.intp)]]
+            pr = None  # identity: pairs[i] == row i
+        else:
+            memmat = unpack_slots(sub, slots)
+            pm, pr = np.nonzero(memmat)  # per member, rows ascend
+        n_pairs = len(pm)
+        scols = {key: cols[key][rows] for key in needed}
+        ci = self._cohort_state.get(ck)
+        if ci is None:
+            ci = self._cohort_state[ck] = _CohortIndex(len(sink.group_keys))
+        gids, gvals, ng = ci.resolve([scols[g] for g in sink.group_keys], nkept)
+        pair_gids = gids if pr is None else gids[pr]
+        code = pair_gids * np.int64(k) + pm
+        nbuckets = ng * k
+        backend = engine.backend
+        segment_sum = (
+            backend.segment_sum if backend is not None else _bincount_segment_sum
+        )
+        counts2d = segment_sum(code, None, nbuckets).reshape(ng, k)
+        vals = []
+        for a in sink.aggs:
+            if a.expr is None:
+                vals.append(None)
+            else:
+                v = expr_eval(a.expr, scols)
+                v = np.broadcast_to(np.asarray(v, dtype=np.float64), (nkept,))
+                vals.append(v if pr is None else v[pr])
+        partials = []
+        for a, v in zip(sink.aggs, vals):
+            if a.func == "count":
+                partials.append(counts2d)
+            elif a.func in ("sum", "avg"):
+                partials.append(segment_sum(code, v, nbuckets).reshape(ng, k))
+            elif a.func == "min":
+                p = np.full(nbuckets, math.inf)
+                np.minimum.at(p, code, v)
+                partials.append(p.reshape(ng, k))
+            elif a.func == "max":
+                p = np.full(nbuckets, -math.inf)
+                np.maximum.at(p, code, v)
+                partials.append(p.reshape(ng, k))
+            else:
+                raise ValueError(a.func)
+        engine.counters["agg_cohort_rows"] += n_pairs
+        # member-major (k, ng) layouts: contiguous per-member row gathers
+        counts2d_t = np.ascontiguousarray(counts2d.T)
+        partials_t = [np.ascontiguousarray(p.T) for p in partials]
+        tz_m, tz_g = np.nonzero(counts2d_t != 0)
+        mb = np.searchsorted(tz_m, np.arange(k + 1))
+        nsel_all = np.bincount(pm, minlength=k)
+        for i, m in enumerate(ms):
+            n_touched = int(mb[i + 1] - mb[i])
+            if not n_touched:
+                continue
+            full = n_touched == ng  # steady state: every group touched
+            touched = None if full else tz_g[mb[i] : mb[i + 1]]
+            nsel = int(nsel_all[i])
+            gmap = ci.member_map(m.mid, part, ng)
+            local = gmap if full else gmap[touched]
+            if (local < 0).any():
+                # first contact with these groups: insert into the member's
+                # accumulator index in ITS first-occurrence row order
+                sel = pm == i
+                g = pair_gids[sel]  # member's rows, ascending
+                uq, first = np.unique(g, return_index=True)
+                fo = uq[np.argsort(first, kind="stable")]
+                new = fo[gmap[fo] < 0]
+                gmap[new] = m.sink.agg_state.map_groups(
+                    [gv[new] for gv in gvals], part=part
+                )
+                local = gmap if full else gmap[touched]
+            m.sink.agg_state.fold_groups(
+                local,
+                counts2d_t[i] if full else counts2d_t[i][touched],
+                [p[i] if full else p[i][touched] for p in partials_t],
+                nsel,
+                part=part,
+            )
+            m.rows_sunk += nsel
+            engine.counters["agg_rows"] += nsel
+            nsel_of[m.mid] = nsel
+
+    def _agg_sink_rows(self, engine, m: Member, scols, nsel: int, part: int) -> None:
+        """Fold one member's selected rows into its aggregate state (the
+        per-member sink body, shared by the oracle path, singleton/distinct
+        cohorts, and the overflow slow lane)."""
+        sink = m.sink
+        backend = engine.backend
+        key_cols = [scols[k] for k in sink.group_keys]
+        vals = [
+            expr_eval(a.expr, scols) if a.expr is not None else None
+            for a in sink.aggs
+        ]
+        vals = [
+            np.broadcast_to(np.asarray(v, dtype=np.float64), (nsel,))
+            if v is not None
+            else None
+            for v in vals
+        ]
+        sink.agg_state.update(
+            key_cols,
+            vals,
+            nsel,
+            segment_sum=backend.segment_sum if backend is not None else None,
+            part=part,
+        )
+        m.rows_sunk += nsel
+        engine.counters["agg_rows"] += nsel
+
+    # -- retained per-member oracle path -------------------------------------
+    def _process_packed_members(
+        self, engine, act: List[Member], cols, row_ids: np.ndarray, part: int
+    ) -> float:
+        """The pre-§11 per-member morsel loop, retained verbatim as the
+        differential oracle for the fused path (``member_major=False``):
+        per-stage visibility, stage filters, sink tagging, and aggregate
+        folds each walk the members one by one."""
         n = len(row_ids)
         cm = engine.cost_model
         cost = 0.0
@@ -499,43 +1129,73 @@ class Pipeline:
                 nsel = int(sel.sum())
                 if nsel == 0:
                     continue
-                sink = m.sink
                 scols = {k: v[sel] for k, v in cols.items()}
-                key_cols = [scols[k] for k in sink.group_keys]
-                vals = [
-                    expr_eval(a.expr, scols) if a.expr is not None else None
-                    for a in sink.aggs
-                ]
-                vals = [
-                    np.broadcast_to(np.asarray(v, dtype=np.float64), (nsel,))
-                    if v is not None
-                    else None
-                    for v in vals
-                ]
-                sink.agg_state.update(
-                    key_cols,
-                    vals,
-                    nsel,
-                    segment_sum=backend.segment_sum if backend is not None else None,
-                    part=part,
-                )
-                m.rows_sunk += nsel
+                self._agg_sink_rows(engine, m, scols, nsel, part)
                 cost += cm["agg"] * nsel
-                engine.counters["agg_rows"] += nsel
-        # morsel accounting (per partition, §9)
-        finished: List[Member] = []
-        for m in act:
-            m.received += 1
-            if m.part_received is not None:
-                m.part_received[part] += 1
-                if m.part_received[part] >= m.part_need[part]:
-                    engine.on_member_part_finished(self, m, part)
-            if m.received >= m.need:
-                m.done = True
-                m.active = False
-                finished.append(m)
-        for m in finished:
-            engine.on_member_finished(self, m)
+        return cost
+
+    # -- overflow slow lane (§11) --------------------------------------------
+    def _process_overflow(
+        self, engine, m: Member, cols, row_ids: np.ndarray, part: int
+    ) -> float:
+        """Member-at-a-time pass for one slot-overflow member: the same
+        stages on a plain boolean row mask. Sound — rows are never dropped
+        when the packed word runs out of bits — just not fused."""
+        n = len(row_ids)
+        cm = engine.cost_model
+        cost = cm["filter"] * n
+        sel = np.flatnonzero(evaluate(m.pred, cols))
+        mcols = {k: v[sel] for k, v in cols.items()}
+        did = row_ids[sel].astype(np.int64)
+        backend = engine.backend
+        for stage, op in enumerate(self.ops):
+            if len(did) == 0:
+                break
+            keycodes = encode_keys(mcols, op.probe_attrs)
+            if backend is not None:
+                probe_idx, entry_idx = backend.probe(op.state, keycodes)
+            else:
+                probe_idx, entry_idx = op.state.probe(keycodes)
+            cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
+            engine.counters["probe_rows"] += len(keycodes)
+            vis = op.state.visible_mask(m.qid, entry_idx)
+            ksel = np.flatnonzero(vis)
+            probe_idx, entry_idx = probe_idx[ksel], entry_idx[ksel]
+            mcols = {k: v[probe_idx] for k, v in mcols.items()}
+            for a, out in zip(op.payload, op.out_names):
+                mcols[out] = op.state.cols[a].data[entry_idx]
+            if self.compose_did:
+                did = did[probe_idx] * np.int64(op.state.did_domain) + op.state.did.data[entry_idx]
+            else:
+                did = did[probe_idx]
+            keep = np.ones(len(did), dtype=bool)
+            for p in m.stage_filters.get(stage, ()):
+                keep &= evaluate(p, mcols)
+            if not keep.all():
+                ks = np.flatnonzero(keep)
+                mcols = {k: v[ks] for k, v in mcols.items()}
+                did = did[ks]
+        if self.build_target is not None and len(did) > 0:
+            bt = self.build_target
+            w = np.uint64(0)
+            for b in m.beneficiaries:
+                w |= bt.state.slots.mask(b)
+            e = (U64_1 << np.uint64(m.eid)) if m.eid >= 0 else np.uint64(0)
+            keycodes = encode_keys(mcols, bt.key_attrs)
+            ins, mrk = bt.state.insert_or_mark(
+                did,
+                keycodes,
+                {a: mcols[a] for a in bt.state.retained_attrs},
+                np.full(len(did), w, dtype=np.uint64),
+                np.full(len(did), e, dtype=np.uint64),
+            )
+            cost += cm["insert"] * ins + cm["mark"] * mrk
+            m.rows_sunk += len(did)
+            key = "residual_build_rows" if m.kind == "residual" else "ordinary_build_rows"
+            engine.counters[key] += len(did) * len(m.beneficiaries)
+        elif m.sink is not None and len(did) > 0:
+            self._agg_sink_rows(engine, m, mcols, len(did), part)
+            cost += cm["agg"] * len(did)
         return cost
 
 

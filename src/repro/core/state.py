@@ -78,6 +78,12 @@ ALL_EXTENTS = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 _EMPTY_PAIR = (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
 
+#: Entry count below which ``SharedHashBuildState.probe`` skips the
+#: incremental multi-match index (lazy dup-run sync, hash rounds) and uses
+#: a direct cached-argsort probe — at small occupancy the full stable sort
+#: is cheaper than the incremental machinery's fixed overheads (§8).
+DIRECT_PROBE_MAX = 32768
+
 
 def _bincount_segment_sum(gids, values, n_groups):
     if values is None:
@@ -297,6 +303,8 @@ class SharedHashBuildState:
         # synced lazily at probe time — build-only phases pay nothing.
         self._kidx = [_KeyProbeIndex(counters=counters) for _ in range(self.n_partitions)]
         self._indexed_upto = 0  # entries registered with the probe index
+        # small-state direct probe cache: (n, order, sorted_keys, unique)
+        self._direct_cache: Optional[tuple] = None
 
         # counters
         self.rows_inserted = 0
@@ -528,8 +536,14 @@ class SharedHashBuildState:
         self._check_live()
         if self.keycode.n == 0 or len(probe_keycodes) == 0:
             return _EMPTY_PAIR
-        self._sync_index()
         pk = np.asarray(probe_keycodes, dtype=np.int64)
+        if self.keycode.n <= DIRECT_PROBE_MAX and self._indexed_upto == 0:
+            # size/occupancy threshold (§8): small states skip the lazy
+            # dup-run sync entirely; once the state outgrows the threshold
+            # the incremental index syncs from scratch in one batch append
+            return self._probe_direct(pk)
+        self._direct_cache = None  # outgrown: drop the small-state cache
+        self._sync_index()
         if self.n_partitions == 1:
             return self._kidx[0].probe(pk)
         parts = key_partition(pk, self.n_partitions)
@@ -553,6 +567,39 @@ class SharedHashBuildState:
             if self._counters is not None:
                 self._counters["partition_probe_merges"] += 1
         return probe_idx, entry_idx
+
+    def _probe_direct(self, pk: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Small-state probe: one cached stable argsort over all keycodes +
+        binary search. Pair stream is bit-identical to the incremental
+        index for every partition count — probe-row-major with entries in
+        insertion order (stable sort) — so the threshold crossing is
+        invisible to consumers."""
+        n = self.keycode.n
+        cache = self._direct_cache
+        if cache is None or cache[0] != n:
+            keys = self.keycode.data
+            order = np.argsort(keys, kind="stable")
+            skeys = keys[order]
+            unique = not bool((skeys[1:] == skeys[:-1]).any())
+            self._direct_cache = cache = (n, order, skeys, unique)
+        _, order, skeys, unique = cache
+        if unique:
+            pos = np.searchsorted(skeys, pk, side="left")
+            hit = skeys[np.minimum(pos, n - 1)] == pk
+            probe_idx = np.flatnonzero(hit).astype(np.int64)
+            return probe_idx, order[pos[probe_idx]]
+        lo = np.searchsorted(skeys, pk, side="left")
+        hi = np.searchsorted(skeys, pk, side="right")
+        counts = hi - lo
+        total = int(counts.sum())
+        if total == 0:
+            return _EMPTY_PAIR
+        probe_idx = np.repeat(np.arange(len(pk), dtype=np.int64), counts)
+        starts = np.repeat(lo, counts)
+        offs = np.arange(total, dtype=np.int64) - np.repeat(
+            np.concatenate(([0], np.cumsum(counts)[:-1])), counts
+        )
+        return probe_idx, order[starts + offs]
 
     def visible_mask(self, qid: int, entry_idx: np.ndarray) -> np.ndarray:
         """Per-query state lens on entries: per-entry visibility bit OR an
@@ -665,6 +712,24 @@ class _AggPartial:
                 gc.append(np.asarray(keys[k], dtype=np.float64)[sel])
             self._new_groups(n_new)
         return gids
+
+    def fold_partials(self, gids: np.ndarray, counts, agg_partials) -> None:
+        """Scatter pre-reduced per-group partials onto already-assigned
+        accumulator ids (§11 cohort steady state: no hashing at all).
+        ``gids`` must be distinct (one row per touched group), which lets
+        every scatter use buffered fancy indexing instead of ``ufunc.at``."""
+        cd = self._counts.data
+        cd[gids] += counts
+        for acc, spec, partial in zip(self._acc, self.aggs, agg_partials):
+            if spec.distinct:
+                raise ValueError("distinct aggregates cannot fold from partials")
+            ad = acc.data
+            if spec.func == "min":
+                ad[gids] = np.minimum(ad[gids], partial)
+            elif spec.func == "max":
+                ad[gids] = np.maximum(ad[gids], partial)
+            else:  # sum / avg / count partials add
+                ad[gids] += partial
 
     def update(self, key_cols, agg_values, n, segment_sum, distinct_idx) -> None:
         gids = self._group_ids(key_cols, n)
@@ -781,6 +846,54 @@ class SharedAggregateState:
         if segment_sum is None:
             segment_sum = _bincount_segment_sum
         self._parts[part].update(key_cols, agg_values, n, segment_sum, self._distinct_idx)
+
+    # -- batched multi-member entry points (§11) ------------------------------
+    def map_groups(self, key_cols: List[np.ndarray], part: int = 0) -> np.ndarray:
+        """Accumulator id per group-key row (one row per group), assigning
+        unseen groups new ids *in the given row order* — the caller passes
+        a member's unseen groups in its first-occurrence order, which makes
+        accumulator layout bit-identical to row-level ``update``. For
+        global aggregates (no group keys) returns the single group's id."""
+        self._check_live()
+        part_acc = self._parts[part]
+        if not key_cols:
+            return part_acc._group_ids([], 1)
+        return part_acc._group_ids(list(key_cols), len(key_cols[0]))
+
+    def fold_groups(
+        self,
+        gids: np.ndarray,
+        counts: np.ndarray,
+        agg_partials: List[np.ndarray],
+        n_rows: int,
+        part: int = 0,
+    ) -> None:
+        """Fold pre-reduced per-group partials onto mapped accumulator ids
+        (§11 cohort pass): sum/count/avg partials add, min/max merge —
+        exactly equivalent to ``update`` over the member's selected rows
+        because the partials were accumulated in the same row order.
+        Distinct aggregates cannot fold this way (their dedup is
+        per-state); the runtime routes them through ``update``."""
+        if n_rows == 0:
+            return
+        self._check_live()
+        self.rows_consumed += n_rows
+        self._parts[part].fold_partials(gids, counts, agg_partials)
+
+    def update_groups(
+        self,
+        key_cols: List[np.ndarray],
+        counts: np.ndarray,
+        agg_partials: List[np.ndarray],
+        n_rows: int,
+        part: int = 0,
+    ) -> None:
+        """``map_groups`` + ``fold_groups`` in one call (one row per
+        touched group, in the member's first-occurrence order)."""
+        if n_rows == 0:
+            return
+        gids = self.map_groups(key_cols, part=part)
+        self.fold_groups(gids, counts, agg_partials, n_rows, part=part)
 
     # -- deterministic partial merge (DESIGN.md §9) ---------------------------
     def _merged(self):

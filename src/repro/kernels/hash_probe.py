@@ -14,6 +14,13 @@ vectorized gathers+compares on the VPU — no pointer chasing.
 Unique-key tables only (FK-keyed dimension states); the engine routes
 multi-match states through the reference path.
 
+``hash_probe_lens_multi`` is the multi-member variant (DESIGN.md §11): one
+launch returns, per probe key, the matched slot AND the matched entry's
+packed visibility word — the per-row ownership mask of every probing
+member at once. The host translates the word from state-slot space into
+pipeline ownership bits (``core.visibility.translate_bits``), so per-morsel
+kernel cost is independent of how many queries share the probe.
+
 ``hash_build_insert`` is the batch-insert companion: one kernel call builds
 the whole open-addressing table from a key batch (linear-probe placement,
 bounded by ``MAX_PROBE``; duplicate keys or over-long clusters clear the
@@ -93,6 +100,72 @@ def hash_probe_lens(
         interpret=interpret,
     )(pk, table_keys, table_vis, query_mask)
     return out[:n]
+
+
+def _probe_multi_kernel(probe_ref, tkeys_ref, tvis_ref, out_slot_ref, out_vis_ref):
+    tkeys = tkeys_ref[...]
+    tvis = tvis_ref[...]
+    cap_mask = jnp.int32(tkeys.shape[0] - 1)
+    keys = probe_ref[...]
+    pos = _hash(keys, cap_mask)
+    found = jnp.full(keys.shape, -1, jnp.int32)
+    vis = jnp.zeros(keys.shape, jnp.uint32)
+    done = jnp.zeros(keys.shape, jnp.bool_)
+
+    def step(_, carry):
+        pos, found, vis, done = carry
+        slot_keys = tkeys[pos]
+        hit = (slot_keys == keys) & ~done
+        empty = (slot_keys == jnp.int32(EMPTY)) & ~done
+        # multi-member lens: emit the whole packed visibility word — every
+        # probing member's ownership bit resolves from one gather
+        found = jnp.where(hit, pos, found)
+        vis = jnp.where(hit, tvis[pos], vis)
+        done = done | hit | empty
+        pos = (pos + 1) & cap_mask
+        return pos, found, vis, done
+
+    _, found, vis, _ = jax.lax.fori_loop(0, MAX_PROBE, step, (pos, found, vis, done))
+    out_slot_ref[...] = found
+    out_vis_ref[...] = vis
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_probe_lens_multi(
+    probe_keys: jnp.ndarray,  # [N] int32
+    table_keys: jnp.ndarray,  # [T] int32, power-of-two T, EMPTY sentinel
+    table_vis: jnp.ndarray,  # [T] uint32 per-entry visibility words
+    *,
+    interpret: bool = True,
+):
+    """Multi-member probe (§11): per probe key, the matched table slot
+    (-1 = no match, pre-visibility — the pair stream matches the reference
+    probe exactly) and the matched entry's packed visibility word. One
+    launch serves every probing member; the host maps the word to
+    pipeline ownership bits."""
+    n = probe_keys.shape[0]
+    pad = (-n) % BLOCK_N
+    pk = jnp.pad(probe_keys, (0, pad), constant_values=jnp.int32(EMPTY))
+    grid = (pk.shape[0] // BLOCK_N,)
+    found, vis = pl.pallas_call(
+        _probe_multi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec(table_keys.shape, lambda i: (0,)),
+            pl.BlockSpec(table_vis.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pk.shape, jnp.int32),
+            jax.ShapeDtypeStruct(pk.shape, jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pk, table_keys, table_vis)
+    return found[:n], vis[:n]
 
 
 def _insert_kernel(keys_ref, tkeys_ref, tentry_ref, ok_ref):

@@ -264,6 +264,12 @@ def test_stats_expose_data_plane_counters(db):
         "index_rebuilds",
         "kernel_lens_probes",
         "fused_filter_rows",
+        "kernel_multi_lens_probes",
+        "fused_vis_rows",
+        "fused_stage_filter_rows",
+        "fused_sink_rows",
+        "agg_cohort_rows",
+        "overflow_members",
         "partition_merges",
         "partition_probe_merges",
         "evictions",
@@ -273,6 +279,8 @@ def test_stats_expose_data_plane_counters(db):
         "forced_admissions",
     }
     assert counters["fused_filter_rows"] > 0  # source predicates ran fused
+    assert counters["fused_sink_rows"] > 0  # member-major build tagging ran (§11)
+    assert counters["overflow_members"] == 0  # nothing spilled past 64 slots
     # refcount retention + always-admission (defaults): lifecycle idle
     assert counters["evictions"] == 0 and counters["queued_admissions"] == 0
     assert fut.stats()["admission"] is None  # no controller on this session
