@@ -96,7 +96,7 @@ def run_closed_loop(
     done = session.run(on_complete=on_complete)
     elapsed = session.now
     lats = np.array([f.latency() for f in done])
-    return {
+    out = {
         "mode": mode,
         "completed": len(done),
         "elapsed_s": elapsed,
@@ -106,6 +106,25 @@ def run_closed_loop(
         "latencies": lats.tolist(),
         "counters": {k: float(v) for k, v in session.counters.items()},
     }
+    session.close()  # release retained state before the next sweep point
+    return out
+
+
+def repeat_instances(db, qrng, n: int, pool: int, zipf: float = 1.1):
+    """Repeat-heavy instance stream (reuse plane, DESIGN.md §12): pre-sample a
+    small pool of concrete (template, params) instances, then draw each
+    arrival from the pool with Zipf(rank) weights. Templates AND parameter
+    bindings repeat exactly, so plan fingerprints recur — the workload shape
+    the artifact cache exists for. Deterministic in ``qrng``."""
+    inst = []
+    for _ in range(pool):
+        q = queries.sample_query(db, qrng)
+        inst.append((q.template, q.params))
+    ranks = np.arange(1, pool + 1, dtype=np.float64)
+    w = ranks ** (-zipf)
+    w /= w.sum()
+    picks = qrng.choice(pool, size=n, p=w)
+    return [inst[i] for i in picks]
 
 
 def run_open_loop(
@@ -117,12 +136,20 @@ def run_open_loop(
     warm_s: float = 120.0,
     seed: int = 11,
     config_extra: Optional[Dict] = None,
+    repeat_pool: Optional[int] = None,
+    repeat_zipf: float = 1.1,
+    detail: bool = False,
 ) -> Dict:
     """Open loop (paper §6.5): Poisson arrivals at the offered load; the run
     drains after the measurement phase. Response time = scheduled arrival ->
     completion. All systems replay the same trace. ``config_extra`` forwards
     EngineConfig knobs (retention / memory_budget / admission — the §10
-    overload path) and their queue/eviction stats ride back in the result."""
+    overload path) and their queue/eviction stats ride back in the result.
+
+    ``repeat_pool`` switches to the repeat-heavy workload (§12): instances
+    come from a fixed pool with Zipf repeats instead of fresh i.i.d. samples.
+    ``detail`` adds per-measured-arrival latency and served-from-cache flags
+    so cache-hit arrivals can be matched across legs of a sweep."""
     rng = np.random.default_rng(seed)
     trace = []
     t = 0.0
@@ -138,15 +165,20 @@ def run_open_loop(
         if t < end:
             trace.append(t)
     qrng = np.random.default_rng(seed + 1)
-    arrivals = [
-        queries.sample_query(db, qrng, arrival=at) for at in trace
-    ]
+    if repeat_pool:
+        insts = repeat_instances(db, qrng, len(trace), repeat_pool, repeat_zipf)
+        arrivals = [
+            queries.make_query(db, tmpl, params, arrival=at)
+            for (tmpl, params), at in zip(insts, trace)
+        ]
+    else:
+        arrivals = [queries.sample_query(db, qrng, arrival=at) for at in trace]
     session = open_session(db, mode, **(config_extra or {}))
     futures = session.submit_all(arrivals)
     session.run()
     lats = np.array([f.latency() for f in futures[measured_from:]])
     stats = session.stats()
-    return {
+    out = {
         "mode": mode,
         "offered_qph": offered_qph,
         "n_measured": len(lats),
@@ -161,7 +193,28 @@ def run_open_loop(
         "state_revivals": int(stats["state_revivals"]),
         "retained_high_water_bytes": int(stats["retained_high_water_bytes"]),
         "mem_high_water_bytes": int(stats["mem_high_water_bytes"]),
+        # reuse plane (§12): zero when the cache is off
+        "cache_hits": int(stats.get("cache_hits", 0)),
+        "cache_spills": int(stats.get("cache_spills", 0)),
+        "cache_evictions": int(stats.get("cache_evictions", 0)),
+        "rehydrate_bytes": int(stats.get("rehydrate_bytes", 0)),
+        "cache_high_water_bytes": int(stats.get("cache_high_water_bytes", 0)),
     }
+    if detail:
+        handles = session.engine.handles
+        out["detail"] = [
+            {
+                "i": i,
+                "template": f.query.template,
+                "latency_s": float(f.latency()),
+                "served_from_cache": bool(
+                    getattr(handles.get(f.qid), "cache_hits", 0)
+                ),
+            }
+            for i, f in enumerate(futures[measured_from:])
+        ]
+    session.close()
+    return out
 
 
 def save(name: str, obj) -> None:

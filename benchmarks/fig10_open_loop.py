@@ -46,6 +46,11 @@ def graft_overload_config(memory_budget: int) -> Dict:
         admission_share_threshold=0.4,
     )
 
+# The §12 repeat-heavy workload: arrivals drawn Zipf-weighted from a fixed
+# pool of concrete instances, so identical plan fingerprints recur. Shared
+# with reuse_sweep.py so both benchmarks replay the same stream shape.
+REPEAT_HEAVY = dict(repeat_pool=24, repeat_zipf=1.1)
+
 # Full sweep: single-worker capacity at SF0.02 saturates near ~70K q/h
 # (probed; isolated P95 leaves the sub-second regime between 60K and 90K),
 # so the last two loads are firmly past saturation.
@@ -74,17 +79,20 @@ SMOKE = dict(
 )
 
 
-def run(sf: float = 0.05, loads=(5_000, 15_000, 30_000, 45_000)):
+def run(sf: float = 0.05, loads=(5_000, 15_000, 30_000, 45_000), repeat_heavy: bool = False):
     """Paper Fig. 10. Loads scaled to this instance's single-worker capacity
     (~25K q/h isolated at SF0.05, fig7) so the sweep crosses the same under-
-    to over-load regimes as the paper's 1K-10K against its ~2.5K capacity."""
+    to over-load regimes as the paper's 1K-10K against its ~2.5K capacity.
+    ``repeat_heavy`` swaps the i.i.d. instance stream for the §12 Zipf
+    repeat pool (same arrival trace)."""
     db = get_db(sf)
+    workload = REPEAT_HEAVY if repeat_heavy else {}
     data = []
     rows = [("fig10", "offered_qph", "mode", "p95_s", "median_s", "x_isolated_p95")]
     for load in loads:
         base = None
         for mode in SYSTEMS:
-            r = run_open_loop(db, mode, load)
+            r = run_open_loop(db, mode, load, **workload)
             data.append(r)
             if mode == "isolated":
                 base = r["p95_s"]
@@ -98,7 +106,7 @@ def run(sf: float = 0.05, loads=(5_000, 15_000, 30_000, 45_000)):
                     round(r["p95_s"] / base, 3) if base else "",
                 )
             )
-    save("fig10_open_loop", data)
+    save("fig10_open_loop_repeat" if repeat_heavy else "fig10_open_loop", data)
     emit(rows)
     return data
 
@@ -170,8 +178,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bench", action="store_true", help="overload sweep -> BENCH_openloop.json")
     ap.add_argument("--smoke", action="store_true", help="CI smoke bench (implies --bench)")
+    ap.add_argument(
+        "--repeat-heavy",
+        action="store_true",
+        help="Zipf repeat-pool instance stream (§12) instead of i.i.d. samples",
+    )
     args = ap.parse_args()
     if args.bench or args.smoke:
         bench(smoke=args.smoke)
     else:
-        run()
+        run(repeat_heavy=args.repeat_heavy)

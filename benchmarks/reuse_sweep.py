@@ -1,0 +1,214 @@
+"""Reuse-plane acceptance sweep (DESIGN.md §12) -> ``BENCH_reuse.json``.
+
+Three legs over the IDENTICAL repeat-heavy open-loop trace (same seed, same
+Zipf repeat pool — ``fig10_open_loop.REPEAT_HEAVY``):
+
+  isolated     every arrival recomputes from base tables
+  graft-live   epoch retention + tight memory budget + adaptive admission;
+               eviction destroys retired state (no cache)
+  graft-cache  same engine, plus ``reuse_cache_budget``: eviction spills
+               retired state into the artifact store, repeats rehydrate
+
+Because all legs replay the same arrivals, every cache-served arrival in
+the graft-cache leg has an *equivalent isolated recompute* at the same
+trace index. The acceptance block requires:
+
+  * cache-hit arrivals complete at <= ``hit_ratio_target`` (0.5) x the
+    median latency of those same arrivals in the isolated leg,
+  * retained high-water respects ``memory_budget`` and cache high-water
+    respects ``reuse_cache_budget`` (both enforced structurally, verified
+    empirically here),
+  * EXPLAIN GRAFT on a cache-served boundary keeps represented + residual
+    + unattached == demand, per partition and in total.
+
+  PYTHONPATH=src python -m benchmarks.reuse_sweep --bench     # full sweep
+  PYTHONPATH=src python -m benchmarks.reuse_sweep --smoke     # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.relational import queries
+
+from .common import get_db, open_session, run_open_loop, save
+from .fig10_open_loop import REPEAT_HEAVY, graft_overload_config
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+FULL = dict(
+    sf=0.02,
+    loads=(60_000, 120_000),
+    measure_s=20.0,
+    warm_s=10.0,
+    warm_qph=500.0,
+    memory_budget=1_200_000,
+    cache_budget=64_000_000,
+    hit_ratio_target=0.5,
+)
+SMOKE = dict(
+    sf=0.01,
+    loads=(120_000,),
+    measure_s=8.0,
+    warm_s=4.0,
+    warm_qph=500.0,
+    memory_budget=400_000,
+    cache_budget=64_000_000,
+    hit_ratio_target=0.5,
+)
+
+
+def explain_accounting_check(sf: float, cache_budget: int) -> Dict:
+    """EXPLAIN GRAFT over a cache-served boundary: force a state through
+    spill -> (ghost) rehydrate and verify the accounting identity holds per
+    partition. Runs at partitions=4 so the per-shard split is exercised."""
+    db = get_db(sf)
+    session = open_session(
+        db,
+        "graft",
+        partitions=4,
+        retention="epoch",
+        memory_budget=0,  # retire -> immediate spill
+        reuse_cache_budget=cache_budget,
+    )
+    q1 = queries.make_query(db, "q3", {"segment": 1, "date": 750})
+    session.submit(q1)
+    session.run()
+    ex = session.explain_graft(queries.make_query(db, "q3", {"segment": 1, "date": 750}))
+    cached = [b for b in ex._all() if b.served_from_cache]
+    total_ok = all(
+        b.represented_rows + b.residual_rows + b.unattached_rows == b.demand_rows
+        for b in ex._all()
+    )
+    part_ok = all(
+        sum(b.part_demand_rows) == b.demand_rows
+        and sum(b.part_represented_rows) == b.represented_rows
+        and sum(b.part_residual_rows) == b.residual_rows
+        and sum(b.part_unattached_rows) == b.unattached_rows
+        for b in ex._all()
+        if b.part_demand_rows
+    )
+    out = {
+        "boundaries": len(ex._all()),
+        "cache_served_boundaries": len(cached),
+        "totals_sum_to_demand": bool(total_ok),
+        "partitions_sum_to_totals": bool(part_ok),
+    }
+    session.close()
+    return out
+
+
+def bench(smoke: bool = False) -> Dict:
+    params = SMOKE if smoke else FULL
+    db = get_db(params["sf"])
+    win = dict(
+        measure_s=params["measure_s"],
+        warm_s=params["warm_s"],
+        warm_qph=params["warm_qph"],
+        detail=True,
+        **REPEAT_HEAVY,
+    )
+    live_cfg = graft_overload_config(params["memory_budget"])
+    cache_cfg = dict(live_cfg, reuse_cache_budget=params["cache_budget"])
+
+    sweep: List[Dict] = []
+    hit_ratios: List[float] = []
+    hits_total = 0
+    for load in params["loads"]:
+        iso = run_open_loop(db, "isolated", load, **win)
+        live = run_open_loop(db, "graft", load, config_extra=live_cfg, **win)
+        cache = run_open_loop(db, "graft", load, config_extra=cache_cfg, **win)
+
+        # identical traces: arrival i in one leg is the same query instance
+        # arriving at the same instant in every other leg
+        assert len(iso["detail"]) == len(cache["detail"]) == len(live["detail"])
+        assert all(
+            a["template"] == c["template"]
+            for a, c in zip(iso["detail"], cache["detail"])
+        )
+        hit_idx = [d["i"] for d in cache["detail"] if d["served_from_cache"]]
+        hits_total += len(hit_idx)
+        if hit_idx:
+            hit_lat = np.median([cache["detail"][i]["latency_s"] for i in hit_idx])
+            iso_lat = np.median([iso["detail"][i]["latency_s"] for i in hit_idx])
+            ratio = float(hit_lat / iso_lat) if iso_lat > 0 else float("nan")
+        else:
+            hit_lat = iso_lat = float("nan")
+            ratio = float("nan")
+        hit_ratios.append(ratio)
+        for leg, r in (("isolated", iso), ("graft-live", live), ("graft-cache", cache)):
+            row = {k: v for k, v in r.items() if k != "detail"}
+            row["leg"] = leg
+            sweep.append(row)
+        print(
+            f"load {load:>7} q/h: iso p95 {iso['p95_s']:.3f}s, "
+            f"live p95 {live['p95_s']:.3f}s, cache p95 {cache['p95_s']:.3f}s; "
+            f"{len(hit_idx)} cache-hit arrivals, "
+            f"hit median {hit_lat:.4f}s vs iso-equivalent {iso_lat:.4f}s "
+            f"({ratio:.3f}x), spills {cache['cache_spills']}, "
+            f"cache HW {cache['cache_high_water_bytes']:,}B",
+            flush=True,
+        )
+
+    explain_check = explain_accounting_check(params["sf"], params["cache_budget"])
+    cache_rows = [r for r in sweep if r["leg"] == "graft-cache"]
+    out = {
+        "bench": "graftdb_reuse",
+        "smoke": smoke,
+        "sf": params["sf"],
+        "windows": {k: v for k, v in win.items() if k not in ("detail",)},
+        "graft_config": dict(live_cfg),
+        "cache_budget": params["cache_budget"],
+        "loads": list(params["loads"]),
+        "sweep": sweep,
+        "explain_accounting": explain_check,
+        "acceptance": {
+            "hit_ratio_target": params["hit_ratio_target"],
+            "cache_hit_arrivals": hits_total,
+            "hit_vs_isolated_ratios": hit_ratios,
+            "max_hit_ratio": float(np.nanmax(hit_ratios)) if hit_ratios else float("nan"),
+            "memory_budget_respected": all(
+                r["retained_high_water_bytes"] <= params["memory_budget"]
+                for r in sweep
+                if r["leg"].startswith("graft")
+            ),
+            "cache_budget_respected": all(
+                r["cache_high_water_bytes"] <= params["cache_budget"]
+                for r in cache_rows
+            ),
+            "spills_observed": sum(r["cache_spills"] for r in cache_rows) > 0,
+            "explain_accounting_exact": bool(
+                explain_check["totals_sum_to_demand"]
+                and explain_check["partitions_sum_to_totals"]
+                and explain_check["cache_served_boundaries"] > 0
+            ),
+        },
+    }
+    path = REPO_ROOT / "BENCH_reuse.json"
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}", flush=True)
+    save("reuse_sweep", out)
+    acc = out["acceptance"]
+    assert acc["spills_observed"], "evictor never spilled — budgets too loose"
+    assert acc["cache_hit_arrivals"] > 0, "no arrival was served from cache"
+    assert acc["memory_budget_respected"], "retained high-water exceeded memory_budget"
+    assert acc["cache_budget_respected"], "cache high-water exceeded reuse_cache_budget"
+    assert acc["explain_accounting_exact"], "EXPLAIN accounting broke on a cached boundary"
+    assert acc["max_hit_ratio"] <= acc["hit_ratio_target"], (
+        f"cache-hit arrivals ran at {acc['max_hit_ratio']:.3f}x the equivalent "
+        f"isolated recompute (target <= {acc['hit_ratio_target']})"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", action="store_true", help="full sweep -> BENCH_reuse.json")
+    ap.add_argument("--smoke", action="store_true", help="CI smoke bench")
+    args = ap.parse_args()
+    bench(smoke=args.smoke)

@@ -57,6 +57,15 @@ class EngineConfig:
       evictor retains (None = retain without bound). Pinned state — live
       lenses or queued-but-admissible ones — is never evicted; its
       footprint is bounded by admission control, not by this budget.
+    * ``reuse_cache_budget`` — bytes of the reuse plane's host-memory
+      artifact tier (DESIGN.md §12): evicted retired states spill into a
+      semantic artifact cache instead of being destroyed, and repeat
+      arrivals rehydrate them when the cost model favors reuse over
+      recompute. None (default) disables the reuse plane. Requires
+      ``retention='epoch'`` — refcount release never evicts.
+    * ``reuse_disk_budget`` — bytes of the optional on-disk artifact tier
+      (a temp dir): artifacts aging out of the memory tier demote here
+      instead of dropping. Requires ``reuse_cache_budget``.
     * ``admission`` — open-loop arrival admission: ``"always"`` admits
       every due arrival (seed behavior); ``"adaptive"`` admits freely below
       ``admission_max_inflight`` active queries and past that only arrivals
@@ -87,6 +96,8 @@ class EngineConfig:
     backend: Union[str, object] = "reference"
     retention: str = "refcount"
     memory_budget: Optional[int] = None
+    reuse_cache_budget: Optional[int] = None
+    reuse_disk_budget: Optional[int] = None
     admission: str = "always"
     admission_max_inflight: int = 8
     admission_share_threshold: float = 0.5
@@ -134,6 +145,25 @@ class EngineConfig:
                     "memory_budget requires retention='epoch' (the refcount "
                     "policy frees state at zero refs — there is nothing to budget)"
                 )
+        if self.reuse_cache_budget is not None:
+            if not isinstance(self.reuse_cache_budget, int) or self.reuse_cache_budget < 0:
+                raise ValueError(
+                    f"reuse_cache_budget must be a non-negative int (bytes) or None, "
+                    f"got {self.reuse_cache_budget!r}"
+                )
+            if self.retention != "epoch":
+                raise ValueError(
+                    "reuse_cache_budget requires retention='epoch' (artifacts "
+                    "spill at eviction — the refcount policy never evicts)"
+                )
+        if self.reuse_disk_budget is not None:
+            if not isinstance(self.reuse_disk_budget, int) or self.reuse_disk_budget < 0:
+                raise ValueError(
+                    f"reuse_disk_budget must be a non-negative int (bytes) or None, "
+                    f"got {self.reuse_disk_budget!r}"
+                )
+            if self.reuse_cache_budget is None:
+                raise ValueError("reuse_disk_budget requires reuse_cache_budget")
         if self.admission not in ADMISSION_POLICIES:
             raise ValueError(
                 f"admission must be one of {ADMISSION_POLICIES}, got {self.admission!r}"
@@ -259,6 +289,11 @@ class ServingConfig:
     * ``memory_budget_tokens`` — token budget of retained prefixes; the
       evictor reclaims retired states oldest-epoch-first past it (None =
       retain without bound; requires ``retain_prefixes``).
+    * ``reuse_cache_tokens`` — token budget of the serving-plane artifact
+      cache (§12): evicted KV prefixes spill into the same tiered
+      ``ArtifactStore`` the relational reuse plane uses and rehydrate when
+      a later request's prompt matches (None = no prefix cache; requires
+      ``retain_prefixes``).
     """
 
     fold: bool = True
@@ -267,6 +302,7 @@ class ServingConfig:
     decode_step_s: float = 0.02
     retain_prefixes: bool = False
     memory_budget_tokens: Optional[int] = None
+    reuse_cache_tokens: Optional[int] = None
 
     def __post_init__(self):
         if self.min_share < 0:
@@ -283,3 +319,11 @@ class ServingConfig:
                 raise ValueError(
                     "memory_budget_tokens requires retain_prefixes=True"
                 )
+        if self.reuse_cache_tokens is not None:
+            if not isinstance(self.reuse_cache_tokens, int) or self.reuse_cache_tokens < 0:
+                raise ValueError(
+                    f"reuse_cache_tokens must be a non-negative int or None, "
+                    f"got {self.reuse_cache_tokens!r}"
+                )
+            if not self.retain_prefixes:
+                raise ValueError("reuse_cache_tokens requires retain_prefixes=True")

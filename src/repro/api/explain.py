@@ -62,6 +62,10 @@ class BoundaryExplain:
     # the selected state is retired (zero refs, kept by the epoch retention
     # policy §10) — attaching would revive it out of the evictor's reach
     state_retired: bool = False
+    # the selected state is a cached artifact (§12): admission would
+    # rehydrate it from the reuse plane and attach exactly as to a live
+    # candidate — represented/residual/unattached still sum to demand
+    served_from_cache: bool = False
     nested: Tuple["BoundaryExplain", ...] = ()
     part_demand_rows: Tuple[int, ...] = ()
     part_represented_rows: Tuple[int, ...] = ()
@@ -83,7 +87,9 @@ class GraftExplain:
     template: str
     mode: str
     spine_scan: str  # probe-side base table of the main pipeline
-    agg_decision: str  # 'attach' (exact aggregate identity) | 'new'
+    # 'attach' (exact live aggregate identity) | 'attach_cached' (identity
+    # rehydrates from the reuse plane, §12) | 'new'
+    agg_decision: str
     boundaries: Tuple[BoundaryExplain, ...] = ()
 
     # -- totals --------------------------------------------------------------
@@ -150,6 +156,7 @@ class GraftExplain:
                     "unattached_rows": b.unattached_rows,
                     "state_id": b.state_id,
                     "state_retired": b.state_retired,
+                    "served_from_cache": b.served_from_cache,
                     "part_demand_rows": list(b.part_demand_rows),
                     "part_represented_rows": list(b.part_represented_rows),
                     "part_residual_rows": list(b.part_residual_rows),
@@ -181,7 +188,12 @@ class GraftExplain:
                 pad = "    " + "  " * b.depth
                 if b.state_id is not None:
                     tag = " (retired)" if b.state_retired else ""
+                    if b.served_from_cache:
+                        tag = " (cache)"
                     tgt = f" -> state #{b.state_id}{tag}"
+                elif b.served_from_cache:
+                    # eliminated under a cached aggregate identity (§12)
+                    tgt = " -> cached artifact (cache)"
                 else:
                     tgt = " -> fresh state"
                 lines.append(
@@ -212,16 +224,28 @@ def analyze_query(engine, query: Query) -> GraftExplain:
     agg_sig = aggregate_signature(agg)
     if agg_sig is not None and mode.agg_share != "none":
         existing = engine.agg_index.get(agg_sig)
-        if existing is not None and engine._agg_attachable(existing):
+        cached = False
+        if (
+            existing is None
+            and mode.agg_share == "full"
+            and getattr(engine, "reuse", None) is not None
+        ):
+            # reuse plane (§12): the identity would rehydrate from the
+            # artifact cache (cost-gated peek, read-only — nothing taken)
+            cached = (
+                engine.reuse.peek_agg(engine, query.plan, agg, agg_sig) is not None
+            )
+        if cached or (existing is not None and engine._agg_attachable(existing)):
             bounds = tuple(
-                _eliminated(engine, j, depth=0) for j in all_boundaries(query.plan)
+                _eliminated(engine, j, depth=0, served_from_cache=cached)
+                for j in all_boundaries(query.plan)
             )
             return GraftExplain(
                 qid=query.qid,
                 template=query.template,
                 mode=mode.name,
                 spine_scan=scan.table,
-                agg_decision="attach",
+                agg_decision="attach_cached" if cached else "attach",
                 boundaries=bounds,
             )
 
@@ -257,7 +281,9 @@ def _zeros_like(split: np.ndarray) -> Tuple[int, ...]:
     return tuple(0 for _ in split)
 
 
-def _eliminated(engine, join: HashJoin, depth: int) -> BoundaryExplain:
+def _eliminated(
+    engine, join: HashJoin, depth: int, served_from_cache: bool = False
+) -> BoundaryExplain:
     demand = estimate_demand(engine, join.build)
     split = _demand_split(engine, join, demand)
     return BoundaryExplain(
@@ -268,6 +294,7 @@ def _eliminated(engine, join: HashJoin, depth: int) -> BoundaryExplain:
         represented_rows=demand,
         residual_rows=0,
         unattached_rows=0,
+        served_from_cache=served_from_cache,
         part_demand_rows=tuple(int(x) for x in split),
         part_represented_rows=tuple(int(x) for x in split),
         part_residual_rows=_zeros_like(split),
@@ -285,10 +312,25 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
     split = _demand_split(engine, join, demand)
 
     candidate = None
+    cached = False
     if mode.share_state:
         for s in engine.state_index.get(sig, ()):
             candidate = s
             break
+        if (
+            candidate is None
+            and mode.allow_represented
+            and getattr(engine, "reuse", None) is not None
+        ):
+            # reuse plane (§12): mirror the admission-time cache consult
+            # with a ghost rehydration — an unregistered throwaway state
+            # carrying the artifact's coverage + entries, so the ladder
+            # below scores it exactly like the live candidate admission
+            # would create. Read-only: the artifact stays cached.
+            sel = engine.reuse.select_hash(engine, sig, b_q, demand)
+            if sel is not None:
+                candidate = engine.reuse.ghost_hash(sel[0])
+                cached = True
     retired = bool(candidate is not None and candidate.retired_epoch is not None)
 
     # Represented extent: proven containment against allowed coverage.
@@ -320,6 +362,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                     unattached_rows=0,
                     state_id=candidate.state_id,
                     state_retired=retired,
+                    served_from_cache=cached,
                     nested=nested,
                     part_demand_rows=tuple(int(x) for x in split),
                     part_represented_rows=tuple(int(x) for x in split),
@@ -347,6 +390,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
                 unattached_rows=0,
                 state_id=candidate.state_id,
                 state_retired=retired,
+                served_from_cache=cached,
                 nested=nested,
                 part_demand_rows=tuple(int(x) for x in split),
                 part_represented_rows=tuple(int(x) for x in rep_parts),
@@ -369,6 +413,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
             unattached_rows=0,
             state_id=candidate.state_id,
             state_retired=retired,
+            served_from_cache=cached,
             nested=nested,
             part_demand_rows=tuple(int(x) for x in split),
             part_represented_rows=_zeros_like(split),

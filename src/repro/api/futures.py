@@ -80,6 +80,10 @@ class QueryFuture:
             "members": kinds,
             "rows_sunk": rows_sunk,
             "attached_state_ids": [s.state_id for s in h.attached_states],
+            # reuse plane (§12): boundaries of THIS query served by
+            # rehydrating a cached artifact
+            "served_from_cache": bool(h.cache_hits),
+            "cache_hits": h.cache_hits,
             # shared-data-plane perf counters (engine-wide: one shared
             # execution serves every query, so the work is not per-query
             # attributable — DESIGN.md §8/§9)
@@ -104,6 +108,11 @@ class QueryFuture:
                     "state_revivals",
                     "queued_admissions",
                     "forced_admissions",
+                    # reuse plane (engine-wide, §12)
+                    "cache_hits",
+                    "cache_spills",
+                    "cache_evictions",
+                    "rehydrate_bytes",
                 )
             },
             # per-query admission record (§10): decision ('graft'/'fresh'/

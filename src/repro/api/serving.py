@@ -40,6 +40,7 @@ class ServingSession:
             min_share=self.config.min_share,
             retain_prefixes=self.config.retain_prefixes,
             memory_budget_tokens=self.config.memory_budget_tokens,
+            reuse_cache_tokens=self.config.reuse_cache_tokens,
         )
         self._sched.on_admit = self._capture_admit
         self._futures: Dict[int, RequestFuture] = {}
@@ -105,6 +106,9 @@ class ServingSession:
             "represented_tokens": att["represented"],
             "residual_tokens": att["residual"],
             "ordinary_tokens": att["suffix"],
+            # reuse plane (§12): a spilled prefix artifact would rehydrate
+            # and serve the matched prefix
+            "served_from_cache": bool(att.get("served_from_cache")),
         }
 
     # -- introspection -------------------------------------------------------

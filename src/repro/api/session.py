@@ -46,6 +46,8 @@ class Session:
             retention=self.config.retention,
             memory_budget=self.config.memory_budget,
             member_major=self.config.member_major,
+            reuse_cache_budget=self.config.reuse_cache_budget,
+            reuse_disk_budget=self.config.reuse_disk_budget,
         )
         admission = self.config.make_admission()
         if self.config.workers == 1:
@@ -178,6 +180,7 @@ class Session:
         out["admission"] = self.config.admission
         out["queued_pending"] = len(self._runner._admit_queue)
         out["memory_budget"] = self.config.memory_budget
+        out["reuse_cache_budget"] = self.config.reuse_cache_budget
         backend_stats = getattr(self.backend, "stats", None)
         if backend_stats is not None:
             for k, v in backend_stats().items():
@@ -186,7 +189,29 @@ class Session:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
+        """Release everything the session retains, deterministically.
+
+        Idempotent. Drops external (queued-admission) pins, flushes the
+        artifact store — no further spills, disk tier deleted — and, under
+        epoch retention, force-evicts every retired state so retained
+        bytes drop to zero. Benchmarks sweeping many sessions no longer
+        leak engines across sweep points; ``with connect(...) as s:``
+        scopes the release."""
+        if self._closed:
+            return
         self._closed = True
+        # external pins first: a pinned state is never evictable
+        for qid in list(self._runner._queued_pins):
+            self._runner._unpin_candidates(qid)
+        self._runner._admit_queue.clear()
+        eng = self._engine
+        if eng.reuse is not None:
+            # flush BEFORE the final eviction pass so the force-evicted
+            # states are destroyed, not respilled into a store we just
+            # emptied
+            eng.reuse.close()
+        if eng.retention == "epoch":
+            eng.enforce_memory_budget(0)
 
     def _check_open(self) -> None:
         if self._closed:

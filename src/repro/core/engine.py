@@ -29,6 +29,7 @@ from .descriptors import StateSignature, aggregate_signature
 from .grafting import all_boundaries, estimate_demand, plan_spine, resolve_boundary
 from .plans import Aggregate, OrderBy, Query
 from .predicates import TRUE
+from .reuse import ReusePlane
 from .runtime import AggGate, AggSink, Member, Pipeline, ProbeOp, ScanNode
 from .state import SharedAggregateState, SharedHashBuildState, StateLifecycle
 
@@ -80,6 +81,10 @@ DEFAULT_COST_MODEL: Dict[str, float] = {
     "insert": 600e-9,
     "mark": 250e-9,
     "agg": 400e-9,
+    # per-entry cost of rehydrating a spilled state artifact (§12): bulk
+    # SoA restore + amortized derived-index rebuild — far below the
+    # scan+filter+insert cost of re-producing the same entry
+    "rehydrate": 60e-9,
 }
 
 
@@ -96,6 +101,8 @@ class QueryHandle:
         self.orderby: Optional[OrderBy] = None
         self.result: Optional[Dict[str, np.ndarray]] = None
         self.done = False
+        # boundaries this query served by rehydrating a cached artifact (§12)
+        self.cache_hits = 0
 
     @property
     def latency(self) -> float:
@@ -115,6 +122,8 @@ class GraftEngine:
         retention: str = "refcount",
         memory_budget: Optional[int] = None,
         member_major: bool = True,
+        reuse_cache_budget: Optional[int] = None,
+        reuse_disk_budget: Optional[int] = None,
     ):
         self.db = db
         self.mode = MODES[mode]
@@ -180,9 +189,34 @@ class GraftEngine:
             "retained_high_water_bytes",
             "state_bytes",
             "mem_high_water_bytes",
+            # reuse plane (§12) — present (zero) from the start so stats
+            # dicts stay shape-stable whether or not the cache is enabled
+            "cache_hits",
+            "cache_spills",
+            "cache_evictions",
+            "rehydrate_bytes",
+            "cache_bytes",
+            "cache_high_water_bytes",
+            "cache_disk_bytes",
+            "cache_disk_high_water_bytes",
         ):
             self.counters[k] = 0.0
         self.lifecycle = StateLifecycle(retention, memory_budget, self.counters)
+        # Reuse plane (DESIGN.md §12): evicted retired states spill into a
+        # tiered artifact cache instead of being destroyed. Only meaningful
+        # under epoch retention — refcount release never evicts.
+        self.reuse: Optional[ReusePlane] = None
+        if reuse_cache_budget is not None:
+            if retention != "epoch":
+                raise ValueError("reuse_cache_budget requires retention='epoch'")
+            self.reuse = ReusePlane(
+                self.cost_model,
+                reuse_cache_budget,
+                disk_budget=reuse_disk_budget,
+                counters=self.counters,
+            )
+        elif reuse_disk_budget is not None:
+            raise ValueError("reuse_disk_budget requires reuse_cache_budget")
         self.demand_cache: Dict = {}
         self._domains: Dict[str, int] = {}
         self._next_state_id = 0
@@ -254,6 +288,13 @@ class GraftEngine:
         agg_sig = aggregate_signature(agg)
         if agg_sig is not None and self.mode.agg_share != "none":
             existing = self.agg_index.get(agg_sig)
+            if existing is None and self.reuse is not None and self.mode.agg_share == "full":
+                # reuse plane (§12): an evicted-but-cached aggregate identity
+                # rehydrates and the plan collapses onto it exactly as onto a
+                # never-evicted retained identity
+                existing = self.reuse.try_rehydrate_agg(
+                    self, handle, query.plan, agg, agg_sig
+                )
             if existing is not None and self._agg_attachable(existing):
                 existing.attach(handle.qid)
                 self.lifecycle.revive(existing)
@@ -462,6 +503,11 @@ class GraftEngine:
             )
         self.counters["evictions"] += 1
         self.counters["evicted_bytes"] += state.nbytes()
+        if self.reuse is not None:
+            # spill instead of destroy (§12): serialize the victim into the
+            # artifact cache before tombstoning. The live object still dies
+            # — §10's no-lens-observes-evicted invariant is untouched.
+            self.reuse.spill(state)
         self.lifecycle.drop(state)
         state.evicted = True
         self._remove_from_indexes(state)
@@ -493,6 +539,7 @@ class GraftEngine:
         out["live_agg_states"] = len(self.agg_index)
         out["retained_states"] = len(self.lifecycle.retired)
         out["retention"] = self.retention
+        out["cached_artifacts"] = len(self.reuse.store) if self.reuse is not None else 0
         return out
 
 

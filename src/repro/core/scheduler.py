@@ -41,6 +41,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 from .engine import GraftEngine, QueryHandle
 from .grafting import candidate_states, graft_potential
 from .plans import Query
+from .reuse import reuse_potential
 from .runtime import Member, Pipeline, ScanNode
 
 # ---------------------------------------------------------------------------
@@ -210,20 +211,26 @@ class AdmissionController:
     """Per-arrival admission decision for the open-loop queue.
 
     ``decide(engine, query) -> (verdict, reason)`` where verdict is
-    ``'admit'`` or ``'defer'`` and reason labels the admitted path:
-    ``'graft'`` (rides existing shared state) or ``'fresh'`` (ordinary
-    plan). The adaptive policy admits freely below ``max_inflight`` active
-    queries; past it, only arrivals whose ``graft_potential`` — the
-    demand-weighted fraction of their isolated plan that existing shared
-    state would absorb — reaches ``share_threshold`` are admitted (their
-    marginal work is small and their lens pins state the evictor would
-    otherwise reclaim). Everything else queues until load drops; the
+    ``'admit'`` or ``'defer'`` and reason labels the admitted path — the
+    arrival's three-way cost decision (§12): ``'graft'`` (rides live
+    shared state), ``'cache'`` (a spilled artifact rehydrates and serves
+    it), or ``'fresh'`` (isolated recompute through an ordinary plan). The
+    adaptive policy admits freely below ``max_inflight`` active queries;
+    past it, only arrivals whose sharing potential — the demand-weighted
+    fraction of their isolated plan that existing shared state
+    (``graft_potential``) or cost-winning cached artifacts
+    (``reuse_potential``) would absorb — reaches ``share_threshold`` are
+    admitted (their marginal work is small, and their lens pins state the
+    evictor would otherwise reclaim / consumes an artifact before the
+    cache ages it out). Everything else queues until load drops; the
     Runner pins a deferred arrival's candidate states
     (``candidate_states``) so the evictor cannot reclaim coverage a
     queued-but-admissible lens is waiting to observe.
 
-    Decisions depend only on engine state, so the whole pool stays a
-    deterministic simulation under any ``PoolClock`` schedule.
+    Decisions depend only on engine state (live indexes + the artifact
+    cache, both of which change exactly at submissions/completions), so
+    the whole pool stays a deterministic simulation under any
+    ``PoolClock`` schedule and the Runner's drain memo stays valid.
     """
 
     def __init__(self, max_inflight: int = 8, share_threshold: float = 0.5):
@@ -237,12 +244,19 @@ class AdmissionController:
         self.share_threshold = share_threshold
 
     def decide(self, engine: GraftEngine, query: Query) -> Tuple[str, str]:
-        potential = graft_potential(engine, query)
-        reason = "graft" if potential > 0.0 else "fresh"
+        live = graft_potential(engine, query)
+        cached = reuse_potential(engine, query)
+        potential = max(live, cached)
+        if potential <= 0.0:
+            reason = "fresh"
+        elif cached > live:
+            reason = "cache"
+        else:
+            reason = "graft"  # live state dominates: no rehydration cost
         if len(engine.active_handles) < self.max_inflight:
             return ("admit", reason)
         if potential >= self.share_threshold:
-            return ("admit", "graft")
+            return ("admit", reason)
         return ("defer", "overload")
 
 

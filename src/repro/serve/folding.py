@@ -91,6 +91,7 @@ class FoldingScheduler:
         min_share: int = 16,
         retain_prefixes: bool = False,
         memory_budget_tokens: Optional[int] = None,
+        reuse_cache_tokens: Optional[int] = None,
     ):
         self.ex = executor
         self.fold = fold
@@ -110,7 +111,25 @@ class FoldingScheduler:
             "revived_states": 0,
             "retained_tokens": 0,
             "retained_tokens_high_water": 0,
+            # reuse plane (§12) — zero whether or not the cache is on
+            "cache_spills": 0,
+            "cache_hits": 0,
+            "cache_evictions": 0,
+            "rehydrate_tokens": 0,
         }
+        # Reuse plane (DESIGN.md §12): evicted KV prefixes spill into the
+        # same tiered ArtifactStore the relational engine uses (8 bytes per
+        # cached token models the KV page handle) and rehydrate when a
+        # later prompt matches.
+        self.reuse = None
+        if reuse_cache_tokens is not None:
+            if not retain_prefixes:
+                raise ValueError("reuse_cache_tokens requires retain_prefixes=True")
+            from ..core.reuse import ArtifactStore
+
+            self.reuse = ArtifactStore(
+                budget=8 * reuse_cache_tokens, counters=self.lifecycle_metrics
+            )
         self._next_sid = 0  # scheduler-scoped state ids (no cross-instance leaks)
         # Admission hook for the Session facade (api/serving.py): called as
         # on_admit(req, attachment) right after each request is admitted.
@@ -140,6 +159,9 @@ class FoldingScheduler:
                 "residual": 0,
                 "suffix": len(prompt),
                 "created": True,
+                # a spilled prefix artifact would rehydrate first (§12) —
+                # read-only peek, surfaced through explain_fold
+                "served_from_cache": self._cached_match(prompt) is not None,
             }
         represented = min(best.covered, best_m)
         return {
@@ -149,7 +171,23 @@ class FoldingScheduler:
             "residual": best_m - represented,  # gate: running producer delivers
             "suffix": len(prompt) - best_m,
             "created": False,
+            "served_from_cache": False,
         }
+
+    def _cached_match(self, prompt: Tuple[int, ...]):
+        """Best spilled prefix artifact for ``prompt`` (longest common
+        prefix >= min_share), or None. Deterministic: spill order breaks
+        ties. Read-only — ``_admit`` takes the winner."""
+        if self.reuse is None or not self.fold:
+            return None
+        best, best_m = None, 0
+        for art in self.reuse.iter_kind("kv_prefix"):
+            m = _match_len(tuple(art.meta["tokens"]), prompt)
+            if m > best_m:
+                best, best_m = art, m
+        if best is None or best_m < self.min_share:
+            return None
+        return best
 
     def admit(self, req: Request) -> Dict:
         """Partition the request's prompt into represented / residual /
@@ -161,6 +199,19 @@ class FoldingScheduler:
 
     def _admit(self, req: Request) -> Dict:
         att = self.preview(req.prompt)
+        if att["created"] and att.get("served_from_cache"):
+            # reuse plane (§12): rehydrate the spilled prefix before
+            # creating fresh state — the restored coverage serves this
+            # request's matched prefix as represented tokens
+            art = self._cached_match(req.prompt)
+            taken = self.reuse.take(art.fingerprint)
+            st = self._new_state(tuple(taken.meta["tokens"]))
+            st.covered = int(taken.meta["covered"])
+            self.states.append(st)
+            lm = self.lifecycle_metrics
+            lm["cache_hits"] += 1
+            lm["rehydrate_tokens"] += len(taken.meta["tokens"])
+            att = self.preview(req.prompt)  # re-partition against it
         if att["created"]:
             st = self._new_state(req.prompt)
             st.refs.add(req.rid)
@@ -218,6 +269,21 @@ class FoldingScheduler:
                 total -= len(s.tokens)
                 self.lifecycle_metrics["evicted_states"] += 1
                 self.lifecycle_metrics["evicted_tokens"] += len(s.tokens)
+                if self.reuse is not None and s.covered > 0:
+                    # spill instead of destroy (§12): the covered KV pages
+                    # become a cached artifact a later prompt can rehydrate
+                    from ..core.reuse import StateArtifact, prefix_fingerprint
+
+                    self.reuse.put(
+                        StateArtifact(
+                            prefix_fingerprint(s.tokens),
+                            "kv_prefix",
+                            None,
+                            8 * len(s.tokens),
+                            {"tokens": tuple(s.tokens), "covered": s.covered},
+                            arrays={},
+                        )
+                    )
         if evicted:
             self.states = [s for s in self.states if s.sid not in evicted]
         lm = self.lifecycle_metrics

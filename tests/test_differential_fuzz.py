@@ -91,7 +91,7 @@ def test_differential_fuzzer_parity(db):
     """>= 200 seeded workload parity instances: graft + eviction + admission
     under workers 1 and 4, and isolated mode, all vs the reference executor."""
     checks = 0
-    evictions = queued = 0
+    evictions = queued = spills = hits = 0
     for seed in FUZZ_SEEDS:
         rng = np.random.default_rng(10_000 + seed)
         qs = _fuzz_workload(db, rng)
@@ -99,6 +99,12 @@ def test_differential_fuzzer_parity(db):
         runs = (
             ("graft-w1", dict(EVICT, workers=1, partitions=1)),
             ("graft-w4", dict(EVICT, workers=4, partitions=4)),
+            # the reuse plane under stress (§12): a cache small enough that
+            # the artifact tier itself evicts mid-run, so parity covers
+            # spill -> age-out -> recompute alongside spill -> rehydrate
+            ("graft-w1-cache", dict(EVICT, workers=1, partitions=1,
+                                    memory_budget=100_000,
+                                    reuse_cache_budget=400_000)),
             ("isolated", dict(mode="isolated", morsel_size=4096, workers=1, partitions=1)),
         )
         for label, cfg in runs:
@@ -109,11 +115,18 @@ def test_differential_fuzzer_parity(db):
             st_ = session.stats()
             evictions += st_["evictions"]
             queued += st_["queued_admissions"]
+            spills += st_.get("cache_spills", 0)
+            hits += st_.get("cache_hits", 0)
+            if "cache_high_water_bytes" in st_:
+                assert st_["cache_high_water_bytes"] <= 400_000
             assert st_["queued_pending"] == 0  # run() drained the admit queue
+            session.close()
     assert checks >= 200, f"only {checks} parity instances — raise FUZZ_SEEDS"
     # the sweep must actually exercise the overload machinery, not idle it
     assert evictions > 0, "no evictions across the fuzz sweep — budget too loose"
     assert queued > 0, "no queued admissions across the fuzz sweep"
+    assert spills > 0, "the cache leg never spilled — budget too loose"
+    assert hits > 0, "the cache leg never rehydrated an artifact"
 
 
 # ---------------------------------------------------------------------------

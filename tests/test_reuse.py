@@ -1,0 +1,447 @@
+"""Reuse plane (DESIGN.md §12): artifact store tiers and budgets, spill ->
+rehydrate -> attach parity against a never-evicted oracle, fingerprint
+near-miss negatives, the three-way cost decision, EXPLAIN ``served_from_cache``
+accounting, Session.close semantics, and the serving-plane prefix cache.
+
+Parity runs under the default pool geometry, so the CI matrix leg
+(GRAFTDB_TEST_WORKERS=4) exercises every scenario partition-parallel."""
+
+import numpy as np
+import pytest
+
+import graftdb
+from graftdb import EngineConfig, ServingConfig
+from repro.core.reuse import (
+    ArtifactStore,
+    StateArtifact,
+    aggregate_fingerprint,
+    hash_state_fingerprint,
+    prefix_fingerprint,
+    rehydrate_wins,
+    reuse_scores,
+)
+from repro.relational import queries, refexec
+from repro.relational.table import days
+from repro.serve.folding import Request
+
+ALL_MODES = ["isolated", "scan_sharing", "qpipe_osp", "residual", "graft"]
+
+# epoch retention with a zero budget: every retirement immediately evicts,
+# so with a cache every retirement immediately spills
+EVICT_ALL = dict(retention="epoch", memory_budget=0)
+CACHE = dict(EVICT_ALL, reuse_cache_budget=64_000_000)
+
+
+def _q3(db, date, seg=1.0, arrival=0.0):
+    return queries.make_query(db, "q3", {"segment": seg, "date": float(days(date))}, arrival)
+
+
+def _art(fp, nbytes, kind="hash_build", sig=None, meta=None):
+    return StateArtifact(
+        fp, kind, sig, nbytes, meta or {}, {"x": np.zeros(max(1, nbytes // 8))}
+    )
+
+
+def _run_sequence(db, mode, config_extra, arrivals):
+    """Run (template, params) repeats serially-by-arrival on one session;
+    returns (results in submit order, session)."""
+    session = graftdb.connect(db, EngineConfig(mode=mode, **config_extra))
+    futs = []
+    for i, (t, p) in enumerate(arrivals):
+        futs.append(session.submit(queries.make_query(db, t, p, arrival=float(i))))
+    session.run()
+    return [f.result() for f in futs], session
+
+
+def _assert_same_results(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert set(g) == set(w)
+        for k in g:
+            np.testing.assert_allclose(
+                np.asarray(g[k], dtype=np.float64),
+                np.asarray(w[k], dtype=np.float64),
+                rtol=1e-9,
+            )
+
+
+# ---------------------------------------------------------------------------
+# ArtifactStore: tiers, budgets, eviction order
+# ---------------------------------------------------------------------------
+
+
+def test_store_budget_evicts_oldest_first():
+    c = {}
+    store = ArtifactStore(budget=1000, counters=c)
+    for i in range(3):
+        assert store.put(_art(("hash_build", ("k", i), ()), 400))
+    # 3x400 > 1000: the oldest spill is gone, the newest two remain
+    assert len(store) == 2
+    assert store.get(("hash_build", ("k", 0), ())) is None
+    assert store.get(("hash_build", ("k", 2), ())) is not None
+    assert c["cache_evictions"] == 1 and c["cache_spills"] == 3
+    assert store.mem_bytes == 800 <= store.budget
+    assert c["cache_high_water_bytes"] <= store.budget
+
+
+def test_store_rejects_oversized_artifact():
+    c = {}
+    store = ArtifactStore(budget=100, counters=c)
+    assert not store.put(_art(("hash_build", ("big",), ()), 4096))
+    assert len(store) == 0 and store.mem_bytes == 0
+
+
+def test_store_disk_tier_demotes_and_reloads():
+    c = {}
+    store = ArtifactStore(budget=500, disk_budget=10_000, counters=c)
+    a0 = _art(("hash_build", ("d", 0), ()), 400)
+    payload = a0.arrays["x"].copy()
+    store.put(a0)
+    store.put(_art(("hash_build", ("d", 1), ()), 400))  # evicts a0 -> disk
+    assert store.disk_bytes == 400 and store.mem_bytes == 400
+    back = store.get(("hash_build", ("d", 0), ()))
+    assert back is not None and back.arrays is not None
+    np.testing.assert_array_equal(back.arrays["x"], payload)
+    # oversized-for-memory artifacts land straight on disk
+    assert store.put(_art(("hash_build", ("d", 2), ()), 900))
+    assert store.get(("hash_build", ("d", 2), ())) is not None
+    assert c["cache_disk_high_water_bytes"] <= 10_000
+
+
+def test_store_take_consumes_and_flush_resets():
+    store = ArtifactStore(budget=1000, disk_budget=1000)
+    fp = ("hash_build", ("t",), ())
+    store.put(_art(fp, 100))
+    assert store.take(fp) is not None
+    assert store.get(fp) is None and len(store) == 0
+    store.put(_art(fp, 100))
+    store.flush()
+    assert len(store) == 0 and store.mem_bytes == 0 and store.disk_bytes == 0
+    store.close()
+    assert not store.put(_art(fp, 100))  # closed: refuses spills
+
+
+def test_by_sig_groups_fingerprints_and_orders_by_spill():
+    store = ArtifactStore(budget=10_000)
+    sig_key = ("q3-build",)
+    store.put(_art(("hash_build", sig_key, ("e1",)), 100))
+    store.put(_art(("hash_build", sig_key, ("e2",)), 100))
+    store.put(_art(("hash_build", ("other",), ()), 100))
+    arts = store.by_sig("hash_build", sig_key)
+    assert [a.fingerprint[2] for a in arts] == [("e1",), ("e2",)]
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints + cost scoring
+# ---------------------------------------------------------------------------
+
+
+def _plan_fingerprints(q):
+    from repro.core.descriptors import hash_build_signature
+    from repro.core.grafting import all_boundaries
+    from repro.core.plans import collect_subtree_pred
+    from repro.core.predicates import Conjunction
+
+    out = []
+    for j in all_boundaries(q.plan):
+        sig = hash_build_signature(j)
+        conj = Conjunction.from_pred(collect_subtree_pred(j.build))
+        out.append(hash_state_fingerprint(sig, [(conj, True)]))
+    return out
+
+
+def test_fingerprint_distinguishes_predicate_intervals(db):
+    """Near-miss negatives: same structural signature, different delivered
+    intervals -> distinct fingerprints (reuse then goes through coverage,
+    never identity). Identical intervals -> identical fingerprint
+    (semantic, not pointer-based)."""
+    fa = _plan_fingerprints(_q3(db, "1995-03-15"))
+    fb = _plan_fingerprints(_q3(db, "1995-06-15"))
+    fc = _plan_fingerprints(_q3(db, "1995-03-15"))
+    assert fa != fb  # the date-bearing build's interval differs
+    assert fa == fc  # fresh plan objects, same semantics
+    # the structural prefix (kind, sig.key) agrees even where intervals
+    # differ — near misses share the by_sig bucket and are then culled by
+    # coverage, never served as identities
+    assert [f[:2] for f in fa] == [f[:2] for f in fb]
+
+
+def test_reuse_scores_three_way():
+    cm = {"scan": 1e-9, "filter": 1e-9, "insert": 1e-9, "rehydrate": 60e-9}
+    s = reuse_scores(cm, demand_rows=1000, covered_rows=800, artifact_entries=10)
+    assert s["recompute_s"] == pytest.approx(3e-6)
+    assert s["saved_s"] == pytest.approx(2.4e-6)
+    assert s["rehydrate_s"] == pytest.approx(600e-9)
+    assert rehydrate_wins(cm, 1000, 800, 10)
+    # zero coverage or rehydration dearer than the savings: recompute
+    assert not rehydrate_wins(cm, 1000, 0, 10)
+    assert not rehydrate_wins(cm, 1000, 10, 100_000)
+
+
+# ---------------------------------------------------------------------------
+# Spill -> rehydrate -> attach parity (oracle: never evicted)
+# ---------------------------------------------------------------------------
+
+REPEAT_SEQ = [
+    ("q3", {"segment": 1.0, "date": 750.0}),
+    ("q6", {"date": 400.0, "discount": 0.05, "quantity": 25.0}),
+    ("q3", {"segment": 1.0, "date": 750.0}),  # exact repeat: fingerprint hit
+    ("q3", {"segment": 1.0, "date": 800.0}),  # near miss: same keys, new date
+    ("q3", {"segment": 1.0, "date": 750.0}),
+]
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_spill_rehydrate_attach_parity(db, mode):
+    """A run whose every retirement spills to cache and whose repeats
+    rehydrate returns bit-equal results to the never-evicted oracle, in
+    every sharing mode (the cache is inert where the mode forbids
+    represented extents)."""
+    oracle, s0 = _run_sequence(db, mode, dict(retention="epoch"), REPEAT_SEQ)
+    cached, s1 = _run_sequence(db, mode, CACHE, REPEAT_SEQ)
+    _assert_same_results(cached, oracle)
+    if mode == "graft":
+        assert s1.counters["cache_spills"] > 0
+        assert s1.counters["cache_hits"] > 0
+        assert s1.counters["rehydrate_bytes"] > 0
+    s0.close()
+    s1.close()
+
+
+def test_rehydrated_state_matches_reference_executor(db):
+    """End-to-end: a cache-served repeat equals the reference executor."""
+    _, session = _run_sequence(db, "graft", CACHE, REPEAT_SEQ[:3])
+    assert session.counters["cache_hits"] > 0
+    fut = session.submit(
+        queries.make_query(db, "q3", {"segment": 1.0, "date": 750.0}, arrival=99.0)
+    )
+    got = fut.result()
+    want = refexec.execute(db, fut.query.plan)
+    _assert_same_results([got], [want])
+    session.close()
+
+
+def test_near_miss_is_not_served_as_identity(db):
+    """A q3 with a different date must NOT be answered by the cached
+    aggregate identity of the original (fingerprints differ); its results
+    must match the oracle."""
+    seq = [
+        ("q3", {"segment": 1.0, "date": 750.0}),
+        ("q3", {"segment": 1.0, "date": 800.0}),
+    ]
+    oracle, s0 = _run_sequence(db, "graft", dict(retention="epoch"), seq)
+    cached, s1 = _run_sequence(db, "graft", CACHE, seq)
+    _assert_same_results(cached, oracle)
+    s0.close()
+    s1.close()
+
+
+def test_agg_identity_cache_hit_skips_recompute(db):
+    """An exact repeat whose aggregate identity is cached is served whole
+    from the artifact (cache_hits on ITS handle) and still bit-matches."""
+    session = graftdb.connect(db, EngineConfig(mode="graft", **CACHE))
+    f0 = session.submit(_q3(db, "1995-03-15", arrival=0.0))
+    session.run()
+    f1 = session.submit(_q3(db, "1995-03-15", arrival=1.0))
+    session.run()
+    _assert_same_results([f1.result()], [f0.result()])
+    st = f1.stats()
+    assert st["served_from_cache"] and st["cache_hits"] >= 1
+    assert not f0.stats()["served_from_cache"]
+    session.close()
+
+
+def test_disk_tier_round_trip_through_engine(db):
+    """A tiny memory tier + disk tier: artifacts demote to .npz and still
+    rehydrate correctly."""
+    cfg = dict(EVICT_ALL, reuse_cache_budget=20_000, reuse_disk_budget=64_000_000)
+    oracle, s0 = _run_sequence(db, "graft", dict(retention="epoch"), REPEAT_SEQ)
+    cached, s1 = _run_sequence(db, "graft", cfg, REPEAT_SEQ)
+    _assert_same_results(cached, oracle)
+    assert s1.counters["cache_high_water_bytes"] <= 20_000
+    s0.close()
+    s1.close()
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN GRAFT: served_from_cache + exact accounting
+# ---------------------------------------------------------------------------
+
+
+def _accounting_exact(ex):
+    for b in ex._all():
+        assert b.represented_rows + b.residual_rows + b.unattached_rows == b.demand_rows
+        if b.part_demand_rows:
+            assert sum(b.part_demand_rows) == b.demand_rows
+            assert sum(b.part_represented_rows) == b.represented_rows
+            assert sum(b.part_residual_rows) == b.residual_rows
+            assert sum(b.part_unattached_rows) == b.unattached_rows
+
+
+@pytest.mark.parametrize("partitions", [1, 4])
+def test_explain_served_from_cache_accounting(db, partitions):
+    session = graftdb.connect(
+        db, EngineConfig(mode="graft", partitions=partitions, **CACHE)
+    )
+    session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    ex = session.explain_graft(_q3(db, "1995-03-15"))
+    cached = [b for b in ex._all() if b.served_from_cache]
+    assert cached, "repeat against a spilled state must surface served_from_cache"
+    _accounting_exact(ex)
+    assert any(b["served_from_cache"] for b in ex.to_dict()["boundaries"])
+    assert "(cache)" in ex.render()
+    # near miss: different date -> the date-bearing boundary may partially
+    # cover, but accounting stays exact
+    _accounting_exact(session.explain_graft(_q3(db, "1995-06-15")))
+    # EXPLAIN is read-only: the artifact was not consumed
+    assert session.stats()["cached_artifacts"] > 0
+    session.close()
+
+
+def test_explain_without_cache_unchanged(db):
+    session = graftdb.connect(db, EngineConfig(mode="graft", retention="epoch"))
+    session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    ex = session.explain_graft(_q3(db, "1995-03-15"))
+    assert not any(b.served_from_cache for b in ex._all())
+    _accounting_exact(ex)
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Admission: the three-way decision
+# ---------------------------------------------------------------------------
+
+
+def test_admission_reports_cache_reason(db):
+    """Past the inflight limit, an arrival whose only overlap is a cached
+    artifact is admitted on reuse potential (reason 'cache')."""
+    from repro.core.scheduler import AdmissionController
+    from repro.core.reuse import reuse_potential
+
+    session = graftdb.connect(db, EngineConfig(mode="graft", **CACHE))
+    session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    q = _q3(db, "1995-03-15", arrival=5.0)
+    assert reuse_potential(session.engine, q) > 0.0
+    ac = AdmissionController(max_inflight=1, share_threshold=0.4)
+    verdict, reason = ac.decide(session.engine, q)
+    assert verdict == "admit" and reason == "cache"
+    # a no-overlap arrival is labeled fresh
+    fresh = queries.make_query(db, "q6", {"date": 100.0, "discount": 0.02, "quantity": 24.0})
+    assert ac.decide(session.engine, fresh) == ("admit", "fresh")
+    session.close()
+
+
+def test_score_arrival_three_way(db):
+    from repro.core.costmodel import score_arrival
+
+    session = graftdb.connect(db, EngineConfig(mode="graft", **CACHE))
+    session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    s = score_arrival(session.engine, _q3(db, "1995-03-15"))
+    assert set(s) >= {"recompute_s", "graft_s", "cache_s", "choice"}
+    assert s["choice"] == "cache"
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Config validation + Session lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"reuse_cache_budget": -1},
+        {"reuse_cache_budget": 1 << 20},  # requires retention='epoch'
+        {"retention": "epoch", "reuse_disk_budget": 1 << 20},  # needs cache
+    ],
+)
+def test_config_rejects_bad_reuse_values(kw):
+    with pytest.raises((ValueError, TypeError)):
+        EngineConfig(**kw)
+
+
+def test_serving_config_rejects_cache_without_retention():
+    with pytest.raises(ValueError):
+        ServingConfig(reuse_cache_tokens=1024)
+
+
+def test_session_close_releases_everything(db):
+    session = graftdb.connect(db, EngineConfig(mode="graft", **CACHE))
+    session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    assert session.stats()["cached_artifacts"] > 0
+    session.close()
+    assert session.stats()["cached_artifacts"] == 0
+    assert session.stats()["retained_bytes"] == 0
+    session.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        session.submit(_q3(db, "1995-06-15"))
+
+
+def test_session_context_manager(db):
+    with graftdb.connect(db, EngineConfig(mode="graft", **CACHE)) as session:
+        session.submit(_q3(db, "1995-03-15"))
+        session.run()
+    with pytest.raises(RuntimeError):
+        session.explain_graft(_q3(db, "1995-03-15"))
+
+
+def test_stats_surface_cache_counters(db):
+    session = graftdb.connect(db, EngineConfig(mode="graft", **CACHE))
+    fut = session.submit(_q3(db, "1995-03-15"))
+    session.run()
+    st = session.stats()
+    assert st["reuse_cache_budget"] == CACHE["reuse_cache_budget"]
+    for k in ("cache_hits", "cache_spills", "cache_evictions", "rehydrate_bytes"):
+        assert k in fut.stats()["counters"]
+    assert st["cache_high_water_bytes"] <= CACHE["reuse_cache_budget"]
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Serving plane: KV-prefix artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_serving_prefix_spill_and_rehydrate():
+    """With a zero token budget every retired prefix spills; a repeat
+    prompt rehydrates it and folds as if the state never left."""
+    prompt = tuple(range(100))
+    session = graftdb.connect_serving(
+        fold=True,
+        retain_prefixes=True,
+        memory_budget_tokens=0,
+        reuse_cache_tokens=4096,
+    )
+    session.submit(Request(0, prompt, 4, arrival=0.0))
+    session.run()
+    ex = session.explain_fold(Request(1, prompt, 4, arrival=1.0))
+    assert ex["served_from_cache"]
+    session.submit(Request(1, prompt, 4, arrival=1.0))
+    session.run()
+    lm = session.stats()["lifecycle"]
+    assert lm["cache_spills"] >= 1 and lm["cache_hits"] == 1
+    assert lm["rehydrate_tokens"] == len(prompt)
+    # the fold itself: the repeat's prompt was represented by the
+    # rehydrated prefix
+    assert session._explains[1]["represented_tokens"] == len(prompt)
+
+
+def test_serving_prefix_cache_respects_token_budget():
+    session = graftdb.connect_serving(
+        fold=True,
+        retain_prefixes=True,
+        memory_budget_tokens=0,
+        reuse_cache_tokens=64,  # one ~50-token prefix fits, two do not
+    )
+    for i in range(3):
+        session.submit(Request(i, tuple(range(i * 1000, i * 1000 + 50)), 2, arrival=float(i)))
+    session.run()
+    lm = session.stats()["lifecycle"]
+    assert lm["cache_evictions"] >= 1
+    store = session.scheduler.reuse
+    assert store.mem_bytes <= 8 * 64

@@ -277,6 +277,10 @@ def test_stats_expose_data_plane_counters(db):
         "state_revivals",
         "queued_admissions",
         "forced_admissions",
+        "cache_hits",
+        "cache_spills",
+        "cache_evictions",
+        "rehydrate_bytes",
     }
     assert counters["fused_filter_rows"] > 0  # source predicates ran fused
     assert counters["fused_sink_rows"] > 0  # member-major build tagging ran (§11)
