@@ -151,15 +151,26 @@ def run_micro(members: List[int], n_morsels: int, rounds: int) -> Dict[str, List
     rounds. Only the pair under test is alive, keeping the working set
     cache-resident as in the real engine."""
     row_ids = np.arange(MORSEL, dtype=np.int64)
-    out: Dict[str, List[Dict]] = {"fused": [], "per_member": []}
-    for label, mm in (("fused", True), ("per_member", False)):
+    out: Dict[str, List[Dict]] = {"fused": [], "per_member": [], "chain": []}
+    # "chain" is the §13 device path: same member-major pipeline, but the
+    # whole probe chain runs as one Pallas launch per morsel
+    for label, mm, dev in (
+        ("fused", True, False),
+        ("per_member", False, False),
+        ("chain", True, True),
+    ):
         for m in members:
             pair = []
             for n_mem in (members[0], m):
                 engine, pipeline, cols = _build_micro(n_mem, mm, MORSEL, seed=7)
-                for _ in range(2):  # warm caches / wave plans
+                if dev:
+                    from repro.api.backends import PallasBackend
+
+                    engine.backend = PallasBackend()
+                for _ in range(2):  # warm caches / wave plans / chain jit
                     pipeline.process(engine, cols, row_ids)
                 pair.append((engine, pipeline, cols))
+            launch0 = pair[1][0].counters["kernel_chain_launches"]
             ratios, costs = [], []
             for _ in range(rounds * n_morsels):
                 t = [0.0, 0.0]
@@ -176,9 +187,16 @@ def run_micro(members: List[int], n_morsels: int, rounds: int) -> Dict[str, List
                 "per_morsel_s": round(float(np.median(costs)), 7),
                 "ratio_vs_1": round(float(np.median(ratios)), 3),
             }
+            if dev:
+                launches = pair[1][0].counters["kernel_chain_launches"] - launch0
+                row["launches_per_morsel"] = round(
+                    float(launches) / (rounds * n_morsels), 3
+                )
             out[label].append(row)
             print(f"{label:11s} members={m:2d} per-morsel={row['per_morsel_s']*1e3:8.3f} ms "
-                  f"ratio={row['ratio_vs_1']:.3f}", flush=True)
+                  f"ratio={row['ratio_vs_1']:.3f}"
+                  + (f" launches/morsel={row['launches_per_morsel']}" if dev else ""),
+                  flush=True)
     return out
 
 
@@ -220,7 +238,7 @@ def run_session(db, members: List[int]) -> List[Dict]:
     return rows
 
 
-def run(smoke: bool = False) -> Dict:
+def run(smoke: bool = False, out_path: Path | None = None) -> Dict:
     members = SMOKE_MEMBERS if smoke else MEMBERS
     n_morsels = 2 if smoke else 4
     rounds = 3 if smoke else 10
@@ -241,6 +259,8 @@ def run(smoke: bool = False) -> Dict:
     session_rows = run_session(db, members)
     fused_last = micro["fused"][-1]["ratio_vs_1"]
     pm_last = micro["per_member"][-1]["ratio_vs_1"]
+    chain_last = micro["chain"][-1]["ratio_vs_1"]
+    chain_lpm = max(r["launches_per_morsel"] for r in micro["chain"])
     out = {
         "bench": "graftdb_member_sweep",
         "version": 1,
@@ -256,19 +276,37 @@ def run(smoke: bool = False) -> Dict:
             "max_members": members[-1],
             "fused_ratio": fused_last,
             "per_member_ratio": pm_last,
+            # §13 device chain: stays flat in members AND every morsel's
+            # stage chain is served by exactly one kernel launch
+            "chain_ratio": chain_last,
+            "chain_launches_per_morsel": chain_lpm,
             "ratio_target": RATIO_TARGET,
-            "pass": bool(fused_last <= RATIO_TARGET),
+            "pass": bool(fused_last <= RATIO_TARGET and chain_lpm == 1.0),
         },
     }
-    (REPO_ROOT / "BENCH_members.json").write_text(json.dumps(out, indent=1) + "\n")
+    if not smoke:
+        # Also record the CI smoke grid on this machine: the committed
+        # artifact then carries the reference numbers that
+        # benchmarks.regression_gate holds CI's fresh smoke runs against.
+        print("-- smoke_ref grid --")
+        out["smoke_ref"] = {
+            "members": SMOKE_MEMBERS,
+            "per_morsel": run_micro(SMOKE_MEMBERS, 2, 3),
+            "session": run_session(get_db(0.005), SMOKE_MEMBERS),
+        }
+    target = out_path or (REPO_ROOT / "BENCH_members.json")
+    target.write_text(json.dumps(out, indent=1) + "\n")
     print(f"# fused {members[-1]}-member per-morsel ratio: {fused_last}x "
-          f"(target <= {RATIO_TARGET}x; per-member oracle: {pm_last}x)")
-    print("wrote BENCH_members.json")
+          f"(target <= {RATIO_TARGET}x; per-member oracle: {pm_last}x; "
+          f"chain: {chain_last}x at {chain_lpm} launches/morsel)")
+    print(f"wrote {target}")
     return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="output path (default: repo-root BENCH_members.json)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, out_path=args.out)

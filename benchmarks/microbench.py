@@ -286,6 +286,51 @@ def bench_filter(size: int, rng) -> Dict:
     return _row("filter", size, size * n_members, before, after)
 
 
+def bench_fused_chain(size: int, rng) -> Dict:
+    """64 folded members (the full slot space) x 2-stage shared probe
+    chain, morsel by morsel: the per-member stage loop (the pre-§13
+    default whenever any member sat on slot >= 32, where the uint32 lens
+    kernel declined) vs one fused Pallas chain launch per morsel over
+    device-resident mirrors. Results stay bit-identical (DESIGN.md §13);
+    only the data plane changes. The legs alternate morsel-by-morsel and
+    the reported times are per-rep medians, as in member_sweep, so shared
+    -host CPU weather hits both sides alike."""
+    from repro.api.backends import PallasBackend
+
+    from .member_sweep import _build_micro
+
+    n_members = 64  # > 32 slots: forces the pre-§13 per-member fallback
+    morsel = min(size, 65536)  # EngineConfig.morsel_size default
+    n_morsels = max(1, size // morsel)
+    reps = 3
+
+    legs = []
+    for member_major, backend in ((False, None), (True, PallasBackend())):
+        engine, pipeline, cols = _build_micro(n_members, member_major, morsel, seed=7)
+        engine.backend = backend
+        row_ids = np.arange(morsel, dtype=np.int64)
+        for _ in range(2):  # warm plans / jit the chain
+            pipeline.process(engine, cols, row_ids)
+        legs.append((engine, pipeline, cols, row_ids))
+    times = np.zeros((reps, 2))
+    for rep in range(reps):
+        for _ in range(n_morsels):
+            for side, (engine, pipeline, cols, row_ids) in enumerate(legs):
+                t0 = time.perf_counter()
+                pipeline.process(engine, cols, row_ids)
+                times[rep, side] += time.perf_counter() - t0
+    before, after = np.median(times, axis=0)
+    eng_a = legs[1][0]
+    assert eng_a.counters["kernel_chain_launches"] >= reps * n_morsels
+    # both legs saw the same morsels the same number of times: member
+    # aggregates must agree bit-exactly
+    for m_b, m_a in zip(legs[0][1].members, legs[1][1].members):
+        r_b, r_a = m_b.sink.agg_state.result(), m_a.sink.agg_state.result()
+        for k in r_b:
+            np.testing.assert_array_equal(np.sort(r_b[k]), np.sort(r_a[k]))
+    return _row("fused_chain", size, n_morsels * morsel, float(before), float(after))
+
+
 def _row(op: str, size: int, rows: int, before: float, after: float) -> Dict:
     before = max(before, 1e-9)
     after = max(after, 1e-9)
@@ -306,6 +351,7 @@ BENCHES = {
     "probe": bench_probe,
     "group_update": bench_group_update,
     "filter": bench_filter,
+    "fused_chain": bench_fused_chain,
 }
 
 
@@ -342,6 +388,17 @@ def main(argv=None) -> Path:
         "sizes": sizes,
         "ops": results,
     }
+    if not args.smoke:
+        # Also record the CI smoke grid, measured on the same machine as
+        # the full-size numbers: benchmarks.regression_gate compares CI's
+        # fresh smoke runs against this block (machine-relative speedups).
+        print("-- smoke_ref grid --")
+        smoke: Dict[str, List[Dict]] = {}
+        for name, fn in BENCHES.items():
+            smoke[name] = [fn(size, np.random.default_rng(size)) for size in SMOKE_SIZES]
+            print(f"{name:<16} speedups "
+                  + " ".join(f"{r['speedup']:.2f}x" for r in smoke[name]))
+        payload["smoke_ref"] = {"sizes": SMOKE_SIZES, "ops": smoke}
     args.out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {args.out}")
     return args.out

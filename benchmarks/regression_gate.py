@@ -1,0 +1,174 @@
+"""Bench regression gate: fail CI when a fresh smoke run regresses.
+
+The committed ``BENCH_core.json`` / ``BENCH_members.json`` artifacts carry a
+``smoke_ref`` block — the same smoke grid CI runs, recorded on the machine
+that produced the full-size numbers. This gate compares a fresh smoke run
+against that reference and fails on a >25% per-op regression, so the smoke
+jobs actually guard the perf trajectory instead of only validating schema.
+
+All gated metrics are machine-relative (before/after speedups, per-morsel
+cost ratios, modeled virtual-clock speedups), never absolute rows/s — a
+slower CI runner shifts both sides of a ratio, so the comparison survives
+hardware drift; a data-plane regression shifts only one side.
+
+  PYTHONPATH=src python -m benchmarks.regression_gate core \
+      --fresh BENCH_core.smoke.json --ref BENCH_core.json
+  PYTHONPATH=src python -m benchmarks.regression_gate members \
+      --fresh BENCH_members.smoke.json --ref BENCH_members.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+TOLERANCE = 0.25
+
+
+def _load(path: Path) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _ref_block(ref: Dict, bench: str) -> Dict:
+    """The smoke-grid reference inside a committed artifact.
+
+    Full-size artifacts embed it under ``smoke_ref``; an artifact that is
+    itself a smoke run (local iteration) is its own reference."""
+    if ref.get("smoke"):
+        return ref
+    block = ref.get("smoke_ref")
+    if block is None:
+        raise SystemExit(
+            f"reference {bench} artifact has no smoke_ref block — regenerate it "
+            f"with the full benchmark run (python -m benchmarks.{bench_module(bench)})"
+        )
+    return block
+
+
+def bench_module(bench: str) -> str:
+    return {"core": "microbench", "members": "member_sweep"}[bench]
+
+
+def _geomean(vals: List[float]) -> float:
+    prod = 1.0
+    for v in vals:
+        prod *= max(v, 1e-9)
+    return prod ** (1.0 / len(vals))
+
+
+def gate_core(fresh: Dict, ref: Dict, tol: float) -> List[str]:
+    """Per-op speedup (geometric mean over the smoke grid, so one noisy
+    tiny-size sample cannot flip the verdict) must stay within ``tol`` of
+    the reference."""
+    failures = []
+    ref_ops = _ref_block(ref, "core")["ops"]
+    fresh_ops = fresh["ops"]
+    for op, ref_rows in ref_ops.items():
+        if op not in fresh_ops:
+            failures.append(f"core: op {op!r} missing from fresh run")
+            continue
+        ref_gm = _geomean([r["speedup"] for r in ref_rows])
+        fresh_gm = _geomean([r["speedup"] for r in fresh_ops[op]])
+        floor = (1.0 - tol) * ref_gm
+        ok = fresh_gm >= floor
+        print(
+            f"core  {op:<16} speedup geomean {fresh_gm:>6.2f}x "
+            f"(ref {ref_gm:.2f}x, floor {floor:.2f}x) "
+            f"sizes " + " ".join(f"{r['speedup']:.2f}x" for r in fresh_ops[op])
+            + f"  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"core: {op} speedup geomean {fresh_gm:.2f}x "
+                f"< floor {floor:.2f}x (ref {ref_gm:.2f}x)"
+            )
+    return failures
+
+
+def gate_members(fresh: Dict, ref: Dict, tol: float) -> List[str]:
+    """Per-morsel flatness ratios must not inflate past ``tol``; the device
+    chain must keep serving every morsel with exactly one launch; the
+    session sweep's modeled (virtual-clock) folding speedup — deterministic
+    given the seeded workload — must not shrink past ``tol``."""
+    failures = []
+    ref_block = _ref_block(ref, "members")
+    for path in ("fused", "chain"):
+        # gate the max-member flatness ratio — the acceptance-bearing
+        # number; intermediate points are small-denominator noisy
+        ref_row = ref_block["per_morsel"][path][-1]
+        fresh_row = fresh["per_morsel"][path][-1]
+        if ref_row["members"] == fresh_row["members"]:
+            m = fresh_row["members"]
+            ceil = (1.0 + tol) * ref_row["ratio_vs_1"]
+            ok = fresh_row["ratio_vs_1"] <= ceil
+            print(
+                f"members {path:<10} M={m:>2} ratio {fresh_row['ratio_vs_1']:>6.3f} "
+                f"(ref {ref_row['ratio_vs_1']:.3f}, ceil {ceil:.3f}) "
+                f"{'ok' if ok else 'REGRESSED'}"
+            )
+            if not ok:
+                failures.append(
+                    f"members: {path} M={m} per-morsel ratio {fresh_row['ratio_vs_1']} "
+                    f"> ceil {ceil:.3f} (ref {ref_row['ratio_vs_1']})"
+                )
+    for fresh_row in fresh["per_morsel"]["chain"]:
+        if fresh_row["launches_per_morsel"] != 1.0:
+            failures.append(
+                f"members: chain M={fresh_row['members']} launches_per_morsel "
+                f"{fresh_row['launches_per_morsel']} != 1.0 — stage chain no longer "
+                f"served by a single fused launch"
+            )
+    ref_sess = {r["members"]: r for r in ref_block.get("session", [])}
+    for fresh_row in fresh.get("session", []):
+        m = fresh_row["members"]
+        ref_row = ref_sess.get(m)
+        if ref_row is None:
+            continue
+        floor = (1.0 - tol) * ref_row["modeled_speedup"]
+        ok = fresh_row["modeled_speedup"] >= floor
+        print(
+            f"members session    M={m:>2} modeled x{fresh_row['modeled_speedup']:>6.3f} "
+            f"(ref x{ref_row['modeled_speedup']:.3f}, floor x{floor:.3f}) "
+            f"{'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"members: session M={m} modeled speedup {fresh_row['modeled_speedup']} "
+                f"< floor {floor:.3f} (ref {ref_row['modeled_speedup']})"
+            )
+    return failures
+
+
+GATES = {"core": gate_core, "members": gate_members}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", choices=sorted(GATES), help="which artifact family")
+    ap.add_argument("--fresh", type=Path, required=True, help="fresh smoke-run JSON")
+    ap.add_argument("--ref", type=Path, required=True, help="committed reference JSON")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional regression per op (default 0.25)")
+    args = ap.parse_args(argv)
+
+    fresh = _load(args.fresh)
+    ref = _load(args.ref)
+    if not fresh.get("smoke"):
+        print(f"warning: {args.fresh} is a full-size run, not a smoke run", file=sys.stderr)
+    failures = GATES[args.bench](fresh, ref, args.tolerance)
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s) beyond "
+              f"{args.tolerance:.0%} tolerance:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nOK: no per-op regression beyond {args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,23 +9,40 @@ build state (§4.3) and segmented aggregation into shared accumulators
   available; the correctness oracle path (``relational/refexec.py``
   semantics).
 * ``PallasBackend`` — the jax_pallas TPU kernels (``kernels/hash_probe.py``,
-  ``kernels/seg_aggregate.py``), run in interpret mode off-TPU. States that
-  the kernels cannot serve (multi-match keys, out-of-range keycodes,
-  over-long probe clusters) fall back to the reference path per-call,
-  mirroring the routing note in the kernel docstrings.
+  ``kernels/fused_chain.py``, ``kernels/seg_aggregate.py``), run in
+  interpret mode off-TPU. States that the kernels cannot serve (multi-match
+  keys, out-of-range keycodes, over-long probe clusters) fall back to the
+  reference path per-call, mirroring the routing note in the kernel
+  docstrings; per-reason fallback counters record why.
 
-Backends are deliberately stateless between sessions; the Pallas backend
-keeps only a per-state probe-table cache invalidated by entry count.
+The Pallas backend keeps a device-resident mirror of every served state's
+SoA (DESIGN.md §13): open-addressing keycode table, *entry-indexed* packed
+visibility/provenance words as (lo, hi) uint32 pairs, and on demand
+total-order-encoded retained columns and int32 key columns. Entry indexing
+makes the mirrors rebuild-invariant — growing or rehashing the probe table
+never touches them — and the state's mark log patches exactly the re-ORed
+entries, so steady-state maintenance is O(appended + marked), not
+O(entries). Mirror patches run through donated-buffer jitted scatters when
+the platform supports donation (CPU jax warns on donation, so it is gated).
 """
 
 from __future__ import annotations
 
+import functools
+import math
 import weakref
 from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
 from ..core.state import SharedHashBuildState, _bincount_segment_sum
+from ..core.visibility import join_words, split_words
+
+#: chain-level / probe-level decline reasons (DESIGN.md §13). ``grants``,
+#: ``predicate`` and ``slot_limit`` are chain-plan declines (the staged
+#: kernels may still serve the probes); ``keyrange`` and ``capacity`` are
+#: table-level declines that route the probe to the reference path.
+FALLBACK_REASONS = ("grants", "slot_limit", "keyrange", "capacity", "predicate")
 
 
 @runtime_checkable
@@ -33,9 +50,13 @@ class ExecutionBackend(Protocol):
     """Data-plane operations a Session's engine dispatches per morsel.
 
     Backends may additionally provide ``probe_visible(state, keycodes,
-    qid)`` returning visibility-filtered match pairs (or None to decline);
-    the runtime discovers it via getattr, so it is not part of the
-    required protocol surface."""
+    qid)`` / ``probe_visible_multi(state, keycodes)`` /
+    ``probe_chain(cplan, cols, bits, host_keys)`` returning
+    visibility-resolved results (or None to decline); the runtime discovers
+    them via getattr, so they are not part of the required protocol
+    surface. A backend that sets ``probe_accepts_counters = True`` receives
+    the engine's counter dict as a ``counters=`` kwarg on ``probe`` so
+    per-reason fallback counters surface in ``QueryFuture.stats()``."""
 
     name: str
 
@@ -58,8 +79,9 @@ class ReferenceBackend:
     core bincount reduction (the same code that runs with no backend)."""
 
     name = "reference"
+    probe_accepts_counters = True
 
-    def probe(self, state, keycodes):
+    def probe(self, state, keycodes, counters=None):
         return state.probe(keycodes)
 
     def segment_sum(self, gids, values, n_groups):
@@ -69,21 +91,51 @@ class ReferenceBackend:
         return {}
 
 
+@functools.lru_cache(maxsize=None)
+def _scatter_set(donate: bool):
+    """Jitted mirror patch ``buf.at[idx].set(vals)``; the mirror buffer is
+    donated where the platform supports it so steady-state patches update
+    device memory in place instead of copying the whole mirror."""
+    import jax
+
+    def f(buf, idx, vals):
+        return buf.at[idx].set(vals)
+
+    if donate:
+        return jax.jit(f, donate_argnums=(0,))
+    return jax.jit(f)
+
+
 class _ProbeTable:
-    """Mutable open-addressing table mirror of one state's keycodes."""
+    """Device-resident mirror of one state's SoA (DESIGN.md §13).
+
+    The open-addressing keycode table is slot-indexed; everything else —
+    visibility/provenance words, total-order column encodings, int32 key
+    columns — is *entry-indexed* (padded to ``ecap``), so table rebuilds
+    never invalidate it. Appends patch ``[rows:n]``; visibility marks patch
+    the state's mark-log entries; a mark-log compaction or a ``detach``
+    epoch bump forces one full regather."""
 
     __slots__ = (
         "n",
         "tkeys",
         "slot_entry",
         "jkeys",
+        "jentry",
         "jones",
-        "jvis",
-        "tvis",
-        "vis_stamp",
-        "vis_n",
-        "vis_valid",
         "bad",
+        "ecap",
+        "jvlo",
+        "jvhi",
+        "jelo",
+        "jehi",
+        "vis_rows",
+        "em_rows",
+        "vis_stamp",
+        "mark_sync",
+        "ords",
+        "keycols",
+        "badkeys",
     )
 
     def __init__(self):
@@ -91,31 +143,46 @@ class _ProbeTable:
         self.tkeys: Optional[np.ndarray] = None  # int32 slots (EMPTY sentinel)
         self.slot_entry: Optional[np.ndarray] = None  # slot -> entry index
         self.jkeys = None  # device copy of tkeys, refreshed on growth
+        self.jentry = None  # device int32 slot -> entry index
         self.jones = None  # constant all-visible lens words (pre-vis probes)
-        self.jvis = None  # device visibility words (fused-lens probes)
-        self.tvis: Optional[np.ndarray] = None  # host mirror of jvis
-        self.vis_stamp = None  # (rows_inserted, rows_marked) the mirror reflects
-        self.vis_n = 0  # entries the mirror reflects
-        self.vis_valid = False  # slots unchanged since the mirror was built
-        self.bad = False  # sticky: kernel cannot serve this state
+        self.bad = False  # sticky: kernel cannot serve this state's table
+        # entry-indexed mirrors, padded to ecap (power of two)
+        self.ecap = 0
+        self.jvlo = None  # visibility word low halves, uint32[ecap]
+        self.jvhi = None
+        self.jelo = None  # provenance (emask) halves, built on demand
+        self.jehi = None
+        self.vis_rows = 0  # entries the vis mirror reflects
+        self.em_rows = 0
+        self.vis_stamp = None  # (rows_inserted, rows_marked, vis_epoch)
+        self.mark_sync = (0, 0)  # (mark_log_epoch, consumed log length)
+        self.ords = {}  # attr -> [j_hi, j_lo, rows] total-order encodings
+        self.keycols = {}  # attr -> [j_i32, rows] entry-origin key mirrors
+        self.badkeys = set()  # attrs whose values left the int32 key range
 
 
 class PallasBackend:
     """jax_pallas data plane (interpret mode off-TPU).
 
-    Unique-key states probe through the fused-lens Pallas kernel. Probes on
-    behalf of a single query route through ``probe_visible``: the table
-    mirror carries the state's *real* per-entry visibility words and the
-    query's slot bit becomes the kernel lens mask, so visibility resolves
-    in-kernel and the runtime skips its NumPy ``visible_mask`` pass.
-    Multi-member probes use the generic pre-visibility ``probe`` (lens mask
-    all-ones). Everything the kernel cannot serve (multi-match keys,
-    out-of-range keycodes, over-long probe clusters) falls back to the
-    reference probe. Probe-table maintenance is batch-oriented: new keys
-    insert via vectorized per-slot winner election (``_batch_insert``), or
-    through the Pallas ``hash_build_insert`` kernel when
-    ``use_insert_kernel`` is set (opt-in: the in-kernel insert loop is
-    sequential, which only pays off compiled on-device).
+    Unique-key states probe through the fused-lens Pallas kernels over
+    entry-indexed device mirrors. Single-query probes route through
+    ``probe_visible`` — the query's slot bit (any of the 64) becomes the
+    kernel lens mask, so visibility resolves in-kernel and the runtime
+    skips its NumPy ``visible_mask`` pass. Multi-member probes take
+    ``probe_visible_multi``, which returns the matched entries' full packed
+    uint64 words. ``probe_chain`` fuses a morsel's entire stage chain —
+    probe → lens translation → compiled grant predicates → interval stage
+    filters → sink word translation — into one launch
+    (``kernels/fused_chain.py``). Everything the kernels cannot serve
+    (multi-match keys, out-of-range keycodes, over-long probe clusters)
+    falls back to the reference probe, with the decline reason counted in
+    ``fallback_reasons``.
+
+    Probe-table maintenance is batch-oriented: new keys insert via
+    vectorized per-slot winner election (``_batch_insert``), or through the
+    Pallas ``hash_build_insert`` kernel when ``use_insert_kernel`` is set
+    (opt-in: the in-kernel insert loop is sequential, which only pays off
+    compiled on-device).
 
     Segmented sums route through the one-hot MXU kernel below
     ``max_kernel_groups`` groups when ``use_agg_kernel`` is set; it
@@ -124,6 +191,7 @@ class PallasBackend:
     """
 
     name = "pallas"
+    probe_accepts_counters = True
 
     # Keycodes must fit int32 and stay clear of the kernel's EMPTY sentinel.
     _KEY_LIMIT = 2**31 - 2
@@ -135,24 +203,31 @@ class PallasBackend:
         use_agg_kernel: bool = False,
         use_insert_kernel: bool = False,
     ):
-        import jax  # noqa: F401 — fail fast if jax is unavailable
+        import jax
 
+        from ..kernels.fused_chain import chain_launch, total_order_u32
         from ..kernels.hash_probe import (
             hash_build_insert,
             hash_probe_lens,
-            hash_probe_lens_multi,
+            hash_probe_lens64,
+            hash_probe_lens_multi64,
         )
         from ..kernels.seg_aggregate import seg_aggregate
 
         self._hash_probe_lens = hash_probe_lens
-        self._hash_probe_lens_multi = hash_probe_lens_multi
+        self._hash_probe_lens64 = hash_probe_lens64
+        self._hash_probe_lens_multi64 = hash_probe_lens_multi64
         self._hash_build_insert = hash_build_insert
         self._seg_aggregate = seg_aggregate
+        self._chain_launch = chain_launch
+        self._total_order_u32 = total_order_u32
         self.interpret = interpret
         self.max_kernel_groups = max_kernel_groups
         self.use_agg_kernel = use_agg_kernel
         self.use_insert_kernel = use_insert_kernel
         self._ref = ReferenceBackend()
+        # donated in-place mirror patches (CPU jax warns on donation)
+        self._donate = jax.default_backend() != "cpu"
         # Probe tables keyed weakly by the state OBJECT (state_ids are
         # engine-local, so an id key would collide when one backend instance
         # is reused across sessions); released states evict automatically.
@@ -164,6 +239,10 @@ class PallasBackend:
         self.kernel_lens_probes = 0
         self.kernel_multi_probes = 0
         self.fallback_probes = 0
+        self.chain_launches = 0
+        self.mirror_full_regathers = 0
+        self.mirror_patched_rows = 0
+        self.fallback_reasons = {r: 0 for r in FALLBACK_REASONS}
 
     def stats(self) -> dict:
         """Kernel-dispatch counters (surfaced via ``Session.stats``).
@@ -173,24 +252,38 @@ class PallasBackend:
         keycode SoA, whose entry ids are partition-independent (§9) — each
         (fragment × partition) unit simply lands its own batched kernel
         call, which is the real per-partition work the pool models."""
-        return {
+        out = {
             "kernel_probes": self.kernel_probes,
             "kernel_lens_probes": self.kernel_lens_probes,
             "kernel_multi_probes": self.kernel_multi_probes,
             "fallback_probes": self.fallback_probes,
+            "chain_launches": self.chain_launches,
+            "mirror_full_regathers": self.mirror_full_regathers,
+            "mirror_patched_rows": self.mirror_patched_rows,
         }
+        for r in FALLBACK_REASONS:
+            out[f"fallback_{r}"] = self.fallback_reasons[r]
+        return out
+
+    def note_fallback(self, reason: str, counters=None) -> None:
+        """Record one kernel decline by reason, on the backend and (when
+        the engine's counter dict is handed in) in the session counters."""
+        self.fallback_reasons[reason] += 1
+        if counters is not None:
+            counters[f"fallback_probes_{reason}"] += 1
 
     # -- probe ---------------------------------------------------------------
-    def probe(self, state, keycodes):
+    def probe(self, state, keycodes, counters=None):
         if state.keycode.n == 0 or len(keycodes) == 0:
             return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
         table = self._table_for(state)
-        if (
-            table is None
-            or keycodes.min() < 0
-            or keycodes.max() > self._KEY_LIMIT
-        ):
+        if table is None:
             self.fallback_probes += 1
+            self.note_fallback("capacity", counters)
+            return self._ref.probe(state, keycodes)
+        if keycodes.min() < 0 or keycodes.max() > self._KEY_LIMIT:
+            self.fallback_probes += 1
+            self.note_fallback("keyrange", counters)
             return self._ref.probe(state, keycodes)
         import jax.numpy as jnp
 
@@ -216,12 +309,14 @@ class PallasBackend:
 
         Returns visibility-filtered (probe_idx, entry_idx) pairs, or None
         when the kernel cannot take over the lens (extent-scoped grants
-        need predicate evaluation; slots >= 32 exceed the kernel's uint32
-        visibility words; unservable tables fall back entirely)."""
+        need predicate evaluation — unless routed through ``probe_chain``'s
+        compiled form; unservable tables fall back entirely). The lens
+        words are entry-indexed uint32 pairs, so any slot 0..63 serves —
+        the former uint32-word slot<32 limit is gone (DESIGN.md §13)."""
         if state.grants.get(qid):
             return None
         slot = state.slots.peek(qid)
-        if slot is None or slot >= 32:
+        if slot is None:
             return None
         if state.keycode.n == 0 or len(keycodes) == 0:
             # decline instead of returning the empty pair: keeps the
@@ -233,30 +328,35 @@ class PallasBackend:
         import jax.numpy as jnp
 
         ent = self._tables[state]
-        self._refresh_vis(ent, state)
-        found_slots = np.asarray(
-            self._hash_probe_lens(
+        self._sync_mirrors(ent, state)
+        mask = np.uint64(1) << np.uint64(slot)
+        mlo, mhi = split_words(np.array([mask], dtype=np.uint64))
+        found = np.asarray(
+            self._hash_probe_lens64(
                 jnp.asarray(keycodes, dtype=jnp.int32),
                 ent.jkeys,
-                ent.jvis,
-                jnp.asarray([np.uint32(1) << np.uint32(slot)], dtype=jnp.uint32),
+                ent.jentry,
+                ent.jvlo,
+                ent.jvhi,
+                jnp.asarray(np.array([mlo[0], mhi[0]], dtype=np.uint32)),
                 interpret=self.interpret,
             )
         )
         self.kernel_probes += 1
         self.kernel_lens_probes += 1
-        probe_idx = np.flatnonzero(found_slots >= 0).astype(np.int64)
-        entry_idx = ent.slot_entry[found_slots[probe_idx]]
+        probe_idx = np.flatnonzero(found >= 0).astype(np.int64)
+        entry_idx = ent.slot_entry[found[probe_idx]]
         return probe_idx, entry_idx
 
     def probe_visible_multi(self, state, keycodes):
         """Multi-member probe with the packed lens words gathered in-kernel
         (§11): returns ``(probe_idx, entry_idx, vis_words)`` where
-        ``vis_words[i]`` is the matched entry's uint32 visibility word, or
-        None when the kernel cannot serve the state. The pair stream is
-        pre-visibility and identical to ``probe`` — ownership filtering
-        happens in the runtime's packed translation — so results stay
-        bit-identical to the reference path for every member count."""
+        ``vis_words[i]`` is the matched entry's full uint64 visibility
+        word (rejoined from the kernel's uint32 halves), or None when the
+        kernel cannot serve the state. The pair stream is pre-visibility
+        and identical to ``probe`` — ownership filtering happens in the
+        runtime's packed translation — so results stay bit-identical to
+        the reference path for every member count and any slot 0..63."""
         if state.keycode.n == 0 or len(keycodes) == 0:
             return None
         table = self._table_for(state)
@@ -265,11 +365,13 @@ class PallasBackend:
         import jax.numpy as jnp
 
         ent = self._tables[state]
-        self._refresh_vis(ent, state)
-        found, words = self._hash_probe_lens_multi(
+        self._sync_mirrors(ent, state)
+        found, wlo, whi = self._hash_probe_lens_multi64(
             jnp.asarray(keycodes, dtype=jnp.int32),
             ent.jkeys,
-            ent.jvis,
+            ent.jentry,
+            ent.jvlo,
+            ent.jvhi,
             interpret=self.interpret,
         )
         found = np.asarray(found)
@@ -277,60 +379,409 @@ class PallasBackend:
         self.kernel_multi_probes += 1
         probe_idx = np.flatnonzero(found >= 0).astype(np.int64)
         entry_idx = ent.slot_entry[found[probe_idx]]
-        vis_words = np.asarray(words)[probe_idx].astype(np.uint64)
+        vis_words = join_words(
+            np.asarray(wlo)[probe_idx], np.asarray(whi)[probe_idx]
+        )
         return probe_idx, entry_idx, vis_words
 
-    def _refresh_vis(self, ent: "_ProbeTable", state) -> None:
-        """Mirror the state's per-entry visibility words into the table
-        layout. Visibility only changes through insert_or_mark, so the
-        (rows_inserted, rows_marked) pair stamps the mirror's freshness.
-        Pure append-only growth patches only the new entries' slots
-        (O(delta)); marks rewrite existing words, so a mark or a table
-        rebuild falls back to a full O(capacity) regather."""
+    # -- fused stage chain (DESIGN.md §13) -----------------------------------
+    def probe_chain(self, cplan, cols, bits, host_keys, counters=None):
+        """One fused launch for a morsel's entire stage chain.
+
+        ``cplan`` is the runtime's compiled chain plan (``Pipeline.
+        _build_chain_plan``): per stage the target state, lens translation
+        tables, key sourcing, compiled grants and interval filter matrices;
+        plus the sink translation tables. ``cols`` are the morsel's
+        source-compacted columns, ``bits`` the packed ownership words and
+        ``host_keys`` the per-stage host-encoded keycodes for
+        source-origin keys. Returns None on a dynamic decline (reason
+        counted), else a dict with the final packed words, per-stage
+        matched entry indices, per-stage (alive, matched,
+        matched_visible) stats, per-slot survivor counts, and — for build
+        chains — the sink visibility/provenance words. Device parameter
+        uploads are cached on the plan (``cplan["_dev"]``), so steady-state
+        morsels ship only the row-length arrays."""
+        stages = cplan["stages"]
+        n = len(bits)
+        if n == 0:
+            return None
+
+        # collect per-state mirror needs across the chain
+        needs: dict = {}
+
+        def need(state):
+            nd = needs.get(id(state))
+            if nd is None:
+                nd = needs[id(state)] = {
+                    "state": state,
+                    "em": False,
+                    "ords": set(),
+                    "keys": set(),
+                }
+            return nd
+
+        for st in stages:
+            state = st["state"]
+            if state.keycode.n == 0:
+                return None  # no rows can survive; the staged path is as cheap
+            need(state)
+            key = st["key"]
+            if key[0] == "entry":
+                need(stages[key[1]]["state"])["keys"].add(key[2])
+            if st["grants"]:
+                nd = need(state)
+                nd["em"] = True
+                for _, _, bounds in st["grants"]:
+                    for a, _, _ in bounds:
+                        nd["ords"].add(a)
+            f = st["filter"]
+            if f is not None:
+                for ref in f["attrs"]:
+                    if ref[0] == "entry":
+                        need(stages[ref[1]]["state"])["ords"].add(ref[2])
+        for st in stages:
+            if self._table_for(st["state"]) is None:
+                self.note_fallback("capacity", counters)
+                return None
+        for nd in needs.values():
+            state = nd["state"]
+            ent = self._tables[state]
+            self._sync_mirrors(
+                ent,
+                state,
+                need_em=nd["em"],
+                ord_attrs=sorted(nd["ords"]),
+                key_attrs=sorted(nd["keys"]),
+            )
+            for a in nd["keys"]:
+                if a in ent.badkeys:
+                    self.note_fallback("keyrange", counters)
+                    return None
+
         import jax.numpy as jnp
 
-        stamp = (state.rows_inserted, state.rows_marked)
-        if ent.vis_stamp == stamp and ent.jvis is not None:
-            return
-        vis_low = (state.vis.data & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-        marks_unchanged = (
-            ent.vis_stamp is not None and ent.vis_stamp[1] == stamp[1]
-        )
-        if ent.vis_valid and ent.tvis is not None and marks_unchanged:
-            new_keys = np.asarray(state.keycode.data[ent.vis_n : ent.n], dtype=np.int32)
-            ent.tvis[self._find_slots(ent, new_keys)] = vis_low[ent.vis_n : ent.n]
-        else:
-            ent.tvis = np.zeros(len(ent.tkeys), dtype=np.uint32)
-            occ = ent.slot_entry >= 0
-            ent.tvis[occ] = vis_low[ent.slot_entry[occ]]
-            ent.vis_valid = True
-        ent.jvis = jnp.asarray(ent.tvis)
-        ent.vis_n = ent.n
-        ent.vis_stamp = stamp
+        from ..kernels.hash_probe import EMPTY
 
-    @staticmethod
-    def _find_slots(ent: "_ProbeTable", keys32: np.ndarray) -> np.ndarray:
-        """Slot of each (present, unique) key: the kernel's linear-probe
-        walk, batched — used to patch the visibility mirror in O(delta)."""
-        from ..kernels.hash_probe import MULT
+        npad = 8
+        while npad < n:
+            npad *= 2
 
-        tkeys = ent.tkeys
-        mask = len(tkeys) - 1
-        pos = ((keys32.astype(np.uint32) * np.uint32(MULT)).astype(np.int32)) & mask
-        out = np.empty(len(keys32), dtype=np.int64)
-        pending = np.arange(len(keys32), dtype=np.int64)
-        while len(pending):
-            p = pos[pending]
-            hit = tkeys[p] == keys32[pending]
-            if hit.any():
-                out[pending[hit]] = p[hit]
-            rest = ~hit
-            if not rest.any():
+        def pad_row(a, fill=0):
+            if len(a) < npad:
+                a = np.concatenate(
+                    [a, np.full(npad - len(a), fill, dtype=a.dtype)]
+                )
+            return jnp.asarray(a)
+
+        blo, bhi = split_words(bits)
+        arrays = [pad_row(blo), pad_row(bhi)]
+        spec_stages = []
+        dev = cplan["_dev"]
+        for si, st in enumerate(stages):
+            ent = self._tables[st["state"]]
+            key = st["key"]
+            if key[0] == "host":
+                kc = host_keys[si]
+                if len(kc) and (kc.min() < 0 or kc.max() > self._KEY_LIMIT):
+                    self.note_fallback("keyrange", counters)
+                    return None
+                key_mode = -1
+                arrays.append(pad_row(kc.astype(np.int32), EMPTY))
+            else:
+                key_mode = key[1]
+                oent = self._tables[stages[key_mode]["state"]]
+                arrays.append(oent.keycols[key[2]][0])
+            arrays += [ent.jkeys, ent.jentry, ent.jvlo, ent.jvhi]
+            tt = dev.get(("tt", si))
+            if tt is None:
+                tlo, thi = split_words(st["tables"].ravel())
+                tt = (
+                    jnp.asarray(tlo.reshape(8, 256)),
+                    jnp.asarray(thi.reshape(8, 256)),
+                )
+                dev[("tt", si)] = tt
+            arrays += [tt[0], tt[1]]
+            n_grants = len(st["grants"])
+            g_attrs = 0
+            if n_grants:
+                gp = dev.get(("g", si))
+                if gp is None:
+                    gp = self._grant_params(st["grants"])
+                    dev[("g", si)] = gp
+                gattr_names, gbit, gallow, gcon, glo, ghi = gp
+                g_attrs = len(gattr_names)
+                arrays += [ent.jelo, ent.jehi, gbit, gallow, gcon, glo, ghi]
+                for a in gattr_names:
+                    rec = ent.ords[a]
+                    arrays += [rec[0], rec[1]]
+            f = st["filter"]
+            fspec = None
+            if f is not None and len(f["attrs"]):
+                srcs = []
+                for ref in f["attrs"]:
+                    if ref[0] == "host":
+                        vh, vl = self._total_order_u32(
+                            np.asarray(cols[ref[1]], dtype=np.float64)
+                        )
+                        arrays += [pad_row(vh), pad_row(vl)]
+                        srcs.append(-1)
+                    else:
+                        rec = self._tables[stages[ref[1]]["state"]].ords[ref[2]]
+                        arrays += [rec[0], rec[1]]
+                        srcs.append(ref[1])
+                fp = dev.get(("f", si))
+                if fp is None:
+                    fp = self._filter_params(f)
+                    dev[("f", si)] = fp
+                arrays += list(fp)
+                fspec = (f["n_members"], tuple(srcs))
+            spec_stages.append((key_mode, n_grants, g_attrs, fspec))
+        sink = cplan["sink"]
+        if sink is not None:
+            sp = dev.get("sink")
+            if sp is None:
+                vt, et = sink
+                vlo, vhi = split_words(vt.ravel())
+                elo, ehi = split_words(et.ravel())
+                sp = tuple(
+                    jnp.asarray(x.reshape(8, 256)) for x in (vlo, vhi, elo, ehi)
+                )
+                dev["sink"] = sp
+            arrays += list(sp)
+        spec = (tuple(spec_stages), sink is not None)
+        out = self._chain_launch(spec, tuple(arrays), interpret=self.interpret)
+        n_stages = len(stages)
+        res = {
+            "bits": join_words(np.asarray(out[0])[:n], np.asarray(out[1])[:n]),
+            "entries": [
+                np.asarray(out[2 + s])[:n].astype(np.int64)
+                for s in range(n_stages)
+            ],
+            "stats": np.asarray(out[2 + n_stages]).astype(np.int64),
+            "slots": np.asarray(out[3 + n_stages]).astype(np.int64),
+        }
+        if sink is not None:
+            res["vismask"] = join_words(
+                np.asarray(out[4 + n_stages])[:n],
+                np.asarray(out[5 + n_stages])[:n],
+            )
+            res["emask"] = join_words(
+                np.asarray(out[6 + n_stages])[:n],
+                np.asarray(out[7 + n_stages])[:n],
+            )
+        self.kernel_probes += 1
+        self.chain_launches += 1
+        stats = res["stats"]
+        for s, st in enumerate(stages):
+            if stats[s, 0] == 0:
                 break
-            pr = pending[rest]
-            pos[pr] = (p[rest] + 1) & mask
-            pending = pr
-        return out
+            if st["use_post"]:
+                self.kernel_lens_probes += 1
+            else:
+                self.kernel_multi_probes += 1
+        return res
+
+    def _grant_params(self, grants):
+        """Device parameter matrices of one stage's compiled grants: the
+        union attr list, per-grant split bit/allowed words, and the
+        per-(grant, attr) constrained flags + total-order interval bounds
+        (unconstrained cells carry flag 0 and the full [-inf, inf] band)."""
+        import jax.numpy as jnp
+
+        from ..kernels.fused_chain import total_order_bound
+
+        attrs = []
+        for _, _, bounds in grants:
+            for a, _, _ in bounds:
+                if a not in attrs:
+                    attrs.append(a)
+        n_g = len(grants)
+        n_a = max(len(attrs), 1)
+        gbit = np.zeros((n_g, 2), np.uint32)
+        gallow = np.zeros((n_g, 2), np.uint32)
+        gcon = np.zeros((n_g, n_a), np.int32)
+        glo = np.zeros((n_g, n_a, 2), np.uint32)
+        ghi = np.zeros((n_g, n_a, 2), np.uint32)
+        glo[:, :, 0], glo[:, :, 1] = total_order_bound(-math.inf)
+        ghi[:, :, 0], ghi[:, :, 1] = total_order_bound(math.inf)
+        for g, (bitval, allowed, bounds) in enumerate(grants):
+            lo, hi = split_words(np.array([bitval], dtype=np.uint64))
+            gbit[g] = (lo[0], hi[0])
+            lo, hi = split_words(np.array([allowed], dtype=np.uint64))
+            gallow[g] = (lo[0], hi[0])
+            for a, blo, bhi in bounds:
+                j = attrs.index(a)
+                gcon[g, j] = 1
+                glo[g, j] = total_order_bound(blo)
+                ghi[g, j] = total_order_bound(bhi)
+        return (
+            tuple(attrs),
+            jnp.asarray(gbit),
+            jnp.asarray(gallow),
+            jnp.asarray(gcon),
+            jnp.asarray(glo),
+            jnp.asarray(ghi),
+        )
+
+    def _filter_params(self, f):
+        """Device matrices of one stage's fused interval filter: bounds as
+        total-order uint32 pairs, constrained flags, split member bits."""
+        import jax.numpy as jnp
+
+        n_m = f["n_members"]
+        n_a = len(f["attrs"])
+        lh, ll = self._total_order_u32(np.asarray(f["lo"], np.float64).ravel())
+        hh, hl = self._total_order_u32(np.asarray(f["hi"], np.float64).ravel())
+        flo = np.stack([lh, ll], axis=-1).reshape(n_m, n_a, 2)
+        fhi = np.stack([hh, hl], axis=-1).reshape(n_m, n_a, 2)
+        fcon = np.asarray(f["con"], np.int32).reshape(n_m, n_a)
+        blo, bhi = split_words(np.asarray(f["bitvals"], np.uint64))
+        fbit = np.stack([blo, bhi], axis=-1)
+        return (
+            jnp.asarray(flo),
+            jnp.asarray(fhi),
+            jnp.asarray(fcon),
+            jnp.asarray(fbit),
+        )
+
+    # -- entry-indexed device mirrors ----------------------------------------
+    def _upload(self, vals, cap):
+        import jax.numpy as jnp
+
+        if len(vals) < cap:
+            vals = np.pad(vals, (0, cap - len(vals)))
+        return jnp.asarray(vals)
+
+    def _patch(self, buf, idx, vals):
+        """Scatter ``vals`` into the device mirror at entry ids ``idx``.
+        Index/value lengths pad to the next power of two (repeating the
+        first element — duplicate same-value writes are benign) so the
+        jitted scatter compiles O(log n) shapes, not one per batch size."""
+        import jax.numpy as jnp
+
+        m = len(idx)
+        cap = 1
+        while cap < m:
+            cap *= 2
+        idx = np.asarray(idx, dtype=np.int32)
+        if cap != m:
+            idx = np.concatenate([idx, np.full(cap - m, idx[0], dtype=np.int32)])
+            vals = np.concatenate([vals, np.full(cap - m, vals[0], dtype=vals.dtype)])
+        return _scatter_set(self._donate)(buf, jnp.asarray(idx), jnp.asarray(vals))
+
+    def _sync_mirrors(self, ent, state, need_em=False, ord_attrs=(), key_attrs=()):
+        """Bring the entry-indexed device mirrors up to the state's SoA.
+
+        Steady state is incremental: appended entries patch ``[rows:n]``,
+        visibility/provenance marks patch exactly the state's mark-log
+        entry ids. Only a mark-log compaction, a ``detach`` visibility
+        epoch bump, or a capacity realloc trigger a full regather
+        (``mirror_full_regathers`` counts them). Total-order column
+        encodings and int32 key-column mirrors are append-only — retained
+        column values never change after insert. Key columns whose values
+        leave the int32 key range mark ``badkeys`` sticky."""
+        n = ent.n
+        if ent.jvlo is None or ent.ecap < n:
+            cap = max(ent.ecap, 256)
+            while cap < n:
+                cap *= 2
+            ent.ecap = cap
+            ent.jvlo = ent.jvhi = ent.jelo = ent.jehi = None
+            ent.vis_rows = ent.em_rows = 0
+            ent.ords = {}
+            ent.keycols = {}
+        epoch = state.mark_log_epoch
+        stamp = (state.rows_inserted, state.rows_marked, state.vis_epoch)
+        if ent.jvlo is None:
+            lo, hi = split_words(state.vis.data[:n])
+            ent.jvlo = self._upload(lo, ent.ecap)
+            ent.jvhi = self._upload(hi, ent.ecap)
+            ent.vis_rows = n
+            ent.mark_sync = (epoch, state.mark_log.n)
+            ent.vis_stamp = stamp
+        elif ent.vis_stamp != stamp:
+            se, sp = ent.mark_sync
+            if se != epoch or ent.vis_stamp[2] != stamp[2]:
+                # mark-log compaction or a detach bit-clear: regather once
+                lo, hi = split_words(state.vis.data[:n])
+                ent.jvlo = self._upload(lo, ent.ecap)
+                ent.jvhi = self._upload(hi, ent.ecap)
+                ent.vis_rows = n
+                if ent.jelo is not None:
+                    lo, hi = split_words(state.emask.data[:n])
+                    ent.jelo = self._upload(lo, ent.ecap)
+                    ent.jehi = self._upload(hi, ent.ecap)
+                    ent.em_rows = n
+                self.mirror_full_regathers += 1
+            else:
+                ids = state.mark_log.data[sp:]
+                if len(ids):
+                    ids = np.unique(ids)
+                    vm = ids[ids < ent.vis_rows]
+                    if len(vm):
+                        lo, hi = split_words(state.vis.data[vm])
+                        ent.jvlo = self._patch(ent.jvlo, vm, lo)
+                        ent.jvhi = self._patch(ent.jvhi, vm, hi)
+                        self.mirror_patched_rows += len(vm)
+                    if ent.jelo is not None:
+                        em = ids[ids < ent.em_rows]
+                        if len(em):
+                            lo, hi = split_words(state.emask.data[em])
+                            ent.jelo = self._patch(ent.jelo, em, lo)
+                            ent.jehi = self._patch(ent.jehi, em, hi)
+                if ent.vis_rows < n:
+                    idx = np.arange(ent.vis_rows, n, dtype=np.int64)
+                    lo, hi = split_words(state.vis.data[ent.vis_rows : n])
+                    ent.jvlo = self._patch(ent.jvlo, idx, lo)
+                    ent.jvhi = self._patch(ent.jvhi, idx, hi)
+                    ent.vis_rows = n
+                if ent.jelo is not None and ent.em_rows < n:
+                    idx = np.arange(ent.em_rows, n, dtype=np.int64)
+                    lo, hi = split_words(state.emask.data[ent.em_rows : n])
+                    ent.jelo = self._patch(ent.jelo, idx, lo)
+                    ent.jehi = self._patch(ent.jehi, idx, hi)
+                    ent.em_rows = n
+            ent.mark_sync = (epoch, state.mark_log.n)
+            ent.vis_stamp = stamp
+        if need_em and ent.jelo is None:
+            lo, hi = split_words(state.emask.data[:n])
+            ent.jelo = self._upload(lo, ent.ecap)
+            ent.jehi = self._upload(hi, ent.ecap)
+            ent.em_rows = n
+        for a in ord_attrs:
+            rec = ent.ords.get(a)
+            if rec is None:
+                h, lo = self._total_order_u32(state.cols[a].data[:n])
+                ent.ords[a] = [self._upload(h, ent.ecap), self._upload(lo, ent.ecap), n]
+            elif rec[2] < n:
+                h, lo = self._total_order_u32(state.cols[a].data[rec[2] : n])
+                idx = np.arange(rec[2], n, dtype=np.int64)
+                rec[0] = self._patch(rec[0], idx, h)
+                rec[1] = self._patch(rec[1], idx, lo)
+                rec[2] = n
+        for a in key_attrs:
+            if a in ent.badkeys:
+                continue
+            rec = ent.keycols.get(a)
+            start = rec[1] if rec is not None else 0
+            if start >= n:
+                continue
+            vals = state.cols[a].data[start:n]
+            with np.errstate(invalid="ignore"):
+                # truncate exactly like encode_keys' int64 cast; NaN/inf
+                # truncate to INT64_MIN, caught by the range check below
+                iv = vals.astype(np.int64)
+            if len(iv) and (iv.min() < 0 or iv.max() > self._KEY_LIMIT):
+                ent.badkeys.add(a)
+                ent.keycols.pop(a, None)
+                continue
+            i32 = iv.astype(np.int32)
+            if rec is None:
+                ent.keycols[a] = [self._upload(i32, ent.ecap), n]
+            else:
+                idx = np.arange(start, n, dtype=np.int64)
+                rec[0] = self._patch(rec[0], idx, i32)
+                rec[1] = n
 
     def _table_for(self, state) -> Optional[Tuple[object, object, np.ndarray]]:
         """Open-addressing probe table over the state's SoA keycodes, cached
@@ -358,7 +809,9 @@ class PallasBackend:
         capacity when the 50% load factor would be exceeded. Insertion is
         one batched winner-election pass (or the Pallas insert kernel on
         full rebuilds when ``use_insert_kernel`` is set) — never a
-        per-key Python loop."""
+        per-key Python loop. Rebuilds reassign table slots but leave the
+        entry-indexed mirrors untouched (they are keyed by entry id, not
+        slot — the §13 incremental-maintenance invariant)."""
         from ..kernels.hash_probe import EMPTY
 
         new = keys[ent.n : n]
@@ -379,9 +832,6 @@ class PallasBackend:
                 if not self._batch_insert(ent, keys[:n], 0):
                     ent.bad = True
                     return
-            # rebuild reassigns slots: the lens mirror must fully regather
-            ent.vis_valid = False
-            ent.vis_stamp = None
         elif not self._batch_insert(ent, keys[ent.n : n], ent.n):
             ent.bad = True
             return
@@ -389,6 +839,7 @@ class PallasBackend:
 
         ent.n = n
         ent.jkeys = jnp.asarray(ent.tkeys)
+        ent.jentry = jnp.asarray(ent.slot_entry.astype(np.int32))
         if ent.jones is None or ent.jones.shape[0] != len(ent.tkeys):
             ent.jones = jnp.ones(len(ent.tkeys), dtype=jnp.uint32)
 

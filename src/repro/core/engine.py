@@ -173,6 +173,14 @@ class GraftEngine:
             "fused_vis_rows",
             "fused_stage_filter_rows",
             "fused_sink_rows",
+            # device-resident fused chain (§13) — one launch per morsel
+            # stage chain, with per-reason kernel-decline attribution
+            "kernel_chain_launches",
+            "fallback_probes_grants",
+            "fallback_probes_slot_limit",
+            "fallback_probes_keyrange",
+            "fallback_probes_capacity",
+            "fallback_probes_predicate",
             "agg_cohort_rows",
             "overflow_members",
             "partition_merges",

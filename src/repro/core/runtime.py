@@ -116,6 +116,49 @@ def encode_keys(cols: Dict[str, np.ndarray], attrs: Sequence[str]) -> np.ndarray
     return code
 
 
+def _backend_probe(backend, state, keycodes, counters):
+    """Generic pre-visibility probe, handing the engine counter dict to
+    backends that attribute their fallbacks by reason (DESIGN.md §13)."""
+    if getattr(backend, "probe_accepts_counters", False):
+        return backend.probe(state, keycodes, counters=counters)
+    return backend.probe(state, keycodes)
+
+
+def _chain_grant_bounds(conj: Conjunction):
+    """Compile a grant's retained conjunction to closed per-attribute
+    intervals for the fused-chain kernel, mirroring ``evaluate_conj``
+    EXACTLY (§13): a bound equal to its own infinity is *skipped* there
+    regardless of inclusivity, so it compiles to the unconstrained band
+    rather than an ulp-tightened one; exclusive finite bounds tighten by
+    one float64 ulp (``col > v`` == ``col >= nextafter(v)``); membership
+    sets compile only at size one. Returns the constrained-attr tuple
+    ``((attr, lo, hi), ...)`` or None when the conjunction is not
+    interval-compilable in-kernel (the chain then declines with reason
+    ``grants``)."""
+    bounds = []
+    for attr, c in conj.constraints.items():
+        lo, hi = -math.inf, math.inf
+        if c.lo != -math.inf:
+            if math.isnan(c.lo) or (not c.lo_inc and c.lo == math.inf):
+                return None
+            lo = c.lo if c.lo_inc else float(np.nextafter(c.lo, math.inf))
+        if c.hi != math.inf:
+            if math.isnan(c.hi) or (not c.hi_inc and c.hi == -math.inf):
+                return None
+            hi = c.hi if c.hi_inc else float(np.nextafter(c.hi, -math.inf))
+        if c.members is not None:
+            if len(c.members) != 1:
+                return None
+            v = float(next(iter(c.members)))
+            if math.isnan(v):
+                return None  # isin never admits NaN; not an interval
+            lo, hi = max(lo, v), min(hi, v)
+        if lo == -math.inf and hi == math.inf:
+            continue  # evaluate_conj skips both checks: unconstrained
+        bounds.append((attr, lo, hi))
+    return tuple(bounds)
+
+
 # ---------------------------------------------------------------------------
 # Fused multi-member source filter (DESIGN.md §8)
 # ---------------------------------------------------------------------------
@@ -634,9 +677,9 @@ class Pipeline:
                     continue
                 slot = op.state.slots.peek(m.qid)
                 if slot is not None:
+                    # any slot 0..63 serves: the kernel lens mirrors are
+                    # (lo, hi) uint32 pairs (DESIGN.md §13)
                     target[slot] |= m.bitval
-                    if slot >= 32:  # the kernel lens mirror is uint32
-                        kernelable = False
             stages.append((translation_table(target), tuple(grant_members), kernelable))
             attrs, lo, hi, fused, slow = stage_filter_matrices(act, stage)
             fmask = np.uint64(0)
@@ -689,10 +732,120 @@ class Pipeline:
             )
             for ck, ms in cohorts.items()
         ]
+        plan["chain"] = self._build_chain_plan(act, plan)
         if len(self._mm_plans) > 64:  # bounded: waves churn members
             self._mm_plans.clear()
         self._mm_plans[key] = plan
         return plan
+
+    def _build_chain_plan(self, act: List[Member], plan: dict):
+        """Compile the wave's stage chain for one fused device launch
+        (DESIGN.md §13), or record why it cannot fuse.
+
+        Per stage: the chain lens translation table (unlike the staged
+        tables it INCLUDES grant members' slot bits — ``visible_mask`` ORs
+        the slot bit with the grants, and the kernel does the same), key
+        sourcing resolved through the running payload environment (source
+        columns stay per-row host keys; a single payload-origin key gathers
+        from the origin stage's entry-indexed device key mirror), compiled
+        grant intervals, and the fused filter matrices with their operand
+        sourcing. Static declines return ``{"ok": False, "reason": ...}``
+        so the dispatcher counts them per reason: non-interval grants
+        (``grants``), slow stage-filter members (``predicate``),
+        mixed/composite payload-origin keys (``keyrange``)."""
+        if not self.ops:
+            return None
+        n_members = len(act)
+        env: Dict[str, tuple] = {}
+        reason = None
+        stages_meta = []
+        for stage, op in enumerate(self.ops):
+            refs = [env.get(a) for a in op.probe_attrs]
+            if all(r is None for r in refs):
+                key = ("host", tuple(op.probe_attrs))
+            elif len(refs) == 1:
+                key = refs[0]
+            else:
+                # composite keys with payload-origin components would need
+                # the radix encode on device — not worth a kernel variant
+                key = None
+                reason = reason or "keyrange"
+            target = np.zeros(64, dtype=np.uint64)
+            grants = []
+            n_grant_members = 0
+            for m in act:
+                slot = op.state.slots.peek(m.qid)
+                if slot is not None:
+                    target[slot] |= m.bitval
+                gs = op.state.grants.get(m.qid)
+                if gs:
+                    n_grant_members += 1
+                    for allowed, conj in gs:
+                        b = _chain_grant_bounds(conj)
+                        if b is None or any(
+                            a not in op.state.cols for a, _, _ in b
+                        ):
+                            reason = reason or "grants"
+                        else:
+                            grants.append((m.bitval, np.uint64(allowed), b))
+            ff, n_fused, fmask, slow = plan["filters"][stage]
+            if slow:
+                reason = reason or "predicate"
+            # payload outputs shadow the environment BEFORE filter operand
+            # resolution (stage filters run on the post-gather columns)
+            for a, out in zip(op.payload, op.out_names):
+                env[out] = ("entry", stage, a)
+            fmeta = None
+            if n_fused and ff.attrs:
+                if np.isnan(ff.lo).any() or np.isnan(ff.hi).any():
+                    reason = reason or "predicate"
+                frefs = []
+                for a in ff.attrs:
+                    r = env.get(a)
+                    frefs.append(("host", a) if r is None else r)
+                fmeta = {
+                    "attrs": tuple(frefs),
+                    "lo": ff.lo,
+                    "hi": ff.hi,
+                    "con": ff._con,
+                    "bitvals": ff.bitvals,
+                    "n_members": n_fused,
+                }
+            # post-visibility accounting iff the staged path would have
+            # taken the single-member fused-lens probe for this stage
+            use_post = (
+                n_members == 1
+                and n_grant_members == 0
+                and op.state.slots.peek(act[0].qid) is not None
+            )
+            stages_meta.append(
+                {
+                    "state": op.state,
+                    "tables": translation_table(target),
+                    "key": key,
+                    "grants": tuple(grants),
+                    "n_grant_members": n_grant_members,
+                    "use_post": use_post,
+                    "filter": fmeta,
+                }
+            )
+        if reason is not None:
+            return {"ok": False, "reason": reason}
+        needed = set()
+        if self.build_target is not None:
+            bt = self.build_target
+            needed |= set(bt.key_attrs) | set(bt.state.retained_attrs)
+        for _ck, _ms, _fold, ncols in plan["cohorts"]:
+            needed |= set(ncols)
+        return {
+            "ok": True,
+            "n_members": n_members,
+            "stages": stages_meta,
+            "sink": plan.get("sink"),
+            "env": dict(env),
+            "needed": tuple(sorted(needed)),
+            "_dev": {},
+        }
 
     def process(
         self, engine, cols: Dict[str, np.ndarray], row_ids: np.ndarray, part: int = 0
@@ -757,8 +910,35 @@ class Pipeline:
         did = row_ids[keep].astype(np.int64)
 
         backend = engine.backend
+        served = False
+        chain_sink = None
+        cplan = plan.get("chain")
+        probe_chain = (
+            getattr(backend, "probe_chain", None) if backend is not None else None
+        )
+        if cplan is not None and probe_chain is not None and len(did) > 0:
+            if cplan["ok"]:
+                # one fused launch for the whole stage chain (§13); host
+                # keys validated backend-side over the full morsel — any
+                # dynamic decline falls through to the staged loop below
+                host_keys = {
+                    si: encode_keys(cols, st["key"][1])
+                    for si, st in enumerate(cplan["stages"])
+                    if st["key"][0] == "host"
+                }
+                res = probe_chain(
+                    cplan, cols, bits, host_keys, counters=engine.counters
+                )
+                if res is not None:
+                    engine.counters["kernel_chain_launches"] += 1
+                    cost, cols, bits, did, chain_sink = self._replay_chain(
+                        engine, plan, cplan, res, cols, did, cost
+                    )
+                    served = True
+            else:
+                backend.note_fallback(cplan["reason"], engine.counters)
         for stage, op in enumerate(self.ops):
-            if len(did) == 0:
+            if served or len(did) == 0:
                 break
             keycodes = encode_keys(cols, op.probe_attrs)
             vis_tables, grant_members, kernelable = plan["stages"][stage]
@@ -784,7 +964,9 @@ class Pipeline:
                             probe_idx, entry_idx, words = trip
                             engine.counters["kernel_multi_lens_probes"] += 1
                 if not lens_fused and words is None:
-                    probe_idx, entry_idx = backend.probe(op.state, keycodes)
+                    probe_idx, entry_idx = _backend_probe(
+                        backend, op.state, keycodes, engine.counters
+                    )
             else:
                 probe_idx, entry_idx = op.state.probe(keycodes)
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
@@ -831,12 +1013,17 @@ class Pipeline:
         # sinks
         if self.build_target is not None and len(did) > 0:
             bt = self.build_target
-            vis_tables, em_tables = plan["sink"]
-            # all beneficiaries of all members tag in ONE translate +
-            # one bitwise_or.at scatter inside insert_or_mark (§11)
-            vismask = translate_bits(bits, vis_tables)
-            emask = translate_bits(bits, em_tables)
-            counts = slot_popcounts(bits)
+            if chain_sink is not None:
+                # chain launches translate the sink words in-kernel and
+                # return per-slot survivor counts alongside (§13)
+                vismask, emask, counts = chain_sink
+            else:
+                vis_tables, em_tables = plan["sink"]
+                # all beneficiaries of all members tag in ONE translate +
+                # one bitwise_or.at scatter inside insert_or_mark (§11)
+                vismask = translate_bits(bits, vis_tables)
+                emask = translate_bits(bits, em_tables)
+                counts = slot_popcounts(bits)
             engine.counters["fused_sink_rows"] += len(bits)
             idx = np.flatnonzero(vismask)
             if len(idx):
@@ -876,6 +1063,62 @@ class Pipeline:
                 if m.sink is not None and nsel_of.get(m.mid):
                     cost += cm["agg"] * nsel_of[m.mid]
         return cost
+
+    def _replay_chain(self, engine, plan: dict, cplan: dict, res, cols, did, cost):
+        """Fold one chain launch's results back into the morsel loop's
+        contract: replay the staged loop's modeled cost and row counters
+        from the kernel's per-stage (alive, matched, matched_visible)
+        stats, then reconstruct the surviving rows' columns and provenance
+        host-side from the returned entry indices. Every formula mirrors a
+        line of the staged loop — including threading the RUNNING morsel
+        cost through the per-stage adds, since float summation order is
+        part of the virtual-clock contract — so the clock and ROW counters
+        stay bit-identical whether a wave runs fused or staged (§13)."""
+        cm = engine.cost_model
+        n_members = cplan["n_members"]
+        stats = res["stats"]
+        for s, st in enumerate(cplan["stages"]):
+            alive = int(stats[s, 0])
+            if alive == 0:
+                # the staged loop breaks before probing an empty morsel
+                break
+            # post-visibility match counts iff the staged path would have
+            # probed through the single-member fused lens
+            matched = int(stats[s, 2] if st["use_post"] else stats[s, 1])
+            cost += cm["probe"] * alive + cm["match"] * matched
+            engine.counters["probe_rows"] += alive
+            if st["use_post"]:
+                engine.counters["kernel_lens_probes"] += 1
+            else:
+                engine.counters["kernel_multi_lens_probes"] += 1
+                engine.counters["fused_vis_rows"] += int(stats[s, 1]) * (
+                    n_members - st["n_grant_members"]
+                )
+            n_fused = plan["filters"][s][1]
+            if n_fused:
+                engine.counters["fused_stage_filter_rows"] += matched * n_fused
+        keep = np.flatnonzero(res["bits"])
+        bits = res["bits"][keep]
+        # survivors matched every stage (a probe miss zeroes the row's
+        # word), so every gathered entry index is valid
+        entries = [e[keep] for e in res["entries"]]
+        env = cplan["env"]
+        out_cols = {}
+        for a in cplan["needed"]:
+            ref = env.get(a)
+            if ref is None:
+                out_cols[a] = cols[a][keep]
+            else:
+                _, stg, attr = ref
+                out_cols[a] = self.ops[stg].state.cols[attr].data[entries[stg]]
+        did = did[keep]
+        if self.compose_did:
+            for s, op in enumerate(self.ops):
+                did = did * np.int64(op.state.did_domain) + op.state.did.data[entries[s]]
+        sink = None
+        if "vismask" in res:
+            sink = (res["vismask"][keep], res["emask"][keep], res["slots"])
+        return cost, out_cols, bits, did, sink
 
     def _agg_fold_cohort(
         self, engine, ck, ms: List[Member], needed, cols, bits: np.ndarray,
@@ -1057,7 +1300,9 @@ class Pipeline:
                             lens_fused = True
                             engine.counters["kernel_lens_probes"] += 1
                 if not lens_fused:
-                    probe_idx, entry_idx = backend.probe(op.state, keycodes)
+                    probe_idx, entry_idx = _backend_probe(
+                        backend, op.state, keycodes, engine.counters
+                    )
             else:
                 probe_idx, entry_idx = op.state.probe(keycodes)
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
@@ -1153,7 +1398,9 @@ class Pipeline:
                 break
             keycodes = encode_keys(mcols, op.probe_attrs)
             if backend is not None:
-                probe_idx, entry_idx = backend.probe(op.state, keycodes)
+                probe_idx, entry_idx = _backend_probe(
+                    backend, op.state, keycodes, engine.counters
+                )
             else:
                 probe_idx, entry_idx = op.state.probe(keycodes)
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)

@@ -84,6 +84,11 @@ _EMPTY_PAIR = (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
 #: is cheaper than the incremental machinery's fixed overheads (§8).
 DIRECT_PROBE_MAX = 32768
 
+#: Mark-dirty-log cap (DESIGN.md §13): past this many logged re-ORed entry
+#: ids the log compacts away and bumps its epoch — one mirror regather then
+#: beats replaying an unbounded patch list.
+MARK_LOG_LIMIT = 1 << 16
+
 
 def _bincount_segment_sum(gids, values, n_groups):
     if values is None:
@@ -310,6 +315,20 @@ class SharedHashBuildState:
         self.rows_inserted = 0
         self.rows_marked = 0
 
+        # device-residency hook (DESIGN.md §13): entry ids whose packed
+        # vis/emask words were re-ORed after their initial insert. Device
+        # mirrors patch exactly these entries instead of regathering the
+        # whole SoA; when the log would outgrow MARK_LOG_LIMIT it is
+        # compacted away and the epoch bump tells consumers to regather
+        # once. Appends need no log — mirrors track them by entry count.
+        self.mark_log = GrowArray(np.int64)
+        self.mark_log_epoch = 0
+        # detach() clears a slot's bit across ALL vis words without going
+        # through insert_or_mark — neither rows_marked nor the mark log sees
+        # it. The epoch below is the mirrors' staleness signal for that bulk
+        # clear (bump -> consumers regather once).
+        self.vis_epoch = 0
+
     # -- lifecycle guards ----------------------------------------------------
     def _check_live(self) -> None:
         """Eviction-vs-lens soundness (§10): an evicted state's fragments
@@ -425,7 +444,18 @@ class SharedHashBuildState:
         else:
             ids, sel = self._sharded_did_resolve(dids, keycodes, n0)
         n_inserted = len(sel)
-        n_marked = int((ids < n0).sum())
+        marked = ids < n0
+        n_marked = int(marked.sum())
+        if n_marked:
+            if n_marked > MARK_LOG_LIMIT:
+                # pathological batch: never logged, consumers regather once
+                self.mark_log = GrowArray(np.int64)
+                self.mark_log_epoch += 1
+            else:
+                if self.mark_log.n + n_marked > MARK_LOG_LIMIT:
+                    self.mark_log = GrowArray(np.int64)
+                    self.mark_log_epoch += 1
+                self.mark_log.append(ids[marked])
         if n_inserted:
             self.did.append(dids[sel])
             self.keycode.append(keycodes[sel])
@@ -637,6 +667,9 @@ class SharedHashBuildState:
         if slot is not None and self.vis.n:
             v = self.vis.data
             v &= ~(np.uint64(1) << np.uint64(slot))
+            # bulk mutation outside insert_or_mark: invalidate device/host
+            # visibility mirrors stamped on (rows_inserted, rows_marked)
+            self.vis_epoch += 1
         self.slots.release(qid)
         self.grants.pop(qid, None)
 

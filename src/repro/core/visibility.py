@@ -141,6 +141,24 @@ class SlotAllocator:
         return list(self._slot_of)
 
 
+def split_words(words: np.ndarray):
+    """Split packed uint64 words into (lo, hi) uint32 halves.
+
+    The device data plane (DESIGN.md §13) carries every 64-bit lens /
+    ownership / provenance word as two uint32 lanes — TPU-native width, no
+    64-bit integer support required in-kernel — so the full 64-slot
+    ``SlotAllocator`` space fits the kernel path."""
+    w = np.asarray(words, dtype=np.uint64)
+    lo = (w & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (w >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def join_words(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`split_words`."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+
+
 def bit_of(mask: np.ndarray, slot: int) -> np.ndarray:
     """Extract one query's visibility bit from a packed mask array."""
     return (mask >> np.uint64(slot)) & np.uint64(1) != 0

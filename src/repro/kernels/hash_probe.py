@@ -168,6 +168,152 @@ def hash_probe_lens_multi(
     return found[:n], vis[:n]
 
 
+def _probe_lens64_kernel(
+    probe_ref, tkeys_ref, tentry_ref, evlo_ref, evhi_ref, qmask_ref, out_ref
+):
+    tkeys = tkeys_ref[...]
+    tentry = tentry_ref[...]
+    evlo = evlo_ref[...]
+    evhi = evhi_ref[...]
+    qlo = qmask_ref[0]
+    qhi = qmask_ref[1]
+    cap_mask = jnp.int32(tkeys.shape[0] - 1)
+    keys = probe_ref[...]
+    pos = _hash(keys, cap_mask)
+    found = jnp.full(keys.shape, -1, jnp.int32)
+    done = jnp.zeros(keys.shape, jnp.bool_)
+
+    def step(_, carry):
+        pos, found, done = carry
+        slot_keys = tkeys[pos]
+        hit = (slot_keys == keys) & ~done
+        empty = (slot_keys == jnp.int32(EMPTY)) & ~done
+        # 64-slot lens: the visibility word lives entry-indexed (split into
+        # uint32 halves), so a table rebuild never touches the mirror
+        entry = jnp.where(hit, tentry[pos], 0)
+        vis = ((evlo[entry] & qlo) | (evhi[entry] & qhi)) != 0
+        found = jnp.where(hit & vis, pos, found)
+        done = done | hit | empty
+        pos = (pos + 1) & cap_mask
+        return pos, found, done
+
+    _, found, _ = jax.lax.fori_loop(0, MAX_PROBE, step, (pos, found, done))
+    out_ref[...] = found
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_probe_lens64(
+    probe_keys: jnp.ndarray,  # [N] int32
+    table_keys: jnp.ndarray,  # [T] int32, power-of-two T, EMPTY sentinel
+    table_entry: jnp.ndarray,  # [T] int32 slot -> entry index
+    evis_lo: jnp.ndarray,  # [E] uint32 entry-indexed visibility low words
+    evis_hi: jnp.ndarray,  # [E] uint32 entry-indexed visibility high words
+    query_mask: jnp.ndarray,  # [2] uint32 (lo, hi) lens mask
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Single-query fused-lens probe over the full 64-slot space
+    (DESIGN.md §13): visibility words are entry-indexed uint32 pairs, so
+    any slot 0..63 resolves in-kernel and rebuilds leave the mirror
+    untouched. Returns the matched table slot per probe key (-1 = no
+    visible match)."""
+    n = probe_keys.shape[0]
+    pad = (-n) % BLOCK_N
+    pk = jnp.pad(probe_keys, (0, pad), constant_values=jnp.int32(EMPTY))
+    grid = (pk.shape[0] // BLOCK_N,)
+    out = pl.pallas_call(
+        _probe_lens64_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec(table_keys.shape, lambda i: (0,)),
+            pl.BlockSpec(table_entry.shape, lambda i: (0,)),
+            pl.BlockSpec(evis_lo.shape, lambda i: (0,)),
+            pl.BlockSpec(evis_hi.shape, lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(pk.shape, jnp.int32),
+        interpret=interpret,
+    )(pk, table_keys, table_entry, evis_lo, evis_hi, query_mask)
+    return out[:n]
+
+
+def _probe_multi64_kernel(
+    probe_ref, tkeys_ref, tentry_ref, evlo_ref, evhi_ref,
+    out_slot_ref, out_lo_ref, out_hi_ref,
+):
+    tkeys = tkeys_ref[...]
+    tentry = tentry_ref[...]
+    evlo = evlo_ref[...]
+    evhi = evhi_ref[...]
+    cap_mask = jnp.int32(tkeys.shape[0] - 1)
+    keys = probe_ref[...]
+    pos = _hash(keys, cap_mask)
+    found = jnp.full(keys.shape, -1, jnp.int32)
+    done = jnp.zeros(keys.shape, jnp.bool_)
+
+    def step(_, carry):
+        pos, found, done = carry
+        slot_keys = tkeys[pos]
+        hit = (slot_keys == keys) & ~done
+        empty = (slot_keys == jnp.int32(EMPTY)) & ~done
+        found = jnp.where(hit, pos, found)
+        done = done | hit | empty
+        pos = (pos + 1) & cap_mask
+        return pos, found, done
+
+    _, found, _ = jax.lax.fori_loop(0, MAX_PROBE, step, (pos, found, done))
+    matched = found >= 0
+    entry = jnp.where(matched, tentry[jnp.where(matched, found, 0)], 0)
+    out_slot_ref[...] = found
+    out_lo_ref[...] = jnp.where(matched, evlo[entry], jnp.uint32(0))
+    out_hi_ref[...] = jnp.where(matched, evhi[entry], jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_probe_lens_multi64(
+    probe_keys: jnp.ndarray,  # [N] int32
+    table_keys: jnp.ndarray,  # [T] int32, power-of-two T, EMPTY sentinel
+    table_entry: jnp.ndarray,  # [T] int32 slot -> entry index
+    evis_lo: jnp.ndarray,  # [E] uint32 entry-indexed visibility low words
+    evis_hi: jnp.ndarray,  # [E] uint32 entry-indexed visibility high words
+    *,
+    interpret: bool = True,
+):
+    """Multi-member probe returning the full uint64 lens word as (lo, hi)
+    uint32 halves (DESIGN.md §13): like ``hash_probe_lens_multi`` but
+    serving all 64 slots from entry-indexed (rebuild-invariant) mirrors.
+    The pair stream is pre-visibility and identical to ``probe``."""
+    n = probe_keys.shape[0]
+    pad = (-n) % BLOCK_N
+    pk = jnp.pad(probe_keys, (0, pad), constant_values=jnp.int32(EMPTY))
+    grid = (pk.shape[0] // BLOCK_N,)
+    found, wlo, whi = pl.pallas_call(
+        _probe_multi64_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec(table_keys.shape, lambda i: (0,)),
+            pl.BlockSpec(table_entry.shape, lambda i: (0,)),
+            pl.BlockSpec(evis_lo.shape, lambda i: (0,)),
+            pl.BlockSpec(evis_hi.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pk.shape, jnp.int32),
+            jax.ShapeDtypeStruct(pk.shape, jnp.uint32),
+            jax.ShapeDtypeStruct(pk.shape, jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pk, table_keys, table_entry, evis_lo, evis_hi)
+    return found[:n], wlo[:n], whi[:n]
+
+
 def _insert_kernel(keys_ref, tkeys_ref, tentry_ref, ok_ref):
     cap = tkeys_ref.shape[0]
     cap_mask = jnp.int32(cap - 1)

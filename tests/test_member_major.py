@@ -392,7 +392,10 @@ def test_multi_member_kernel_words_match_state():
     s = SharedHashBuildState(1, sig, ("k",), ("x",))
     n = 700
     keys = rng.permutation(20_000)[:n].astype(np.int64)
-    vis = rng.integers(1, 1 << 20, n).astype(np.uint64)
+    # words spanning the FULL 64-slot space: the kernel mirrors are
+    # (lo, hi) uint32 pairs, so high-half bits must round-trip (§13)
+    vis = rng.integers(1, np.iinfo(np.int64).max, n).astype(np.uint64)
+    vis |= np.uint64(1) << rng.integers(32, 64, n).astype(np.uint64)
     s.insert_or_mark(
         keys, keys, {"k": keys.astype(float), "x": keys.astype(float)},
         vis, np.zeros(n, np.uint64),
@@ -408,9 +411,7 @@ def test_multi_member_kernel_words_match_state():
     got = {(int(a), int(b)) for a, b in zip(p_idx, e_idx)}
     want = {(int(a), int(b)) for a, b in zip(rp, re)}
     assert got == want
-    np.testing.assert_array_equal(
-        words, s.vis.data[e_idx] & np.uint64(0xFFFFFFFF)
-    )
+    np.testing.assert_array_equal(words, s.vis.data[e_idx])
     assert backend.stats()["kernel_multi_probes"] == 1
 
 

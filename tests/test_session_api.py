@@ -268,6 +268,12 @@ def test_stats_expose_data_plane_counters(db):
         "fused_vis_rows",
         "fused_stage_filter_rows",
         "fused_sink_rows",
+        "kernel_chain_launches",
+        "fallback_probes_grants",
+        "fallback_probes_slot_limit",
+        "fallback_probes_keyrange",
+        "fallback_probes_capacity",
+        "fallback_probes_predicate",
         "agg_cohort_rows",
         "overflow_members",
         "partition_merges",
