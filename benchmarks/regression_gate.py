@@ -50,7 +50,7 @@ def _ref_block(ref: Dict, bench: str) -> Dict:
 
 
 def bench_module(bench: str) -> str:
-    return {"core": "microbench", "members": "member_sweep"}[bench]
+    return {"core": "microbench", "members": "member_sweep", "mesh": "mesh_sweep"}[bench]
 
 
 def _geomean(vals: List[float]) -> float:
@@ -143,18 +143,140 @@ def gate_members(fresh: Dict, ref: Dict, tol: float) -> List[str]:
     return failures
 
 
-GATES = {"core": gate_core, "members": gate_members}
+def _graft_speedup_at_max_shards(block: Dict):
+    rows = [
+        r
+        for r in block.get("throughput", [])
+        if r["mode"] == "graft" and r.get("speedup_vs_1shard")
+    ]
+    if not rows:
+        return None, None
+    top = max(rows, key=lambda r: r["data_shards"])
+    return top["data_shards"], top["speedup_vs_1shard"]
+
+
+def gate_mesh(fresh: Dict, ref: Dict, tol: float) -> List[str]:
+    """Mesh parity is binary (bit-identity has no tolerance); the modeled
+    graft speedup at the largest shard count is deterministic under the
+    virtual clocks, so it must stay within ``tol`` of the reference."""
+    failures = []
+    ref_block = _ref_block(ref, "mesh")
+    for flag in ("parity_all_modes", "explain_per_shard_ok"):
+        ok = bool(fresh.get(flag))
+        print(f"mesh  {flag:<22} {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(f"mesh: {flag} is false — determinism contract broken")
+    for row in fresh.get("device_plane", []):
+        d = row["data_shards"]
+        for k in (
+            "exchange_routing_ok",
+            "overflow_detected_and_recovered",
+            "overflow_raises",
+            "chain_parity",
+            "db_plane_ok",
+        ):
+            if not row.get(k):
+                failures.append(f"mesh: device plane shards={d}: {k} is false")
+    d_ref, sp_ref = _graft_speedup_at_max_shards(ref_block)
+    d_fresh, sp_fresh = _graft_speedup_at_max_shards(fresh)
+    if sp_ref is None or sp_fresh is None or d_ref != d_fresh:
+        failures.append(
+            f"mesh: graft speedup rows missing or shard counts differ "
+            f"(ref {d_ref}, fresh {d_fresh})"
+        )
+    else:
+        floor = (1.0 - tol) * sp_ref
+        ok = sp_fresh >= floor
+        print(
+            f"mesh  graft x{sp_fresh:.3f} at {d_fresh} shards "
+            f"(ref x{sp_ref:.3f}, floor x{floor:.3f}) {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"mesh: graft speedup {sp_fresh}x at {d_fresh} shards "
+                f"< floor {floor:.3f}x (ref {sp_ref}x)"
+            )
+    return failures
+
+
+GATES = {"core": gate_core, "members": gate_members, "mesh": gate_mesh}
+
+# -- committed-artifact gate --------------------------------------------------
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def gate_committed() -> List[str]:
+    """Structural gate over every committed ``BENCH_*.json``: each artifact
+    must parse, carry the bench/version header, full-size artifacts of a
+    gated family must embed their ``smoke_ref``, and any ``acceptance``
+    block must meet its own recorded target. Keeps a stale or hand-edited
+    artifact from silently passing CI."""
+    failures = []
+    arts = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not arts:
+        return ["committed: no BENCH_*.json artifacts found at repo root"]
+    for path in arts:
+        name = path.name
+        try:
+            obj = _load(path)
+        except Exception as e:
+            failures.append(f"committed: {name} unreadable: {e}")
+            continue
+        if "bench" not in obj:
+            failures.append(f"committed: {name} missing bench header")
+            continue
+        family = {"BENCH_core.json": "core", "BENCH_members.json": "members",
+                  "BENCH_mesh.json": "mesh"}.get(name)
+        if family and not obj.get("smoke") and "smoke_ref" not in obj:
+            failures.append(
+                f"committed: {name} is full-size but has no smoke_ref block — "
+                f"regenerate with python -m benchmarks.{bench_module(family)}"
+            )
+        acc = obj.get("acceptance")
+        ok = True
+        if isinstance(acc, dict):
+            for k, v in acc.items():
+                if k.endswith("_ok") or k in ("parity_all_modes",):
+                    if v is not True:
+                        ok = False
+                        failures.append(f"committed: {name} acceptance {k} is {v!r}")
+            if acc.get("target_applies") and acc.get("target_met") is not True:
+                ok = False
+                failures.append(
+                    f"committed: {name} acceptance target not met: "
+                    f"{acc.get('graft_speedup_8shards')}x < {acc.get('target')}x"
+                )
+        print(f"committed {name:<22} {obj['bench']:<24} "
+              f"{'smoke' if obj.get('smoke') else 'full '} "
+              f"{'ok' if ok else 'FAIL'}")
+    return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench", choices=sorted(GATES), help="which artifact family")
-    ap.add_argument("--fresh", type=Path, required=True, help="fresh smoke-run JSON")
-    ap.add_argument("--ref", type=Path, required=True, help="committed reference JSON")
+    ap.add_argument("bench", choices=sorted(GATES) + ["committed"],
+                    help="artifact family, or 'committed' to structurally "
+                         "gate every BENCH_*.json at the repo root")
+    ap.add_argument("--fresh", type=Path, help="fresh smoke-run JSON")
+    ap.add_argument("--ref", type=Path, help="committed reference JSON")
     ap.add_argument("--tolerance", type=float, default=TOLERANCE,
                     help="allowed fractional regression per op (default 0.25)")
     args = ap.parse_args(argv)
 
+    if args.bench == "committed":
+        failures = gate_committed()
+        if failures:
+            print(f"\nFAIL: {len(failures)} committed-artifact problem(s):",
+                  file=sys.stderr)
+            for f in failures:
+                print(f"  - {f}", file=sys.stderr)
+            return 1
+        print("\nOK: every committed BENCH_*.json artifact is structurally sound")
+        return 0
+
+    if args.fresh is None or args.ref is None:
+        ap.error("--fresh and --ref are required unless bench is 'committed'")
     fresh = _load(args.fresh)
     ref = _load(args.ref)
     if not fresh.get("smoke"):

@@ -228,6 +228,10 @@ class PallasBackend:
         self._ref = ReferenceBackend()
         # donated in-place mirror patches (CPU jax warns on donation)
         self._donate = jax.default_backend() != "cpu"
+        # mesh execution (§14): when a Session pins a data mesh here, the
+        # fused stage chain launches shard-locally inside shard_map on it
+        # (None = plain single-device launches)
+        self.mesh = None
         # Probe tables keyed weakly by the state OBJECT (state_ids are
         # engine-local, so an id key would collide when one backend instance
         # is reused across sessions); released states evict automatically.
@@ -549,7 +553,9 @@ class PallasBackend:
                 dev["sink"] = sp
             arrays += list(sp)
         spec = (tuple(spec_stages), sink is not None)
-        out = self._chain_launch(spec, tuple(arrays), interpret=self.interpret)
+        out = self._chain_launch(
+            spec, tuple(arrays), interpret=self.interpret, mesh=self.mesh
+        )
         n_stages = len(stages)
         res = {
             "bits": join_words(np.asarray(out[0])[:n], np.asarray(out[1])[:n]),

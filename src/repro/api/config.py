@@ -24,6 +24,31 @@ RETENTION_POLICIES = ("refcount", "epoch")
 ADMISSION_POLICIES = ("always", "adaptive")
 
 
+def _mesh_data_size(spec) -> int:
+    """Data-axis size a ``mesh`` spec resolves to, duck-typed so config
+    validation never imports jax: 'smoke' -> 1, int n -> n, Mesh ->
+    mesh.shape['data']."""
+    if isinstance(spec, str):
+        if spec == "smoke":
+            return 1
+        raise ValueError(
+            f"unknown mesh spec {spec!r}; expected 'smoke', an int, or a Mesh"
+        )
+    if isinstance(spec, bool):
+        raise ValueError(f"mesh must be 'smoke', an int, or a Mesh, got {spec!r}")
+    if isinstance(spec, int):
+        if spec < 1:
+            raise ValueError(f"mesh data-axis size must be >= 1, got {spec}")
+        return spec
+    shape = getattr(spec, "shape", None)
+    try:
+        return int(shape["data"])
+    except (TypeError, KeyError):
+        raise ValueError(
+            f"mesh {spec!r} has no 'data' axis — the engine shards state over 'data'"
+        ) from None
+
+
 def _default_workers() -> int:
     """Session default worker count; the CI matrix leg sets
     ``GRAFTDB_TEST_WORKERS=4`` to run the whole suite partition-parallel."""
@@ -82,6 +107,13 @@ class EngineConfig:
       ``workers=1, partitions=1`` is byte-identical to the seed engine.
     * ``max_sleep_s`` — WallClock sleep cap: longer idle gaps are skipped
       virtually instead of blocking (None = sleep the full gap).
+    * ``mesh`` — mesh execution over the 'data' axis (DESIGN.md §14):
+      ``'smoke'`` (single-device mesh, production axis names), an int N
+      (N-way data mesh; needs N visible devices), or a jax Mesh with a
+      'data' axis. Pins ``partitions`` and ``workers`` to the data-axis
+      size P — state shards, worker clocks, and devices map one-to-one —
+      and charges the per-stage exchange cost model term. ``None``
+      (default) is the single-host engine, byte-identical to prior PRs.
     * ``member_major`` — the fused packed-mask morsel pipeline (DESIGN.md
       §11): per-morsel data-plane cost independent of the folded member
       count. False selects the retained per-member loops — the
@@ -108,6 +140,7 @@ class EngineConfig:
     partitions: Optional[int] = None
     max_sleep_s: Optional[float] = 0.25
     member_major: bool = True
+    mesh: Union[None, str, int, object] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -192,6 +225,31 @@ class EngineConfig:
             raise ValueError(
                 f"partitions must be a positive int or None (= workers), got {self.partitions!r}"
             )
+        if self.mesh is not None:
+            p = _mesh_data_size(self.mesh)  # validates the spec shape
+            if self.partitions is not None and self.partitions != p:
+                raise ValueError(
+                    f"mesh execution pins partitions to the data-axis size "
+                    f"({p}); got partitions={self.partitions}. Drop the "
+                    "partitions override or match the mesh shape."
+                )
+            object.__setattr__(self, "partitions", p)
+            if self.workers != p:
+                if self.workers == _default_workers():
+                    # the worker count came from the env default, not an
+                    # explicit request: pin it to the device count
+                    object.__setattr__(self, "workers", p)
+                else:
+                    raise ValueError(
+                        f"mesh execution pins workers to the data-axis size "
+                        f"({p}) — one logical worker clock per device; got "
+                        f"workers={self.workers}"
+                    )
+            if p > 1 and self._wall_clocked():
+                raise ValueError(
+                    "mesh execution with data shards > 1 requires a virtual "
+                    "clock: use clock='work' or a clock factory"
+                )
         if self.workers > 1 and self._wall_clocked():
             # N logical workers advance N independent virtual clocks; a
             # wall clock (class, instance, or one shared instance) cannot
@@ -258,6 +316,15 @@ class EngineConfig:
         from .backends import resolve_backend
 
         return resolve_backend(self.backend)
+
+    def make_mesh(self):
+        """Resolve the ``mesh`` spec to a jax Mesh (None when unset).
+        Imports jax lazily — mesh-less sessions never touch device state."""
+        if self.mesh is None:
+            return None
+        from ..launch.mesh import resolve_mesh
+
+        return resolve_mesh(self.mesh)
 
     def make_admission(self):
         """Admission controller for the session's Runner (None = admit all)."""

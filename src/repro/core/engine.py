@@ -85,6 +85,12 @@ DEFAULT_COST_MODEL: Dict[str, float] = {
     # SoA restore + amortized derived-index rebuild — far below the
     # scan+filter+insert cost of re-producing the same entry
     "rehydrate": 60e-9,
+    # per-row cost of the bucketed all_to_all repartition (§14): charged at
+    # every probe stage on a >1-device mesh — the dense [P, C, W] exchange
+    # tensor transits the interconnect once per stage regardless of how
+    # many rows stay resident. Zero-device-mesh (mesh=None) sessions never
+    # pay it.
+    "exchange": 40e-9,
 }
 
 
@@ -124,11 +130,15 @@ class GraftEngine:
         member_major: bool = True,
         reuse_cache_budget: Optional[int] = None,
         reuse_disk_budget: Optional[int] = None,
+        mesh_plan=None,
     ):
         self.db = db
         self.mode = MODES[mode]
         self.morsel_size = morsel_size
         self.cost_model = dict(cost_model or DEFAULT_COST_MODEL)
+        # cost models predating §14 lack the exchange term; default it so a
+        # mesh session over an older calibrated dict still charges it
+        self.cost_model.setdefault("exchange", DEFAULT_COST_MODEL["exchange"])
         self.zone_maps = zone_maps  # beyond-paper morsel skipping (§Perf)
         # Data-plane backend (api/backends.py ExecutionBackend); None keeps
         # the built-in NumPy paths (state.probe / np.bincount reductions).
@@ -139,6 +149,16 @@ class GraftEngine:
         if not isinstance(partitions, int) or partitions < 1:
             raise ValueError(f"partitions must be a positive int, got {partitions!r}")
         self.n_partitions = partitions
+        # Mesh execution (DESIGN.md §14): a core.meshexec.MeshPlan mapping
+        # the P key-partition shards onto 'data'-axis devices one-to-one.
+        # None = single-host engine (no exchange cost, no device routing).
+        if mesh_plan is not None and mesh_plan.n_shards != partitions:
+            raise ValueError(
+                f"mesh_plan has {mesh_plan.n_shards} data shard(s) but the "
+                f"engine was built with partitions={partitions} — state "
+                "shards and devices must map one-to-one"
+            )
+        self.mesh_plan = mesh_plan
         # Shared-state lifecycle (DESIGN.md §10): 'refcount' drops state at
         # zero refs (paper §6.1); 'epoch' retires it for later grafts under
         # a memory-budgeted evictor.
@@ -185,6 +205,12 @@ class GraftEngine:
             "overflow_members",
             "partition_merges",
             "partition_probe_merges",
+            # mesh execution (§14) — rows crossing the bucketed all_to_all
+            # exchange per probe stage, and rows a device exchange ever
+            # failed to place in a bucket (always recovered by regrowing
+            # capacity — see relational.distributed.exchange_by_key)
+            "mesh_exchange_rows",
+            "bucket_overflow_rows",
             # lifecycle + admission counters (§10) — present (zero) from the
             # start so stats dicts stay shape-stable
             "evictions",
@@ -548,6 +574,9 @@ class GraftEngine:
         out["retained_states"] = len(self.lifecycle.retired)
         out["retention"] = self.retention
         out["cached_artifacts"] = len(self.reuse.store) if self.reuse is not None else 0
+        out["mesh_data_shards"] = (
+            self.mesh_plan.n_shards if self.mesh_plan is not None else 0
+        )
         return out
 
 

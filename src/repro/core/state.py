@@ -387,6 +387,46 @@ class SharedHashBuildState:
         total, done = self.extent_parts.get(eid, (0, set()))
         return (len(done), total)
 
+    # -- device views (DESIGN.md §14) ----------------------------------------
+    def device_frontiers(self) -> Dict[int, Tuple[int, int]]:
+        """Per-extent delivery frontiers keyed by extent id. Under mesh
+        execution scan partitions ARE devices, so this is the replicated
+        control plane's per-device commit view of every producer extent —
+        `complete_extent_partition` committed per shard."""
+        return {eid: self.extent_partition_frontier(eid) for eid in self.extents}
+
+    def shard_entry_counts(self, n_shards: Optional[int] = None) -> np.ndarray:
+        """Entries resident on each key shard — the device layout of the
+        entry SoA under §14 (shard p of the mesh owns exactly the entries
+        whose ``key_partition`` is p; entry ids stay global and
+        P-independent)."""
+        P = self.n_partitions if n_shards is None else int(n_shards)
+        P = max(1, P)
+        n = len(self.keycode.data)
+        if n == 0:
+            return np.zeros(P, np.int64)
+        parts = key_partition(self.keycode.data, P)
+        return np.bincount(parts, minlength=P).astype(np.int64)
+
+    def device_layout(self) -> Dict:
+        """Replicated summary of this state's per-device residency: entry
+        counts and (proportional) bytes per shard, plus the frontier view."""
+        counts = self.shard_entry_counts()
+        total = int(counts.sum())
+        nb = self.nbytes()
+        bytes_by = (
+            [int(nb * c / total) for c in counts] if total else [0] * len(counts)
+        )
+        return {
+            "state_id": self.state_id,
+            "n_shards": int(self.n_partitions),
+            "entries_by_device": counts.tolist(),
+            "bytes_by_device": bytes_by,
+            "extent_frontiers": {
+                eid: list(f) for eid, f in self.device_frontiers().items()
+            },
+        }
+
     def coverage(self) -> Coverage:
         """Coverage metadata = union of completed extents (§4.3)."""
         return Coverage(c for c, done in self.extents.values() if done and c is not None)

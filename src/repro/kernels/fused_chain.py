@@ -397,7 +397,54 @@ def _chain_fn(spec, block_n, interpret):
     return run
 
 
-def chain_launch(spec, arrays, *, block_n=None, interpret=True):
+@functools.lru_cache(maxsize=None)
+def _chain_fn_sharded(spec, block_n, interpret, mesh, axis_name):
+    """Shard-local chain launch (DESIGN.md §14): row inputs partitioned
+    over the mesh's data axis, state mirrors replicated, one pallas launch
+    per shard inside shard_map. Stats/slot-count outputs are additive over
+    row shards and psum'd so every shard (and the host) sees the global
+    totals; row outputs stay sharded. Row buffers are donated off-CPU —
+    the packed words and keys are dead after the launch, so the device
+    reuses their memory for the outputs."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    stages, sink = spec
+    n_stages = len(stages)
+    kinds = input_kinds(spec)
+    inner = _chain_fn(spec, block_n, interpret)
+    row = PartitionSpec(axis_name)
+    rep = PartitionSpec()
+    stats_i = 2 + n_stages
+
+    def local(*arrays):
+        out = list(inner(*arrays))
+        out[stats_i] = jax.lax.psum(out[stats_i], axis_name)
+        out[stats_i + 1] = jax.lax.psum(out[stats_i + 1], axis_name)
+        return tuple(out)
+
+    n_out = 2 + n_stages + 2 + (4 if sink else 0)
+    out_specs = [row, row] + [row] * n_stages + [rep, rep]
+    if sink:
+        out_specs += [row] * 4
+    assert len(out_specs) == n_out
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=tuple(row if k == "row" else rep for k in kinds),
+        out_specs=tuple(out_specs),
+        check_rep=False,
+    )
+    donate = ()
+    if jax.default_backend() != "cpu":
+        # mirror the scatter-path donation gating: CPU jax warns and
+        # ignores donation, so only donate on real accelerators
+        donate = tuple(i for i, k in enumerate(kinds) if k == "row")
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def chain_launch(spec, arrays, *, block_n=None, interpret=True, mesh=None,
+                 axis_name="data"):
     """Dispatch one fused stage-chain launch.
 
     ``arrays`` must follow :func:`input_kinds`'s traversal, with every
@@ -407,5 +454,13 @@ def chain_launch(spec, arrays, *, block_n=None, interpret=True):
     ``(bits_lo, bits_hi, entry_0..entry_{S-1}, stats[S,3], slots[64]``
     ``[, sink_vis_lo, sink_vis_hi, sink_em_lo, sink_em_hi])``.
     ``stats[s]`` is ``(alive_in, matched, matched_visible)`` for stage s.
-    """
-    return _chain_fn(spec, block_n, interpret)(*arrays)
+
+    With ``mesh`` set, the launch runs shard-locally inside shard_map over
+    the mesh's ``axis_name`` axis (§14): row arrays must be divisible by
+    the axis size (the power-of-two padding guarantees this for power-of-
+    two meshes), row outputs come back in shard order, and stats/slot
+    counts are global. A 1-device mesh is bit-identical to the unsharded
+    launch."""
+    if mesh is None:
+        return _chain_fn(spec, block_n, interpret)(*arrays)
+    return _chain_fn_sharded(spec, block_n, interpret, mesh, axis_name)(*arrays)

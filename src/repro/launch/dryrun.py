@@ -234,42 +234,15 @@ def save_results(res: list) -> None:
 
 def run_db_plane(multi_pod: bool) -> dict:
     """Lower+compile the distributed GraftDB data plane (shard_map
-    partitioned hash join + aggregate) on the production mesh — proves the
-    paper's engine itself shards across the pod (DESIGN.md §4)."""
-    import jax.numpy as jnp
+    partitioned hash join + aggregate + shard-local fused chain) on the
+    production mesh — proves the paper's engine itself shards across the
+    pod (DESIGN.md §4/§14). Delegates to ``launch.db_plane`` so the
+    validated-record path CI runs on the smoke mesh is the same code."""
+    from .db_plane import db_plane_record
 
-    from ..relational.distributed import make_partitioned_aggregate, make_partitioned_join
-
-    t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    nd = mesh.shape["data"] * (mesh.shape.get("pod", 1) if multi_pod else 1)
-    rec = {"arch": "graftdb-dataplane", "shape": "join_64M", "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok"}
-    try:
-        rows = 1 << 26  # 64M rows global
-        join = make_partitioned_join(mesh, build_width=2, probe_width=3, capacity=2 * rows // mesh.shape["data"] // max(mesh.shape["data"], 1))
-        sds = jax.ShapeDtypeStruct
-        bk = sds((rows,), jnp.int64)
-        bv = sds((rows, 2), jnp.float32)
-        pk = sds((rows,), jnp.int64)
-        pv = sds((rows, 3), jnp.float32)
-        lowered = join.lower(bk, bv, pk, pv)
-        compiled = lowered.compile()
-        from .hlo_analysis import analyze
-
-        st = analyze(compiled.as_text())
-        rec["hlo_stats"] = {
-            "flops_per_device": st.flops,
-            "mem_bytes_per_device": st.mem_bytes,
-            "coll_bytes_per_device": st.coll_bytes,
-            "coll_count": st.coll_count,
-        }
-        agg = make_partitioned_aggregate(mesh, n_groups=256, width=4)
-        agg.lower(sds((rows,), jnp.int32), sds((rows, 4), jnp.float32)).compile()
-        rec["aggregate"] = "ok"
-    except Exception as e:
-        rec["status"] = "fail"
-        rec["error"] = f"{type(e).__name__}: {e}"
-    rec["total_s"] = round(time.time() - t0, 1)
+    rec = db_plane_record(mesh, rows=1 << 26)  # 64M rows global
+    rec["mesh"] = "2x16x16" if multi_pod else "16x16"
     return rec
 
 
@@ -286,14 +259,22 @@ def main():
     if args.db_plane:
         results = load_results()
         pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+        from .db_plane import validate_db_plane_record
+
         for mp in pods:
             rec = run_db_plane(mp)
             key = (rec["arch"], rec["shape"], rec["mesh"])
             results = [r for r in results if (r["arch"], r["shape"], r["mesh"]) != key]
             results.append(rec)
             save_results(results)
-            print(f"db-plane {rec['mesh']}: {rec['status']} "
-                  f"coll={rec.get('hlo_stats',{}).get('coll_count')}", flush=True)
+            try:
+                validate_db_plane_record(rec)
+                valid = "valid"
+            except ValueError as e:
+                valid = f"INVALID ({e})"
+            print(f"db-plane {rec['mesh']}: {rec['status']} ({valid}) "
+                  f"coll={rec.get('hlo_stats',{}).get('coll_count')} "
+                  f"chain={rec.get('chain')}", flush=True)
         return
 
     todo = []

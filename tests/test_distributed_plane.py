@@ -1,6 +1,6 @@
 """Distributed relational data plane: numerical correctness on the
 single-device mesh (the production-mesh lower+compile is exercised by the
-dry-run's --db-plane pass)."""
+dry-run's --db-plane pass, shared with tests via launch.db_plane)."""
 
 import numpy as np
 import jax.numpy as jnp
@@ -9,10 +9,28 @@ import pytest
 from repro.launch.mesh import make_smoke_mesh
 from repro.relational.distributed import (
     FILL,
+    BucketOverflowError,
+    exchange_by_key,
     make_partitioned_aggregate,
     make_partitioned_join,
+    pad_groups,
     pad_partition,
 )
+
+
+def _run_join(mesh, bk, bv, pk, pv, capacity=1024, pad_shards=None):
+    """Pad + run the partitioned join; returns (out, hit, out_keys, overflow)."""
+    n = pad_shards if pad_shards is not None else mesh.shape["data"]
+    jbk, jbv, _ = pad_partition(bk, bv, n)
+    jpk, jpv, _ = pad_partition(pk, pv, n)
+    join = make_partitioned_join(mesh, bv.shape[1], pv.shape[1], capacity=capacity)
+    out, hit, out_keys, overflow = join(jbk, jbv, jpk, jpv)
+    return (
+        np.asarray(out),
+        np.asarray(hit),
+        np.asarray(out_keys),
+        int(overflow),
+    )
 
 
 def test_partitioned_join_matches_numpy():
@@ -24,11 +42,8 @@ def test_partitioned_join_matches_numpy():
     pv = rng.normal(size=(npr, 3)).astype(np.float32)
 
     mesh = make_smoke_mesh()
-    jbk, jbv = pad_partition(bk, bv, mesh.shape["data"])
-    jpk, jpv = pad_partition(pk, pv, mesh.shape["data"])
-    join = make_partitioned_join(mesh, 2, 3, capacity=1024)
-    out, hit, out_keys = join(jbk, jbv, jpk, jpv)
-    out, hit, out_keys = np.asarray(out), np.asarray(hit), np.asarray(out_keys)
+    out, hit, out_keys, overflow = _run_join(mesh, bk, bv, pk, pv)
+    assert overflow == 0
 
     # oracle
     bmap = {int(k): bv[i] for i, k in enumerate(bk)}
@@ -40,20 +55,100 @@ def test_partitioned_join_matches_numpy():
         np.testing.assert_allclose(out[i, 3:], bmap[k], rtol=1e-6)
 
 
-def test_partitioned_join_capacity_drop_is_detectable():
-    """Overflowing a bucket drops rows (documented static-capacity knob);
-    with ample capacity no probe row is lost."""
-    rng = np.random.default_rng(1)
+def test_bucket_overflow_is_counted_never_silent():
+    """Satellite: deliberately overflow a bucket — the join must REPORT the
+    dropped rows through its overflow output instead of silently losing
+    them (pre-fix, hit counts just shrank with no signal)."""
     bk = np.arange(64, dtype=np.int64)
     bv = np.ones((64, 1), np.float32)
     pk = np.arange(64, dtype=np.int64)
     pv = np.ones((64, 1), np.float32)
     mesh = make_smoke_mesh()
-    jbk, jbv = pad_partition(bk, bv, 1)
-    jpk, jpv = pad_partition(pk, pv, 1)
-    join = make_partitioned_join(mesh, 1, 1, capacity=128)
-    _, hit, _ = join(jbk, jbv, jpk, jpv)
-    assert int(np.asarray(hit).sum()) == 64
+    # capacity 16 < 64 rows all hashing to the single shard: 48 build +
+    # 48 probe rows overflow
+    _, hit, _, overflow = _run_join(mesh, bk, bv, pk, pv, capacity=16)
+    assert int(hit.sum()) < 64  # rows really did not fit
+    assert overflow == 2 * (64 - 16)
+    # ample capacity: nothing overflows, nothing is lost
+    _, hit_ok, _, overflow_ok = _run_join(mesh, bk, bv, pk, pv, capacity=128)
+    assert int(hit_ok.sum()) == 64
+    assert overflow_ok == 0
+
+
+def test_exchange_by_key_grows_instead_of_dropping():
+    """Satellite: the host wrapper recovers every overflowed row by
+    regrowing capacity, surfaces the count, and can hard-fail instead."""
+    mesh = make_smoke_mesh()
+    keys = np.arange(1, 101, dtype=np.int64)
+    vals = keys.astype(np.float32)[:, None]
+    rec = exchange_by_key(mesh, keys, vals, capacity=16)
+    assert rec["bucket_overflow_rows"] > 0  # overflow happened...
+    assert rec["attempts"] > 1  # ...and was recovered by regrowing
+    got = np.sort(np.asarray(rec["keys"])[np.asarray(rec["valid"])])
+    np.testing.assert_array_equal(got, keys)  # zero rows lost
+    # payload survived with its key
+    v = np.asarray(rec["values"])[np.asarray(rec["valid"])]
+    np.testing.assert_allclose(np.sort(v[:, 0]), keys.astype(np.float32))
+    with pytest.raises(BucketOverflowError):
+        exchange_by_key(mesh, keys, vals, capacity=16, on_overflow="raise")
+
+
+def test_exchange_by_key_routes_by_engine_partition():
+    """dest= overrides the device hash with the engine's splitmix64
+    key_partition, so exchange placement matches state-shard ownership."""
+    from repro.core.hashindex import key_partition
+
+    mesh = make_smoke_mesh()
+    P = mesh.shape["data"]
+    keys = np.arange(1, 257, dtype=np.int64)
+    dest = key_partition(keys, P)
+    rec = exchange_by_key(mesh, keys, keys.astype(np.float32)[:, None], dest=dest)
+    cap = rec["capacity"]
+    got_k = np.asarray(rec["keys"]).reshape(P, P * cap)
+    got_ok = np.asarray(rec["valid"]).reshape(P, P * cap)
+    for p in range(P):
+        np.testing.assert_array_equal(
+            np.sort(got_k[p][got_ok[p]]), np.sort(keys[dest == p])
+        )
+
+
+@pytest.mark.parametrize("pad_shards", [1, 2, 3, 5, 8])
+def test_pad_partition_round_trip_exact(pad_shards):
+    """Satellite: padding rows carry the FILL sentinel and every shard-local
+    consumer masks them — join results are identical for ANY padding
+    factor (property over n_shards that force padding)."""
+    rng = np.random.default_rng(3)
+    bk = rng.choice(5_000, 150, replace=False).astype(np.int64)
+    bv = rng.normal(size=(150, 2)).astype(np.float32)
+    pk = np.concatenate([bk[:70], rng.choice(5_000, 30).astype(np.int64) + 5_000])
+    pv = rng.normal(size=(100, 3)).astype(np.float32)
+    mesh = make_smoke_mesh()
+    out, hit, out_keys, overflow = _run_join(
+        mesh, bk, bv, pk, pv, pad_shards=pad_shards
+    )
+    assert overflow == 0
+    bmap = {int(k): bv[i] for i, k in enumerate(bk)}
+    assert int(hit.sum()) == 70  # padding contributed zero phantom hits
+    for i in np.flatnonzero(hit):
+        np.testing.assert_allclose(out[i, 3:], bmap[int(out_keys[i])], rtol=1e-6)
+
+
+@pytest.mark.parametrize("pad_shards", [1, 3, 7])
+def test_pad_groups_round_trip_exact(pad_shards):
+    """Satellite: aggregate padding carries the gid=-1 sentinel, masked
+    shard-locally — totals identical for any padding factor."""
+    rng = np.random.default_rng(4)
+    n, g, w = 1000, 16, 4
+    gids = rng.integers(0, g, n).astype(np.int64)
+    vals = rng.normal(size=(n, w)).astype(np.float32)
+    mesh = make_smoke_mesh()
+    agg = make_partitioned_aggregate(mesh, g, w)
+    gp, vp = pad_groups(gids, vals, pad_shards)
+    assert gp.shape[0] % pad_shards == 0
+    got = np.asarray(agg(gp, vp))
+    want = np.zeros((g, w), np.float32)
+    np.add.at(want, gids, vals)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
 def test_partitioned_aggregate_matches_segment_sum():
@@ -63,13 +158,8 @@ def test_partitioned_aggregate_matches_segment_sum():
     vals = rng.normal(size=(n, w)).astype(np.float32)
     mesh = make_smoke_mesh()
     agg = make_partitioned_aggregate(mesh, g, w)
-    per = -(-n // mesh.shape["data"]) * mesh.shape["data"]
-    gp = np.zeros(per, np.int32)
-    vp = np.zeros((per, w), np.float32)
-    gp[:n] = gids
-    vp[:n] = vals
-    got = np.asarray(agg(jnp.asarray(gp), jnp.asarray(vp)))
+    gp, vp = pad_groups(gids, vals, mesh.shape["data"])
+    got = np.asarray(agg(gp, vp))
     want = np.zeros((g, w), np.float32)
     np.add.at(want, gids, vals)
-    # padding rows land in group 0 with zero values -> no effect
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
