@@ -1,0 +1,261 @@
+"""Queued-burst batch-planning sweep (DESIGN.md §15).
+
+An open-loop trace of same-instant q3 bursts — each burst shares a segment
+and spans ascending date predicates, submitted **narrowest first** (the
+greedy FIFO worst case: every narrow member installs its own residual
+producer into state a wider member is about to build anyway). The identical
+trace replays through two legs:
+
+* ``greedy`` — per-arrival grafting (``batch_planning=False``, the pre-§15
+  engine byte for byte);
+* ``batch``  — joint cohort planning (``batch_planning=True``): the widest
+  member admits first, the rest attach fully represented.
+
+Recorded per burst size: modeled graft throughput of both legs and the
+batch/greedy speedup — the acceptance number (>= 1.2x at the largest burst
+size on the full-size run) — plus bit-level guarantees:
+
+* every query of every leg matches the reference executor (canonical row
+  order), and the two legs match each other;
+* ``batch_planning=False`` is deterministic: two runs of one trace produce
+  identical result/counter/clock fingerprints;
+* a singleton trace (burst size 1) under ``batch_planning=True`` is
+  fingerprint-identical to the flag-off engine (the §15 size-1 contract).
+
+Writes ``BENCH_batch.json`` at the repo root; the full run embeds a
+``smoke_ref`` block so ``regression_gate batch`` can gate CI smoke runs.
+
+  PYTHONPATH=src python -m benchmarks.batch_sweep            # full sweep
+  PYTHONPATH=src python -m benchmarks.batch_sweep --smoke    # CI smoke job
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import graftdb
+from graftdb import EngineConfig
+from repro.relational import queries, refexec
+from repro.relational.table import days
+
+from .common import MORSEL, get_db
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+TARGET_SPEEDUP = 1.2
+SEGMENTS = 5  # q3 segments cycle per burst
+
+
+def make_burst_trace(db, n_bursts: int, burst_size: int, gap_s: float = 0.002):
+    """``n_bursts`` same-instant q3 bursts, narrowest date first within each
+    burst. Late base dates keep the orders-build extents large, so the
+    duplicated insert work greedy admission performs is a real fraction of
+    the makespan (the batch win is exactly that duplication). Burst gaps are
+    tiny relative to the work, so the makespan is work-bound, not
+    idle-bound — but strictly positive and distinct per burst, so every
+    burst is its own same-instant cohort."""
+    trace = []
+    # mid-range date: the shared orders build (the work §15 de-duplicates)
+    # covers most of the table, so the greedy leg's duplicated inserts are a
+    # large fraction of per-query cost
+    base = days("1996-06-30")
+    for b in range(n_bursts):
+        t = (b + 1) * gap_s
+        seg = float(b % SEGMENTS)
+        for i in range(burst_size):
+            date = float(base - 2 * (burst_size - 1 - i))  # ascending: widest last
+            trace.append(
+                queries.make_query(
+                    db, "q3", {"segment": seg, "date": date}, arrival=t
+                )
+            )
+    return trace
+
+
+def _rebuild(db, trace):
+    return [
+        queries.make_query(db, q.template, q.params, arrival=q.arrival)
+        for q in trace
+    ]
+
+
+def _canon(res) -> Dict[str, np.ndarray]:
+    keys = sorted(res)
+    order = np.lexsort([np.asarray(res[k]) for k in keys])
+    return {k: np.asarray(res[k])[order] for k in keys}
+
+
+def _canon_equal(a, b) -> bool:
+    ca, cb = _canon(a), _canon(b)
+    if set(ca) != set(cb):
+        return False
+    return all(
+        ca[k].shape == cb[k].shape and np.allclose(ca[k], cb[k], rtol=1e-12, atol=1e-12)
+        for k in ca
+    )
+
+
+def _fingerprint(session, results: List[Dict]) -> str:
+    """Byte-level identity of one run: every result column (canonical row
+    order), every engine counter, and the final clock."""
+    h = hashlib.sha256()
+    for res in results:
+        c = _canon(res)
+        for k in sorted(c):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(c[k]).tobytes())
+    for k in sorted(session.counters):
+        h.update(f"{k}={session.counters[k]!r};".encode())
+    h.update(f"now={session.now!r}".encode())
+    return h.hexdigest()
+
+
+def _run_leg(db, trace, *, batch: bool) -> Tuple[object, List[Dict]]:
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft",
+            morsel_size=MORSEL,
+            workers=1,
+            partitions=1,
+            batch_planning=batch,
+        ),
+    )
+    futs = session.submit_all(trace)
+    session.run()
+    return session, [f.result() for f in futs]
+
+
+def run_sweep(db, burst_sizes: List[int], n_bursts: int) -> Tuple[List[Dict], bool]:
+    rows, parity_all = [], True
+    for size in burst_sizes:
+        trace = make_burst_trace(db, n_bursts, size)
+        refs = [refexec.execute(db, q.plan) for q in trace]
+        sg, rg = _run_leg(db, _rebuild(db, trace), batch=False)
+        sb, rb = _run_leg(db, _rebuild(db, trace), batch=True)
+        parity = all(
+            _canon_equal(a, ref) and _canon_equal(b, ref)
+            for a, b, ref in zip(rg, rb, refs)
+        )
+        parity_all = parity_all and parity
+        tg = len(rg) / sg.now if sg.now > 0 else 0.0
+        tb = len(rb) / sb.now if sb.now > 0 else 0.0
+        rows.append(
+            {
+                "burst_size": size,
+                "n_queries": len(trace),
+                "greedy_elapsed_s": round(sg.now, 6),
+                "batch_elapsed_s": round(sb.now, 6),
+                "greedy_throughput_qps": round(tg, 4),
+                "batch_throughput_qps": round(tb, 4),
+                "speedup": round(tb / tg, 4) if tg > 0 else None,
+                "batch_cohorts": int(sb.counters["batch_cohorts"]),
+                "batch_planned_queries": int(sb.counters["batch_planned_queries"]),
+                "batch_coverage_gain_rows": int(
+                    sb.counters["batch_coverage_gain_rows"]
+                ),
+                "greedy_represented_rows": int(sg.counters["represented_rows"]),
+                "batch_represented_rows": int(sb.counters["represented_rows"]),
+                "parity_vs_ref_and_legs": parity,
+            }
+        )
+        print(
+            f"burst={size:2d} greedy {tg:8.3f} q/s  batch {tb:8.3f} q/s  "
+            f"x{rows[-1]['speedup']}  cohorts={rows[-1]['batch_cohorts']} "
+            f"gain={rows[-1]['batch_coverage_gain_rows']} rows  "
+            f"parity={'ok' if parity else 'MISMATCH'}",
+            flush=True,
+        )
+        sg.close(), sb.close()
+    return rows, parity_all
+
+
+def run_determinism(db, n_bursts: int) -> Dict:
+    """Flag-off byte-identity (two identical greedy runs) and the size-1
+    contract (batch_planning=True on a singleton trace == flag-off engine)."""
+    trace = make_burst_trace(db, n_bursts, 2)
+    fp = [
+        _fingerprint(*_run_leg(db, _rebuild(db, trace), batch=False))
+        for _ in range(2)
+    ]
+    single = make_burst_trace(db, n_bursts, 1)
+    fp_off = _fingerprint(*_run_leg(db, _rebuild(db, single), batch=False))
+    fp_on = _fingerprint(*_run_leg(db, _rebuild(db, single), batch=True))
+    out = {
+        "flag_off_fingerprints": fp,
+        "flag_off_deterministic": fp[0] == fp[1],
+        "singleton_flag_off": fp_off,
+        "singleton_flag_on": fp_on,
+        "singleton_identical": fp_off == fp_on,
+    }
+    print(
+        f"determinism: flag-off {'ok' if out['flag_off_deterministic'] else 'FAIL'}  "
+        f"singleton batch==greedy {'ok' if out['singleton_identical'] else 'FAIL'}",
+        flush=True,
+    )
+    return out
+
+
+def run(smoke: bool = False, sf: Optional[float] = None, _embed_ref: bool = True) -> Dict:
+    sf = sf if sf is not None else (0.01 if smoke else 0.05)
+    # top point 12: burst 16 x 6 bursts would put > 64 concurrently-attached
+    # queries on one shared state, exhausting the visibility slot mask
+    burst_sizes = [1, 2, 4] if smoke else [1, 2, 4, 8, 12]
+    n_bursts = 2 if smoke else 6
+    db = get_db(sf)
+
+    sweep, parity_all = run_sweep(db, burst_sizes, n_bursts)
+    determinism = run_determinism(db, n_bursts)
+
+    top = max(sweep, key=lambda r: r["burst_size"])
+    sp = top["speedup"]
+    out = {
+        "bench": "graftdb_batch_sweep",
+        "version": 1,
+        "smoke": smoke,
+        "sf": sf,
+        "n_bursts": n_bursts,
+        "burst_sizes": burst_sizes,
+        "morsel_size": MORSEL,
+        "sweep": sweep,
+        "determinism": determinism,
+        "acceptance": {
+            "batch_speedup_max_burst": sp,
+            "max_burst_size": top["burst_size"],
+            "target": TARGET_SPEEDUP,
+            # the absolute target applies to the full-size run only: the
+            # smoke db's builds are a few morsels, so fixed per-query
+            # overheads dominate the duplicated-insert savings
+            "target_applies": not smoke,
+            "target_met": (sp is not None and sp >= TARGET_SPEEDUP)
+            if not smoke
+            else None,
+            "parity_ok": parity_all,
+            "flag_off_deterministic_ok": determinism["flag_off_deterministic"],
+            "singleton_identical_ok": determinism["singleton_identical"],
+        },
+    }
+    if not smoke and _embed_ref:
+        print("# embedding smoke_ref (smoke-size re-run for the CI gate)", flush=True)
+        out["smoke_ref"] = run(smoke=True, _embed_ref=False)
+    (REPO_ROOT / "BENCH_batch.json").write_text(json.dumps(out, indent=1))
+    print(
+        f"# batch speedup at burst {top['burst_size']}: {sp}x "
+        f"(target {TARGET_SPEEDUP}x, applies={not smoke}) parity={parity_all}",
+        flush=True,
+    )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--sf", type=float, default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, sf=args.sf)

@@ -50,7 +50,12 @@ def _ref_block(ref: Dict, bench: str) -> Dict:
 
 
 def bench_module(bench: str) -> str:
-    return {"core": "microbench", "members": "member_sweep", "mesh": "mesh_sweep"}[bench]
+    return {
+        "core": "microbench",
+        "members": "member_sweep",
+        "mesh": "mesh_sweep",
+        "batch": "batch_sweep",
+    }[bench]
 
 
 def _geomean(vals: List[float]) -> float:
@@ -199,7 +204,66 @@ def gate_mesh(fresh: Dict, ref: Dict, tol: float) -> List[str]:
     return failures
 
 
-GATES = {"core": gate_core, "members": gate_members, "mesh": gate_mesh}
+def gate_batch(fresh: Dict, ref: Dict, tol: float) -> List[str]:
+    """Batch-planning correctness is binary (per-query parity, flag-off
+    determinism, singleton byte-identity have no tolerance); the modeled
+    batch/greedy speedup at the largest burst size is deterministic under
+    the virtual clock, so it must stay within ``tol`` of the reference."""
+    failures = []
+    ref_block = _ref_block(ref, "batch")
+    det = fresh.get("determinism", {})
+    for flag, where in (
+        ("flag_off_deterministic", det),
+        ("singleton_identical", det),
+    ):
+        ok = bool(where.get(flag))
+        print(f"batch {flag:<24} {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(f"batch: {flag} is false — §15 determinism contract broken")
+    for row in fresh.get("sweep", []):
+        if not row.get("parity_vs_ref_and_legs"):
+            failures.append(
+                f"batch: burst={row.get('burst_size')} per-query results diverged "
+                f"from the reference executor or between legs"
+            )
+    for row in fresh.get("sweep", []):
+        if row["burst_size"] > 1 and row.get("batch_cohorts", 0) == 0:
+            failures.append(
+                f"batch: burst={row['burst_size']} formed no cohorts — the batched "
+                f"admission path did not engage"
+            )
+
+    def _top(block):
+        rows = [r for r in block.get("sweep", []) if r.get("speedup")]
+        if not rows:
+            return None, None
+        top = max(rows, key=lambda r: r["burst_size"])
+        return top["burst_size"], top["speedup"]
+
+    b_ref, sp_ref = _top(ref_block)
+    b_fresh, sp_fresh = _top(fresh)
+    if sp_ref is None or sp_fresh is None or b_ref != b_fresh:
+        failures.append(
+            f"batch: speedup rows missing or burst sizes differ "
+            f"(ref {b_ref}, fresh {b_fresh})"
+        )
+    else:
+        floor = (1.0 - tol) * sp_ref
+        ok = sp_fresh >= floor
+        print(
+            f"batch speedup x{sp_fresh:.3f} at burst {b_fresh} "
+            f"(ref x{sp_ref:.3f}, floor x{floor:.3f}) {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"batch: speedup {sp_fresh}x at burst {b_fresh} "
+                f"< floor {floor:.3f}x (ref {sp_ref}x)"
+            )
+    return failures
+
+
+GATES = {"core": gate_core, "members": gate_members, "mesh": gate_mesh,
+         "batch": gate_batch}
 
 # -- committed-artifact gate --------------------------------------------------
 
@@ -227,7 +291,7 @@ def gate_committed() -> List[str]:
             failures.append(f"committed: {name} missing bench header")
             continue
         family = {"BENCH_core.json": "core", "BENCH_members.json": "members",
-                  "BENCH_mesh.json": "mesh"}.get(name)
+                  "BENCH_mesh.json": "mesh", "BENCH_batch.json": "batch"}.get(name)
         if family and not obj.get("smoke") and "smoke_ref" not in obj:
             failures.append(
                 f"committed: {name} is full-size but has no smoke_ref block — "

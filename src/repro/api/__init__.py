@@ -12,7 +12,13 @@ Everything under ``repro.core`` / ``repro.serve`` is internal; this package
 
 from .backends import ExecutionBackend, PallasBackend, ReferenceBackend, resolve_backend
 from .config import EngineConfig, ServingConfig
-from .explain import BoundaryExplain, GraftExplain, analyze_query
+from .explain import (
+    BoundaryExplain,
+    CohortExplain,
+    GraftExplain,
+    analyze_cohort,
+    analyze_query,
+)
 from .futures import QueryFuture, RequestFuture
 from .serving import ServingSession, connect_serving
 from .session import Session, connect
@@ -29,6 +35,8 @@ __all__ = [
     "GraftExplain",
     "BoundaryExplain",
     "analyze_query",
+    "CohortExplain",
+    "analyze_cohort",
     "ExecutionBackend",
     "ReferenceBackend",
     "PallasBackend",

@@ -114,6 +114,17 @@ class EngineConfig:
       size P — state shards, worker clocks, and devices map one-to-one —
       and charges the per-stage exchange cost model term. ``None``
       (default) is the single-host engine, byte-identical to prior PRs.
+    * ``batch_planning`` — graft-aware batch planning (DESIGN.md §15):
+      arrivals due at one decision step are windowed into cohorts and
+      admitted in the joint planner's provider-first order (maximizing
+      total represented coverage across the cohort) instead of greedy
+      one-at-a-time FIFO. False (default) keeps the greedy path
+      byte-identical to prior releases; with batch planning on, due
+      submissions gather into the arrival queue and fold at the next
+      decision step.
+    * ``batch_window`` — arrival window (seconds) of one cohort: arrivals
+      within this span of the cohort's earliest member plan jointly. 0.0
+      batches only same-instant ties.
     * ``member_major`` — the fused packed-mask morsel pipeline (DESIGN.md
       §11): per-morsel data-plane cost independent of the folded member
       count. False selects the retained per-member loops — the
@@ -141,6 +152,8 @@ class EngineConfig:
     max_sleep_s: Optional[float] = 0.25
     member_major: bool = True
     mesh: Union[None, str, int, object] = None
+    batch_planning: bool = False
+    batch_window: float = 0.0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -269,6 +282,17 @@ class EngineConfig:
             raise ValueError(
                 f"member_major must be a bool, got {self.member_major!r}"
             )
+        if not isinstance(self.batch_planning, bool):
+            raise ValueError(
+                f"batch_planning must be a bool, got {self.batch_planning!r}"
+            )
+        if not isinstance(self.batch_window, (int, float)) or isinstance(
+            self.batch_window, bool
+        ) or self.batch_window < 0:
+            raise ValueError(
+                f"batch_window must be a non-negative number (seconds), "
+                f"got {self.batch_window!r}"
+            )
 
     def _wall_clocked(self) -> bool:
         """The configured clock is real-time: the 'wall' name, the
@@ -348,6 +372,10 @@ class ServingConfig:
 
     * ``fold`` — enable dynamic folding (False = isolated baseline: every
       request prefills its whole prompt).
+    * ``batch_fold`` — multi-prefix batching (DESIGN.md §15): requests due
+      at the same event-loop step admit longest-prompt-first, so shorter
+      same-instant prompts fold onto the longest request's fresh prefix
+      state instead of each creating its own.
     * ``min_share`` — minimum shared-prefix length (tokens) worth attaching.
     * ``prefill_tok_s`` / ``decode_step_s`` — SimExecutor cost model; ignored
       when an explicit ``executor`` is passed to ``connect_serving``.
@@ -364,6 +392,7 @@ class ServingConfig:
     """
 
     fold: bool = True
+    batch_fold: bool = False
     min_share: int = 16
     prefill_tok_s: float = 8000.0
     decode_step_s: float = 0.02
@@ -372,6 +401,8 @@ class ServingConfig:
     reuse_cache_tokens: Optional[int] = None
 
     def __post_init__(self):
+        if not isinstance(self.batch_fold, bool):
+            raise ValueError(f"batch_fold must be a bool, got {self.batch_fold!r}")
         if self.min_share < 0:
             raise ValueError(f"min_share must be >= 0, got {self.min_share!r}")
         if self.prefill_tok_s <= 0 or self.decode_step_s <= 0:

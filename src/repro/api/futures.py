@@ -116,6 +116,11 @@ class QueryFuture:
                     "state_revivals",
                     "queued_admissions",
                     "forced_admissions",
+                    "admission_evals",
+                    # batch planning (engine-wide, §15)
+                    "batch_cohorts",
+                    "batch_planned_queries",
+                    "batch_coverage_gain_rows",
                     # reuse plane (engine-wide, §12)
                     "cache_hits",
                     "cache_spills",

@@ -41,6 +41,7 @@ class ServingSession:
             retain_prefixes=self.config.retain_prefixes,
             memory_budget_tokens=self.config.memory_budget_tokens,
             reuse_cache_tokens=self.config.reuse_cache_tokens,
+            batch_fold=self.config.batch_fold,
         )
         self._sched.on_admit = self._capture_admit
         self._futures: Dict[int, RequestFuture] = {}

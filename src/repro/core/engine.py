@@ -211,6 +211,12 @@ class GraftEngine:
             # capacity — see relational.distributed.exchange_by_key)
             "mesh_exchange_rows",
             "bucket_overflow_rows",
+            # batch planning (§15) — cohorts admitted through the joint
+            # planner, and the §10 admission-memo evaluation count
+            "batch_cohorts",
+            "batch_planned_queries",
+            "batch_coverage_gain_rows",
+            "admission_evals",
             # lifecycle + admission counters (§10) — present (zero) from the
             # start so stats dicts stay shape-stable
             "evictions",
@@ -252,6 +258,19 @@ class GraftEngine:
         elif reuse_disk_budget is not None:
             raise ValueError("reuse_disk_budget requires reuse_cache_budget")
         self.demand_cache: Dict = {}
+        # Live-state generation counter (§10/§15): bumped whenever the
+        # admission-visible indexes change (submission registers states /
+        # rehydrates artifacts; release and eviction unregister them). The
+        # AdmissionController memoizes per-arrival potentials on it, and the
+        # batch planner's purity contract is scoped to one generation.
+        self.state_gen = 0
+        # §15 cohort admission context: non-None only while the batched
+        # scheduler admits a >1-member cohort. Maps state_id -> list of
+        # (eid, b_q, member) for extents cohort members registered this
+        # decision step, so later members can attach deferred-represented
+        # (grant + gate on the producer) instead of installing duplicate
+        # residual producers. The greedy path never sets it.
+        self.cohort_ctx: Optional[Dict[int, List]] = None
         self._domains: Dict[str, int] = {}
         self._next_state_id = 0
         self._agg_producers: Dict[int, SharedAggregateState] = {}  # member.mid -> agg
@@ -339,6 +358,7 @@ class GraftEngine:
                     d = estimate_demand(self, b.build)
                     self.counters["demand_rows"] += d
                     self.counters["eliminated_rows"] += d
+                self.state_gen += 1
                 self._maybe_complete(handle)
                 return handle
 
@@ -400,6 +420,7 @@ class GraftEngine:
         handle.members.append(member)
         self._agg_producers[member.mid] = agg_state
 
+        self.state_gen += 1
         self.check_activations()
         return handle
 
@@ -505,6 +526,7 @@ class GraftEngine:
         """Unregister a state from every admission-visible index — the one
         place refcount release and eviction share, so the invalidation rule
         cannot diverge between the two paths."""
+        self.state_gen += 1
         if isinstance(state, SharedHashBuildState):
             lst = self.state_index.get(state.sig)
             if lst and state in lst:

@@ -232,6 +232,40 @@ def candidate_states(engine, query) -> List:
     return out
 
 
+def boundary_key(join: HashJoin) -> Tuple[StateSignature, Optional[Conjunction]]:
+    """The (signature, build-predicate) pair grafting admission matches on.
+    Shared by ``resolve_boundary`` and the §15 batch planner so the two can
+    never diverge on what boundary compatibility means."""
+    return hash_build_signature(join), Conjunction.from_pred(collect_subtree_pred(join.build))
+
+
+def coverage_probe(engine, sig: StateSignature, b_q: Optional[Conjunction], demand: int) -> Tuple[bool, int]:
+    """Read-only represented-extent probe: what the first live candidate
+    under ``sig`` would grant a boundary with build predicate ``b_q`` right
+    now, as ``(fully_covered, granted_rows)`` with ``granted_rows`` clamped
+    to the boundary's isolated demand. Mirrors the resolve_boundary ladder
+    without attaching, installing producers, or rehydrating — the §15 batch
+    planner scores cohorts with it."""
+    mode = engine.mode
+    if not mode.share_state or not mode.allow_represented or b_q is None:
+        return False, 0
+    candidate = None
+    for s in engine.state_index.get(sig, ()):
+        candidate = s
+        break
+    if candidate is None:
+        return False, 0
+    retained = candidate.retained_attrs
+    b_ret = Conjunction({a: c for a, c in b_q.constraints.items() if a in retained})
+    b_nonret = Conjunction({a: c for a, c in b_q.constraints.items() if a not in retained})
+    allowed = ALL_EXTENTS if not b_nonret.constraints else candidate.allowed_extents_for(b_nonret)
+    if not allowed:
+        return False, 0
+    if candidate.covers_with(b_q, allowed):
+        return True, demand
+    return False, min(int(candidate.count_granted(allowed, b_ret)), demand)
+
+
 def _probe_side_table(engine, join: HashJoin):
     scan, _ = build_spine(join)
     return engine.db[scan.table]
@@ -269,8 +303,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
     install producer obligations and the state-readiness gate."""
     qid = handle.qid
     mode = engine.mode
-    sig = hash_build_signature(join)
-    b_q = Conjunction.from_pred(collect_subtree_pred(join.build))
+    sig, b_q = boundary_key(join)
 
     # counters: isolated-plan demand at this boundary
     demand = estimate_demand(engine, join.build)
@@ -302,20 +335,54 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
             allowed = ALL_EXTENTS
         else:
             allowed = candidate.allowed_extents_for(b_nonret)
+        # §15 deferred representation: extents cohort-mates registered at
+        # this decision step but have not produced yet. Only the batched
+        # admission path populates cohort_ctx, so greedy admission never
+        # takes this branch.
+        pend_mask = np.uint64(0)
+        pend_members: List[Member] = []
+        pend_conjs: List[Conjunction] = []
+        if engine.cohort_ctx is not None:
+            for p_eid, p_conj, p_member in engine.cohort_ctx.get(
+                candidate.state_id, ()
+            ):
+                if not b_nonret.constraints or p_conj.implies(b_nonret):
+                    pend_mask |= np.uint64(1) << np.uint64(p_eid)
+                    pend_members.append(p_member)
+                    pend_conjs.append(p_conj)
+        if allowed and candidate.covers_with(b_q, allowed):
+            # Fully represented: state-ref edge only, gate open now.
+            engine.attach_shared(handle, candidate)
+            candidate.add_grant(qid, allowed, b_ret)
+            engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
+            # upstream producer work eliminated by this state-lens obs.
+            for up in all_boundaries(join.build):
+                d = estimate_demand(engine, up.build)
+                engine.counters["demand_rows"] += d
+                engine.counters["eliminated_rows"] += d
+            gate = Gate(candidate, b_q, allowed)
+            return Attachment(candidate, gate, created=False)
+        if pend_mask and candidate.covers_with_pending(b_q, allowed, pend_conjs):
+            # Fully represented once the cohort-mates' producers complete:
+            # grant the pending provenance bits now, gate on the producers.
+            # No producer of our own — this is the §15 win: the narrower
+            # member rides the state a wider member is about to build
+            # instead of re-delivering its own extent. ``Gate.open``
+            # re-proves coverage against the completed extents, so a
+            # producer that under-delivers can never unblock us unsoundly.
+            engine.attach_shared(handle, candidate)
+            candidate.add_grant(qid, allowed | pend_mask, b_ret)
+            engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
+            for up in all_boundaries(join.build):
+                d = estimate_demand(engine, up.build)
+                engine.counters["demand_rows"] += d
+                engine.counters["eliminated_rows"] += d
+            gate = Gate(candidate, b_q, allowed | pend_mask)
+            for p_member in pend_members:
+                gate.pending.add(p_member)
+                p_member.waiting_gates.append(gate)
+            return Attachment(candidate, gate, created=False)
         if allowed:
-            fully_covered = candidate.covers_with(b_q, allowed)
-            if fully_covered:
-                # Fully represented: state-ref edge only, gate open now.
-                engine.attach_shared(handle, candidate)
-                candidate.add_grant(qid, allowed, b_ret)
-                engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
-                # upstream producer work eliminated by this state-lens obs.
-                for up in all_boundaries(join.build):
-                    d = estimate_demand(engine, up.build)
-                    engine.counters["demand_rows"] += d
-                    engine.counters["eliminated_rows"] += d
-                gate = Gate(candidate, b_q, allowed)
-                return Attachment(candidate, gate, created=False)
             # Partially represented: grant what is covered, install a
             # residual producer for the rest (its extent bit joins the
             # allowed set so the gate can open on its completion).
@@ -323,6 +390,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
             candidate.add_grant(qid, allowed, b_ret)
             engine.counters["represented_rows"] += candidate.count_granted(allowed, b_ret)
             member, eid = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
+            _record_cohort_extent(engine, candidate, eid, b_q, member)
             if eid >= 0:
                 gate_allowed = allowed | (np.uint64(1) << np.uint64(eid))
                 gate = Gate(candidate, b_q, gate_allowed)
@@ -339,7 +407,8 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
     # -- Residual-only attachment (no coverage observation)
     if candidate is not None and mode.allow_residual:
         engine.attach_shared(handle, candidate)
-        member, _ = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
+        member, eid = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
+        _record_cohort_extent(engine, candidate, eid, b_q, member)
         gate = Gate(candidate, None)  # own producer completion suffices
         gate.pending.add(member)
         member.waiting_gates.append(gate)
@@ -357,13 +426,22 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
     handle.attached_states.append(state)
     if mode.share_state:
         engine.state_index.setdefault(sig, []).append(state)
-    member, _ = _install_producer(engine, handle, join, state, b_q, kind="ordinary")
+    member, eid = _install_producer(engine, handle, join, state, b_q, kind="ordinary")
+    _record_cohort_extent(engine, state, eid, b_q, member)
     gate = Gate(state, None)
     gate.pending.add(member)
     member.waiting_gates.append(gate)
     if mode.qpipe:
         engine.qpipe_registry[_qpipe_key(sig, join, b_q)] = (member, state)
     return Attachment(state, gate, created=True, producer_member=member)
+
+
+def _record_cohort_extent(engine, state, eid: int, b_q, member) -> None:
+    """§15: while a batched cohort admission is in flight, expose this
+    producer's registered extent to later cohort members so they can attach
+    deferred-represented instead of installing duplicate producers."""
+    if engine.cohort_ctx is not None and eid >= 0 and b_q is not None:
+        engine.cohort_ctx.setdefault(state.state_id, []).append((eid, b_q, member))
 
 
 def _install_producer(

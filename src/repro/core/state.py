@@ -449,6 +449,30 @@ class SharedHashBuildState:
                 mask |= np.uint64(1) << np.uint64(eid)
         return mask
 
+    def covers_with_pending(
+        self,
+        conj: Conjunction,
+        allowed_emask: np.uint64,
+        pending: List[Conjunction],
+    ) -> bool:
+        """Coverage proof over completed extents plus ``pending`` — extent
+        predicates a cohort-mate's producer registered this decision step but
+        has not yet delivered (§15 deferred representation). The admission
+        grant gates on those producers, and ``Gate.open`` re-proves coverage
+        with ``covers_with`` once they complete, so this predicts exactly the
+        post-completion verdict."""
+        cov = Coverage(
+            [
+                c
+                for eid, (c, done) in self.extents.items()
+                if done
+                and c is not None
+                and (np.uint64(1) << np.uint64(eid)) & allowed_emask
+            ]
+            + list(pending)
+        )
+        return cov.covers(conj)
+
     # -- producer side -----------------------------------------------------
     def insert_or_mark(
         self,

@@ -92,10 +92,17 @@ class FoldingScheduler:
         retain_prefixes: bool = False,
         memory_budget_tokens: Optional[int] = None,
         reuse_cache_tokens: Optional[int] = None,
+        batch_fold: bool = False,
     ):
         self.ex = executor
         self.fold = fold
         self.min_share = min_share
+        # §15 batch planning, serving flavor: when several requests are due
+        # at the same decision step, admit the longest prompt first so the
+        # fresh prefix state it creates covers every shorter same-prefix
+        # prompt in the group (they fold at their full match length instead
+        # of only the shortest arrival's).
+        self.batch_fold = batch_fold
         # §10 lifecycle: retain zero-ref prefix states (their covered KV
         # cache keeps serving later requests with the same prefix) and
         # evict oldest-epoch-first past the token budget.
@@ -103,7 +110,15 @@ class FoldingScheduler:
         self.memory_budget_tokens = memory_budget_tokens
         self._epoch = 0
         self.states: List[PrefixState] = []
-        self.metrics = {"represented": 0, "residual": 0, "ordinary": 0}
+        self.metrics = {
+            "represented": 0,
+            "residual": 0,
+            "ordinary": 0,
+            # §15: same-instant admission groups planned jointly, and the
+            # members that folded onto a group-mate's state
+            "batch_groups": 0,
+            "batch_folded": 0,
+        }
         # lifecycle gauges kept apart from the per-episode token metrics
         self.lifecycle_metrics = {
             "evicted_states": 0,
@@ -304,11 +319,26 @@ class FoldingScheduler:
         decode_left: Dict[int, int] = {}
 
         while i < len(pending) or work or decode_pool:
+            due: List[Request] = []
             while i < len(pending) and pending[i].arrival <= now:
-                req = pending[i]
+                due.append(pending[i])
                 i += 1
-                att = self.admit(req)
-                heapq.heappush(work, (req.arrival, req.rid, req, att))
+            if self.batch_fold and self.fold and len(due) > 1:
+                # §15 joint admission: longest prompt first, so its fresh
+                # state is live (at its full length) when the shorter
+                # group-mates partition against it. Execution order below
+                # is unchanged — the work heap still pops (arrival, rid).
+                self.metrics["batch_groups"] += 1
+                due = sorted(due, key=lambda r: (-len(r.prompt), r.arrival, r.rid))
+                for req in due:
+                    att = self.admit(req)
+                    if not att["created"]:
+                        self.metrics["batch_folded"] += 1
+                    heapq.heappush(work, (req.arrival, req.rid, req, att))
+            else:
+                for req in due:
+                    att = self.admit(req)
+                    heapq.heappush(work, (req.arrival, req.rid, req, att))
             if not work and not decode_pool:
                 if i < len(pending):
                     now = pending[i].arrival

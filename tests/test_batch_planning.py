@@ -1,0 +1,433 @@
+"""Graft-aware batch planning (DESIGN.md §15): metamorphic + purity suite.
+
+The planner's contract is behavioral, so it is locked down as properties:
+
+* (a) **coverage dominance** — a cohort's planned represented coverage is
+  >= the sum of per-query greedy snapshot coverage on the same engine
+  snapshot, per member and in total;
+* (b) **permutation invariance** — the plan is a function of the (snapshot,
+  member-set) pair, never of the input order;
+* (c) **singleton equivalence** — a batch of size 1 takes byte-identical
+  admission steps to the greedy path (results, counters, admission log,
+  clock);
+* (d) **purity** — planning twice on one snapshot yields the same plan and
+  mutates nothing the engine's determinism depends on.
+
+Plus the §10 admission-memo regression (AdmissionController used to rescan
+every queued arrival's graft potential at every decision step) and the
+serving-plane flavor (``ServingConfig(batch_fold=True)``).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import graftdb
+from graftdb import EngineConfig, ServingConfig
+from repro.core.batchplan import CohortPlan, plan_cohort, snapshot_coverage, profile_query
+from repro.relational import queries, refexec
+from repro.relational.table import days
+
+ADMIT = dict(
+    mode="graft",
+    morsel_size=4096,
+    retention="epoch",
+    admission="adaptive",
+    admission_max_inflight=2,
+    admission_share_threshold=0.4,
+)
+
+
+def _q3(db, date, seg=1.0, arrival=0.0):
+    return queries.make_query(
+        db, "q3", {"segment": seg, "date": float(days(date))}, arrival
+    )
+
+
+def _canon(res):
+    keys = sorted(res)
+    order = np.lexsort([np.asarray(res[k]) for k in keys])
+    return {k: np.asarray(res[k])[order] for k in keys}
+
+
+def _burst(db, rng, n, arrival=0.0):
+    return [queries.sample_query(db, rng, arrival=arrival) for _ in range(n)]
+
+
+def _spread(db, rng, n, gap=1e6):
+    return [queries.sample_query(db, rng, arrival=i * gap) for i in range(n)]
+
+
+def _rebuild(db, qs):
+    return [
+        queries.make_query(db, q.template, q.params, arrival=q.arrival) for q in qs
+    ]
+
+
+def _warm_session(db, **overrides):
+    """A session with live shared state: one wide q3 executed and retired
+    (epoch retention keeps it attachable), so cohort planning scores against
+    a non-trivial snapshot."""
+    cfg = dict(mode="graft", morsel_size=4096, retention="epoch")
+    cfg.update(overrides)
+    session = graftdb.connect(db, EngineConfig(**cfg))
+    session.submit(_q3(db, "1995-03-28"))
+    session.run()
+    return session
+
+
+# ---------------------------------------------------------------------------
+# (a) coverage dominance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cohort_coverage_dominates_greedy_snapshot(db, seed):
+    """Property (a): planned coverage >= per-query greedy snapshot coverage,
+    member-wise and in total, on warm and cold snapshots alike."""
+    rng = np.random.default_rng(31_000 + seed)
+    session = _warm_session(db) if seed % 2 else graftdb.connect(
+        db, EngineConfig(mode="graft", morsel_size=4096)
+    )
+    qs = _burst(db, rng, int(rng.integers(2, 6)))
+    plan = plan_cohort(session.engine, qs)
+    assert plan.size == len(qs)
+    for m in plan.members:
+        assert m.planned_rows >= m.snapshot_rows, m
+        assert m.planned_rows <= m.demand_rows
+    assert plan.planned_rows >= plan.snapshot_rows
+    assert plan.gain_rows == plan.planned_rows - plan.snapshot_rows
+    # the snapshot column really is the greedy baseline on this snapshot
+    for m in plan.members:
+        q = next(q for q in qs if q.qid == m.qid)
+        assert m.snapshot_rows == snapshot_coverage(
+            session.engine, profile_query(session.engine, q)
+        )
+    session.close()
+
+
+def test_nested_burst_has_strict_gain(db):
+    """A narrow-first same-instant q3 burst is the planner's bread and
+    butter: greedy snapshot coverage is 0 on a cold engine, while the
+    planned order lets the narrower dates ride the widest member."""
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    qs = [_q3(db, d) for d in ("1995-03-05", "1995-03-12", "1995-03-25")]
+    plan = plan_cohort(session.engine, qs)
+    # widest (latest date) admits first: it provides for both others
+    assert plan.order[0] == qs[-1].qid
+    assert plan.gain_rows > 0
+    assert plan.members[0].provider_weight > max(
+        m.provider_weight for m in plan.members[1:]
+    )
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# (b) permutation invariance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_plan_invariant_under_input_permutation(db, seed):
+    rng = np.random.default_rng(32_000 + seed)
+    session = _warm_session(db)
+    qs = _burst(db, rng, 4)
+    base = plan_cohort(session.engine, qs)
+    for perm in itertools.permutations(qs):
+        assert plan_cohort(session.engine, list(perm)) == base
+    session.close()
+
+
+def test_same_instant_ties_order_by_qid(db):
+    """Equal-arrival, equal-weight members break ties on qid — the one
+    intrinsic key left — so a replayed trace plans identically."""
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    qs = [_q3(db, "1995-03-10", seg=float(s)) for s in (0.0, 2.0, 3.0)]
+    plan = plan_cohort(session.engine, qs)
+    # disjoint segments: nobody provides for anybody, FIFO (arrival, qid)
+    assert plan.order == tuple(q.qid for q in qs)
+    assert all(m.provider_weight == 0 for m in plan.members)
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# (c) singleton equivalence: batch path == greedy path, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def _run_trace(db, qs, **cfg):
+    session = graftdb.connect(db, EngineConfig(**cfg))
+    futs = session.submit_all(qs)
+    session.run()
+    return session, futs
+
+
+@pytest.mark.parametrize("workers,partitions", [(1, 1), (4, 4)])
+def test_singleton_cohorts_byte_identical_to_greedy(db, workers, partitions):
+    """Property (c): with arrivals spread far beyond any batch window, every
+    cohort has size 1 and the batched admission path must replay the greedy
+    engine exactly — results, counters, admission log, and clock."""
+    rng = np.random.default_rng(77)
+    qs = _spread(db, rng, 4)
+    cfg = dict(ADMIT, workers=workers, partitions=partitions)
+    sg, fg = _run_trace(db, _rebuild(db, qs), **cfg)
+    sb, fb = _run_trace(db, _rebuild(db, qs), **dict(cfg, batch_planning=True))
+    for a, b in zip(fg, fb):
+        ra, rb = a.result(), b.result()
+        assert set(ra) == set(rb)
+        for k in ra:
+            np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]), err_msg=k)
+    assert sb.counters == sg.counters  # includes admission_evals + batch_* == 0
+    assert sb.counters["batch_cohorts"] == 0
+    assert sb.cohort_log() == []
+    # qids are globally allocated, so compare the records positionally
+    assert [
+        sb._runner.admission_log[b.qid] for b in fb
+    ] == [sg._runner.admission_log[g_.qid] for g_ in fg]
+    assert sb.now == sg.now
+    sg.close(), sb.close()
+
+
+def test_flag_off_is_the_greedy_engine(db):
+    """batch_planning=False must not even route through the batched path:
+    same results, counters, and clock as an explicit greedy run."""
+    rng = np.random.default_rng(78)
+    qs = _burst(db, rng, 4)  # same-instant: the case batching would change
+    sg, fg = _run_trace(db, _rebuild(db, qs), **dict(ADMIT, workers=1, partitions=1))
+    so, fo = _run_trace(
+        db, _rebuild(db, qs), **dict(ADMIT, workers=1, partitions=1, batch_planning=False)
+    )
+    for a, b in zip(fg, fo):
+        ra, rb = a.result(), b.result()
+        for k in ra:
+            np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]), err_msg=k)
+    assert so.counters == sg.counters
+    assert so.now == sg.now
+    sg.close(), so.close()
+
+
+# ---------------------------------------------------------------------------
+# (d) purity
+# ---------------------------------------------------------------------------
+
+
+def test_planner_is_pure_function_of_snapshot(db):
+    session = _warm_session(db)
+    eng = session.engine
+    rng = np.random.default_rng(5)
+    qs = _burst(db, rng, 4)
+    gen0 = eng.state_gen
+    counters0 = dict(eng.counters)
+    states0 = {sig: list(lst) for sig, lst in eng.state_index.items()}
+    aggs0 = dict(eng.agg_index)
+    p1 = plan_cohort(eng, qs)
+    p2 = plan_cohort(eng, qs)
+    assert p1 == p2
+    assert isinstance(p1, CohortPlan)
+    assert eng.state_gen == gen0
+    assert dict(eng.counters) == counters0
+    assert {sig: list(lst) for sig, lst in eng.state_index.items()} == states0
+    assert dict(eng.agg_index) == aggs0
+    session.close()
+
+
+def test_explain_cohort_read_only_and_consistent(db):
+    session = _warm_session(db)
+    qs = [_q3(db, d, arrival=session.now) for d in ("1995-03-05", "1995-03-25")]
+    gen0 = session.engine.state_gen
+    exp = session.explain_cohort(qs)
+    assert session.engine.state_gen == gen0
+    assert exp.plan == plan_cohort(session.engine, qs)
+    text = exp.render()
+    assert "EXPLAIN GRAFT COHORT: 2 queries" in text
+    assert "scan group" in text
+    assert text.count("EXPLAIN GRAFT q") == 2  # member reports in plan order
+    d = exp.to_dict()
+    assert set(d) == {"plan", "members"}
+    assert d["plan"]["order"] == list(exp.plan.order)
+    assert [m["qid"] for m in d["plan"]["members"]] == list(exp.plan.order)
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# cohort formation + accounting through the public surface
+# ---------------------------------------------------------------------------
+
+
+def test_batch_window_groups_cohorts(db):
+    """Arrivals at (0, 0, far-later) with a tight window form exactly one
+    2-cohort; the straggler admits as a singleton (not logged)."""
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft", morsel_size=4096, batch_planning=True, batch_window=0.1
+        ),
+    )
+    qs = [
+        _q3(db, "1995-03-05", arrival=0.0),
+        _q3(db, "1995-03-25", arrival=0.0),
+        _q3(db, "1995-03-15", arrival=1e9),
+    ]
+    futs = session.submit_all(qs)
+    session.run()
+    log = session.cohort_log()
+    assert len(log) == 1
+    assert log[0]["cohort"] == 0
+    assert log[0]["plan"].size == 2
+    assert set(log[0]["plan"].order) == {qs[0].qid, qs[1].qid}
+    assert session.counters["batch_cohorts"] == 1
+    assert session.counters["batch_planned_queries"] == 2
+    st = session.stats()
+    assert st["batch_planning"] is True and st["batch_window"] == 0.1
+    for f, q in zip(futs, qs):
+        c = _canon(f.result())
+        r = _canon(refexec.execute(db, q.plan))
+        for k in c:
+            np.testing.assert_allclose(c[k], r[k], rtol=1e-12, atol=1e-12)
+    session.close()
+
+
+def test_future_stats_expose_cohort_record(db):
+    session = graftdb.connect(
+        db, EngineConfig(**dict(ADMIT, admission_max_inflight=8, batch_planning=True))
+    )
+    qs = [_q3(db, d) for d in ("1995-03-05", "1995-03-12", "1995-03-25")]
+    futs = session.submit_all(qs)
+    session.run()
+    metas = [f.stats()["admission"].get("cohort") for f in futs]
+    metas = [m for m in metas if m is not None]
+    assert metas, "no admission record carried cohort metadata"
+    assert all(set(m) == {"cohort", "size", "slot"} for m in metas)
+    assert sorted(m["slot"] for m in metas) == list(range(len(metas)))
+    c = futs[0].stats()["counters"]
+    assert c["batch_cohorts"] >= 1
+    assert c["batch_planned_queries"] == len(metas)
+    assert c["batch_coverage_gain_rows"] > 0
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# §10 admission-memo regression (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_potentials_memoized_until_state_changes(db):
+    from repro.core.scheduler import AdmissionController
+
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    eng = session.engine
+    ctl = AdmissionController(max_inflight=2)
+    q = _q3(db, "1995-03-15")
+    ctl.potentials(eng, q)
+    ctl.potentials(eng, q)
+    assert eng.counters["admission_evals"] == 1  # second call hit the memo
+    f = session.submit(_q3(db, "1995-03-20"))  # attach/registration bumps state_gen
+    session.run()
+    f.result()
+    ctl.potentials(eng, q)
+    assert eng.counters["admission_evals"] == 2  # invalidated by the state change
+    session.close()
+
+
+def test_admit_verdict_drops_memo_entry(db):
+    from repro.core.scheduler import AdmissionController
+
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=4096))
+    ctl = AdmissionController(max_inflight=2)
+    q = _q3(db, "1995-03-15")
+    verdict, _ = ctl.decide(session.engine, q)
+    assert verdict == "admit"
+    assert q.qid not in ctl._pot_memo  # admitted arrivals never pin stale entries
+    session.close()
+
+
+def test_deep_queue_no_longer_rescans_every_step(db):
+    """The regression: a deep deferred FIFO queue used to re-evaluate every
+    arrival's graft potential at every decision step. Pin: real evaluations
+    stay strictly below controller decisions, and each query is only
+    re-evaluated when the engine state generation actually moved."""
+    from repro.core.scheduler import AdmissionController
+
+    class Counting(AdmissionController):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.decisions = 0
+
+        def decide(self, engine, query, active_count=None):
+            self.decisions += 1
+            return super().decide(engine, query, active_count=active_count)
+
+    rng = np.random.default_rng(9)
+    qs = _burst(db, rng, 6)
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft", morsel_size=4096, retention="epoch",
+            admission="adaptive", admission_max_inflight=1,
+            admission_share_threshold=0.99,
+        ),
+    )
+    ctl = Counting(max_inflight=1, share_threshold=0.99)
+    session._runner.admission = ctl
+    futs = session.submit_all(qs)
+    session.run()
+    for f in futs:
+        f.result()
+    evals = session.counters["admission_evals"]
+    assert session.counters["queued_admissions"] > 0  # the queue was deep
+    assert ctl.decisions > len(qs)  # deferrals forced re-decisions...
+    assert evals < ctl.decisions  # ...but the memo absorbed the rescans
+    # each arrival evaluates at most once per state-generation epoch it waits
+    # through (+1 for its first look)
+    assert evals <= len(qs) * (session.engine.state_gen + 1)
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# serving plane: batch_fold (§15, KV-prefix flavor)
+# ---------------------------------------------------------------------------
+
+
+def _serve_requests():
+    from repro.serve.folding import Request
+
+    base = tuple(range(100))
+    return [
+        Request(rid=1, prompt=base[:40], n_decode=4, arrival=0.0),
+        Request(rid=2, prompt=base[:70], n_decode=4, arrival=0.0),
+        Request(rid=3, prompt=base, n_decode=4, arrival=0.0),
+    ]
+
+
+def test_serving_batch_fold_longest_first():
+    """Three nested same-instant prompts: joint admission folds the shorter
+    two onto the longest's fresh state, so total computed prefill tokens
+    drop to the longest prompt alone."""
+    from repro.serve.folding import FoldingScheduler, SimExecutor
+
+    plain = FoldingScheduler(SimExecutor(), fold=True)
+    r_plain = plain.run(_serve_requests())
+    batched = FoldingScheduler(SimExecutor(), fold=True, batch_fold=True)
+    r_batch = batched.run(_serve_requests())
+    assert r_batch["completed"] == r_plain["completed"] == 3
+    assert batched.metrics["batch_groups"] == 1
+    assert batched.metrics["batch_folded"] == 2
+    assert r_batch["prefill_tokens"]["computed"] == 100  # just the longest
+    assert r_batch["prefill_tokens"]["computed"] < r_plain["prefill_tokens"]["computed"]
+    assert plain.metrics["batch_groups"] == 0  # flag off: path untouched
+
+
+def test_serving_session_batch_fold_config():
+    import graftdb as g
+    from repro.serve.folding import Request
+
+    session = g.connect_serving(config=ServingConfig(fold=True, batch_fold=True))
+    session.submit_all(_serve_requests())
+    summary = session.run()
+    assert session.scheduler.batch_fold is True
+    assert summary["prefill_tokens"]["batch_groups"] == 1
+    assert summary["prefill_tokens"]["batch_folded"] == 2
+    bad = ServingConfig.__init__
+    with pytest.raises((TypeError, ValueError)):
+        ServingConfig(batch_fold="yes")

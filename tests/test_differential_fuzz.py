@@ -130,6 +130,95 @@ def test_differential_fuzzer_parity(db):
 
 
 # ---------------------------------------------------------------------------
+# Batch-planning differential leg (§15)
+# ---------------------------------------------------------------------------
+
+#: seeds for the burst-heavy batch leg (ties dominate so cohorts form)
+BATCH_SEEDS = range(10)
+
+
+def _burst_workload(db, rng):
+    """3-6 queries with same-instant ties the rule, not the exception: the
+    gap mix is weighted toward 0.0 so most decision steps hold a cohort."""
+    n = int(rng.integers(3, 7))
+    qs, t = [], 0.0
+    for _ in range(n):
+        t += float(rng.choice([0.0, 0.0, 0.0, 0.002, 0.02]))
+        qs.append(queries.sample_query(db, rng, arrival=t))
+    return qs
+
+
+def _explain_accounting(exp, ctx):
+    """EXPLAIN GRAFT exactness: represented + residual + unattached == demand
+    in total and per key partition, for every boundary."""
+    for root in exp.boundaries:
+        for b in root.flat():
+            assert (
+                b.represented_rows + b.residual_rows + b.unattached_rows
+                == b.demand_rows
+            ), (ctx, b)
+            assert sum(b.part_demand_rows) == b.demand_rows, (ctx, b)
+            for p in range(len(b.part_demand_rows)):
+                assert (
+                    b.part_represented_rows[p]
+                    + b.part_residual_rows[p]
+                    + b.part_unattached_rows[p]
+                    == b.part_demand_rows[p]
+                ), (ctx, b, p)
+    assert exp.total_demand_rows == (
+        exp.represented_rows + exp.residual_rows + exp.unattached_rows
+    ), ctx
+
+
+def test_graft_batch_differential_leg(db):
+    """Randomized burst arrivals replayed through greedy grafting, batch
+    planning (workers 1 and 4), and isolated execution: every leg matches
+    the reference executor bit-for-bit (canonical order), the two batch
+    worker counts match each other, and each batch-admitted query's captured
+    EXPLAIN satisfies the per-partition accounting identity."""
+    checks = cohorts = 0
+    for seed in BATCH_SEEDS:
+        rng = np.random.default_rng(21_000 + seed)
+        qs = _burst_workload(db, rng)
+        refs = [refexec.execute(db, q.plan) for q in qs]
+        runs = (
+            ("greedy-w1", dict(EVICT, workers=1, partitions=1)),
+            ("batch-w1", dict(EVICT, workers=1, partitions=1,
+                              batch_planning=True, capture_explain=True)),
+            ("batch-w4", dict(EVICT, workers=4, partitions=4,
+                              batch_planning=True)),
+            ("isolated", dict(mode="isolated", morsel_size=4096,
+                              workers=1, partitions=1)),
+        )
+        leg_results = {}
+        for label, cfg in runs:
+            session, futs = _run_all(db, _rebuild(db, qs), **cfg)
+            leg_results[label] = [_canon(f.result()) for f in futs]
+            for i, (f, ref) in enumerate(zip(futs, refs)):
+                _assert_parity(f.result(), ref, ctx=f"seed{seed}/{label}/q{i}")
+                checks += 1
+            if label.startswith("batch"):
+                cohorts += int(session.counters["batch_cohorts"])
+                assert session.stats()["queued_pending"] == 0
+                assert (
+                    session.counters["batch_planned_queries"]
+                    >= 2 * session.counters["batch_cohorts"]
+                )
+            if label == "batch-w1":
+                for i, f in enumerate(futs):
+                    _explain_accounting(f.explain(), ctx=f"seed{seed}/q{i}")
+            session.close()
+        # worker-count independence of the batched engine
+        for a, b in zip(leg_results["batch-w1"], leg_results["batch-w4"]):
+            for k in a:
+                np.testing.assert_allclose(
+                    a[k], b[k], rtol=1e-12, atol=1e-12, err_msg=f"seed{seed}/w1-vs-w4/{k}"
+                )
+    assert checks >= 100, f"only {checks} parity instances"
+    assert cohorts > 0, "the burst sweep never formed a cohort — gaps too wide"
+
+
+# ---------------------------------------------------------------------------
 # Eviction safety properties
 # ---------------------------------------------------------------------------
 

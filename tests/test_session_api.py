@@ -283,6 +283,10 @@ def test_stats_expose_data_plane_counters(db):
         "state_revivals",
         "queued_admissions",
         "forced_admissions",
+        "admission_evals",
+        "batch_cohorts",
+        "batch_planned_queries",
+        "batch_coverage_gain_rows",
         "cache_hits",
         "cache_spills",
         "cache_evictions",
