@@ -1,0 +1,346 @@
+"""Chaos sweep: folded execution under seeded fault injection (DESIGN.md §16).
+
+One sampled query trace replays under identical deterministic fault pressure
+(``FaultPlan`` — seeded morsel failures + worker stalls, WorkClock-charged
+retries) through two legs per fault seed:
+
+* ``isolated`` — every query its own pipeline (the no-sharing baseline);
+* ``graft``    — dynamic folding, so faults hit *shared* producers and the
+  §16 machinery (retry, producer handoff, quarantine, unfold) must keep
+  every surviving query bit-identical to the fault-free reference executor.
+
+Recorded per fault seed: survivor P95/median modeled latency of both legs
+and the graft/isolated P95 ratio — the acceptance number (folding must not
+lose its win under fault pressure; <= 1.0 on the full-size run) — plus the
+§16 robustness guarantees, all bit-level:
+
+* every survivor of every leg matches the reference executor (canonical row
+  order) and every non-survivor terminated as ``failed`` — no hangs;
+* fault handling is deterministic: two runs of one faulted trace produce
+  identical status/counter/result fingerprints;
+* the ``faults=None`` hot path is untouched: an empty-schedule ``FaultPlan``
+  is fingerprint-identical to ``faults=None``, and the one
+  ``faults is not None`` branch per morsel — the only §16 code on the
+  disarmed path — costs under 1% of the run (full-size run), measured as
+  branch-time x actual morsel-gate draw count against wall time.
+
+Writes ``BENCH_chaos.json`` at the repo root; the full run embeds a
+``smoke_ref`` block so ``regression_gate chaos`` can gate CI smoke runs.
+
+  PYTHONPATH=src python -m benchmarks.chaos_sweep            # full sweep
+  PYTHONPATH=src python -m benchmarks.chaos_sweep --smoke    # CI smoke job
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import graftdb
+from graftdb import EngineConfig, FaultPlan
+from repro.relational import queries, refexec
+
+from .common import get_db
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# small morsels = many fault sites per build; the schedule rates are per
+# boundary draw, so the pressure scales with the work, not the query count
+MORSEL = 4096
+SCHEDULE = {"morsel": 0.02, "stall": 0.05}
+RETRY_LIMIT = 2
+P95_RATIO_TARGET = 1.0  # graft P95 <= isolated P95 under the same faults
+HOOK_OVERHEAD_TARGET_PCT = 1.0
+
+
+def make_trace(db, n: int, seed: int, gap_s: float = 0.001):
+    """``n`` sampled template instances at staggered arrivals — enough
+    overlap that graft folds aggressively, so injected faults land on
+    shared producers, not private ones."""
+    rng = np.random.default_rng(seed)
+    return [queries.sample_query(db, rng, arrival=i * gap_s) for i in range(n)]
+
+
+def _rebuild(db, trace):
+    return [
+        queries.make_query(db, q.template, q.params, arrival=q.arrival)
+        for q in trace
+    ]
+
+
+def _canon(res) -> Dict[str, np.ndarray]:
+    keys = sorted(res)
+    order = np.lexsort([np.asarray(res[k]) for k in keys])
+    return {k: np.asarray(res[k])[order] for k in keys}
+
+
+def _canon_equal(a, b) -> bool:
+    ca, cb = _canon(a), _canon(b)
+    if set(ca) != set(cb):
+        return False
+    return all(
+        ca[k].shape == cb[k].shape and np.allclose(ca[k], cb[k], rtol=1e-12, atol=1e-12)
+        for k in ca
+    )
+
+
+def _fingerprint(session, futures) -> str:
+    """Byte-level identity of one faulted run: every terminal status, every
+    survivor's result columns (canonical row order), every engine counter,
+    and the final virtual clock."""
+    h = hashlib.sha256()
+    for f in futures:
+        h.update(f.status.encode())
+        if f.status == "done":
+            c = _canon(f.result())
+            for k in sorted(c):
+                h.update(k.encode())
+                h.update(np.ascontiguousarray(c[k]).tobytes())
+    for k in sorted(session.counters):
+        h.update(f"{k}={session.counters[k]!r};".encode())
+    h.update(f"now={session.now!r}".encode())
+    return h.hexdigest()
+
+
+def _run_leg(db, trace, mode: str, faults: Optional[FaultPlan]):
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode=mode,
+            morsel_size=MORSEL,
+            workers=1,
+            partitions=1,
+            faults=faults,
+        ),
+    )
+    futs = session.submit_all(_rebuild(db, trace))
+    session.run()
+    return session, futs
+
+
+def _leg_row(session, futures, oracles) -> Dict:
+    done = [(i, f) for i, f in enumerate(futures) if f.status == "done"]
+    killed = [f for f in futures if f.status != "done"]
+    terminated = all(f.status == "failed" for f in killed)
+    parity = all(_canon_equal(f.result(), oracles[i]) for i, f in done)
+    lats = np.array([f.latency() for _, f in done]) if done else np.array([0.0])
+    c = session.counters
+    return {
+        "survived": len(done),
+        "killed": len(killed),
+        "p95_s": float(np.percentile(lats, 95)),
+        "median_s": float(np.median(lats)),
+        "faults_injected": int(c.get("faults_injected", 0)),
+        "fault_retries": int(c.get("fault_retries", 0)),
+        "producer_handoffs": int(c.get("producer_handoffs", 0)),
+        "quarantined_states": int(c.get("quarantined_states", 0)),
+        "unfolds": int(c.get("unfolds", 0)),
+        "parity_ok": parity,
+        "terminated_ok": terminated,
+    }
+
+
+def run_sweep(db, trace, oracles, fault_seeds: List[int]) -> Tuple[List[Dict], bool, bool, bool]:
+    rows, parity_all, terminated_all, exercised = [], True, True, False
+    for fs in fault_seeds:
+        faults = FaultPlan(seed=fs, schedule=SCHEDULE, retry_limit=RETRY_LIMIT)
+        legs = {}
+        for mode in ("isolated", "graft"):
+            s, futs = _run_leg(db, trace, mode, faults)
+            legs[mode] = _leg_row(s, futs, oracles)
+            parity_all = parity_all and legs[mode]["parity_ok"]
+            terminated_all = terminated_all and legs[mode]["terminated_ok"]
+            exercised = exercised or (
+                legs[mode]["faults_injected"] > 0 and legs[mode]["fault_retries"] > 0
+            )
+            s.close()
+        iso, gr = legs["isolated"], legs["graft"]
+        ratio = gr["p95_s"] / iso["p95_s"] if iso["p95_s"] > 0 else None
+        rows.append(
+            {
+                "fault_seed": fs,
+                "n_queries": len(trace),
+                "isolated": iso,
+                "graft": gr,
+                "p95_ratio_graft_vs_isolated": round(ratio, 4) if ratio else None,
+            }
+        )
+        print(
+            f"seed={fs} iso P95 {iso['p95_s']:.4f}s ({iso['survived']}/{len(trace)}) "
+            f"graft P95 {gr['p95_s']:.4f}s ({gr['survived']}/{len(trace)}) "
+            f"ratio {rows[-1]['p95_ratio_graft_vs_isolated']}  "
+            f"inj={gr['faults_injected']} retry={gr['fault_retries']} "
+            f"handoff={gr['producer_handoffs']} quarantine={gr['quarantined_states']} "
+            f"unfold={gr['unfolds']}  parity={'ok' if parity_all else 'MISMATCH'}",
+            flush=True,
+        )
+    return rows, parity_all, terminated_all, exercised
+
+
+def run_hook_overhead(db, trace, repeats: int = 3) -> Dict:
+    """The §16 contract on the fault-free path, two legs:
+
+    * **identity** — an armed-but-empty ``FaultPlan`` must be
+      fingerprint-identical to ``faults=None``: the hooks change nothing
+      observable (results, counters, virtual clock).
+    * **cost** — the only §16 code on the ``faults=None`` hot path is one
+      ``scheduler.faults is not None`` branch per morsel advance. That
+      branch is timed directly (timeit) and multiplied by the run's actual
+      morsel-gate draw count (read off the empty plane's per-site
+      occurrence counters), then expressed against the run's wall time —
+      the ≤1% acceptance number. The armed-but-silent plane's wall-clock
+      cost (only paid when chaos testing is opted into) rides along as an
+      informational ratio; best-of timing absorbs runner noise.
+    """
+    import timeit
+
+    fp, times, n_draws = {}, {}, 0
+    for label, faults in (("none", None), ("empty", FaultPlan(seed=0, schedule={}))):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            s, futs = _run_leg(db, trace, "graft", faults)
+            best = min(best, time.perf_counter() - t0)
+            fp[label] = _fingerprint(s, futs)
+            if label == "empty":
+                n_draws = int(sum(s.engine.faults._calls.values()))
+            s.close()
+        times[label] = best
+
+    class _Probe:
+        faults = None
+
+    probe = _Probe()
+    n_iter = 1_000_000
+    per_check_s = (
+        timeit.timeit("probe.faults is not None", globals={"probe": probe}, number=n_iter)
+        / n_iter
+    )
+    disarmed_pct = (n_draws * per_check_s) / times["none"] * 100.0
+    armed_idle_pct = max(0.0, (times["empty"] / times["none"] - 1.0) * 100.0)
+    out = {
+        "wall_s_faults_none": round(times["none"], 4),
+        "wall_s_empty_schedule": round(times["empty"], 4),
+        "morsel_gate_draws": n_draws,
+        "disarmed_check_ns": round(per_check_s * 1e9, 2),
+        "hook_overhead_pct": round(disarmed_pct, 4),
+        "armed_idle_overhead_pct": round(armed_idle_pct, 3),
+        "fingerprint_identical": fp["none"] == fp["empty"],
+    }
+    print(
+        f"hook overhead: faults=None path {out['hook_overhead_pct']}% "
+        f"({n_draws} draws x {out['disarmed_check_ns']}ns / {times['none']:.3f}s); "
+        f"armed-idle plane {out['armed_idle_overhead_pct']}%  fingerprint "
+        f"{'identical' if out['fingerprint_identical'] else 'DIVERGED'}",
+        flush=True,
+    )
+    return out
+
+
+def run_determinism(db, trace, fault_seed: int) -> Dict:
+    """Two runs of one faulted trace must agree byte for byte: statuses,
+    survivor results, counters, final clock."""
+    fps = []
+    for _ in range(2):
+        faults = FaultPlan(seed=fault_seed, schedule=SCHEDULE, retry_limit=RETRY_LIMIT)
+        s, futs = _run_leg(db, trace, "graft", faults)
+        fps.append(_fingerprint(s, futs))
+        s.close()
+    out = {"fingerprints": fps, "replay_deterministic": fps[0] == fps[1]}
+    print(
+        f"determinism: faulted replay "
+        f"{'ok' if out['replay_deterministic'] else 'FAIL'}",
+        flush=True,
+    )
+    return out
+
+
+def run(
+    smoke: bool = False,
+    sf: Optional[float] = None,
+    out_path: Optional[str] = None,
+    _embed_ref: bool = True,
+) -> Dict:
+    sf = sf if sf is not None else (0.01 if smoke else 0.05)
+    n_queries = 24 if smoke else 80
+    fault_seeds = [0, 1] if smoke else [0, 1, 2]
+    db = get_db(sf)
+
+    trace = make_trace(db, n_queries, seed=101)
+    oracles = [refexec.execute(db, q.plan) for q in trace]
+
+    sweep, parity_all, terminated_all, exercised = run_sweep(
+        db, trace, oracles, fault_seeds
+    )
+    overhead = run_hook_overhead(db, trace)
+    determinism = run_determinism(db, trace, fault_seeds[0])
+
+    ratios = [
+        r["p95_ratio_graft_vs_isolated"]
+        for r in sweep
+        if r["p95_ratio_graft_vs_isolated"] is not None
+    ]
+    worst = max(ratios) if ratios else None
+    target_met = (
+        worst is not None
+        and worst <= P95_RATIO_TARGET
+        and overhead["hook_overhead_pct"] <= HOOK_OVERHEAD_TARGET_PCT
+    )
+    out = {
+        "bench": "graftdb_chaos_sweep",
+        "version": 1,
+        "smoke": smoke,
+        "sf": sf,
+        "n_queries": n_queries,
+        "fault_seeds": fault_seeds,
+        "morsel_size": MORSEL,
+        "schedule": SCHEDULE,
+        "retry_limit": RETRY_LIMIT,
+        "sweep": sweep,
+        "hook_overhead": overhead,
+        "determinism": determinism,
+        "acceptance": {
+            "p95_ratio_worst": worst,
+            "p95_ratio_target": P95_RATIO_TARGET,
+            "hook_overhead_pct": overhead["hook_overhead_pct"],
+            "hook_overhead_target_pct": HOOK_OVERHEAD_TARGET_PCT,
+            # the absolute targets apply to the full-size run only: smoke
+            # builds are a few morsels, so fixed per-query overheads blur
+            # both the P95 ratio and the sub-second wall timings
+            "target_applies": not smoke,
+            "target_met": target_met if not smoke else None,
+            "survivor_parity_ok": parity_all,
+            "all_terminated_ok": terminated_all,
+            "faults_exercised_ok": exercised,
+            "hook_identical_ok": overhead["fingerprint_identical"],
+            "replay_deterministic_ok": determinism["replay_deterministic"],
+        },
+    }
+    if not smoke and _embed_ref:
+        print("# embedding smoke_ref (smoke-size re-run for the CI gate)", flush=True)
+        out["smoke_ref"] = run(smoke=True, _embed_ref=False, out_path="/dev/null")
+    if out_path != "/dev/null":
+        target = Path(out_path) if out_path else REPO_ROOT / "BENCH_chaos.json"
+        target.write_text(json.dumps(out, indent=1))
+    print(
+        f"# chaos: worst graft/isolated P95 ratio {worst} "
+        f"(target <= {P95_RATIO_TARGET}, applies={not smoke}) "
+        f"hook overhead {overhead['hook_overhead_pct']}% parity={parity_all}",
+        flush=True,
+    )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--sf", type=float, default=None)
+    ap.add_argument("--out", type=str, default=None, help="output JSON path")
+    args = ap.parse_args()
+    run(smoke=args.smoke, sf=args.sf, out_path=args.out)

@@ -55,6 +55,7 @@ def bench_module(bench: str) -> str:
         "members": "member_sweep",
         "mesh": "mesh_sweep",
         "batch": "batch_sweep",
+        "chaos": "chaos_sweep",
     }[bench]
 
 
@@ -262,8 +263,63 @@ def gate_batch(fresh: Dict, ref: Dict, tol: float) -> List[str]:
     return failures
 
 
+def gate_chaos(fresh: Dict, ref: Dict, tol: float) -> List[str]:
+    """§16 robustness is binary (survivor parity, termination, faulted-replay
+    determinism, and the faults=None fingerprint identity have no
+    tolerance); the graft/isolated P95 ratio under identical fault pressure
+    is deterministic under the virtual clock, so it must stay within ``tol``
+    of the reference. Hook overhead is wall-clock (runner-noisy at smoke
+    sizes), so it only gates against the reference plus a fixed slack."""
+    failures = []
+    ref_block = _ref_block(ref, "chaos")
+    acc = fresh.get("acceptance", {})
+    for flag in (
+        "survivor_parity_ok",
+        "all_terminated_ok",
+        "faults_exercised_ok",
+        "hook_identical_ok",
+        "replay_deterministic_ok",
+    ):
+        ok = bool(acc.get(flag))
+        print(f"chaos {flag:<24} {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(f"chaos: {flag} is false — §16 robustness contract broken")
+    r_ref = ref_block.get("acceptance", {}).get("p95_ratio_worst")
+    r_fresh = acc.get("p95_ratio_worst")
+    if r_ref is None or r_fresh is None:
+        failures.append(
+            f"chaos: P95 ratio missing (ref {r_ref}, fresh {r_fresh})"
+        )
+    else:
+        ceil = (1.0 + tol) * r_ref
+        ok = r_fresh <= ceil
+        print(
+            f"chaos P95 graft/isolated {r_fresh:.3f} "
+            f"(ref {r_ref:.3f}, ceil {ceil:.3f}) {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"chaos: graft/isolated P95 ratio {r_fresh} "
+                f"> ceil {ceil:.3f} (ref {r_ref})"
+            )
+    o_ref = ref_block.get("acceptance", {}).get("hook_overhead_pct")
+    o_fresh = acc.get("hook_overhead_pct")
+    if o_ref is not None and o_fresh is not None:
+        ceil = o_ref + 5.0  # percentage points of wall-clock slack
+        ok = o_fresh <= ceil
+        print(
+            f"chaos hook overhead {o_fresh:.2f}% "
+            f"(ref {o_ref:.2f}%, ceil {ceil:.2f}%) {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"chaos: hook overhead {o_fresh}% > ceil {ceil:.2f}% (ref {o_ref}%)"
+            )
+    return failures
+
+
 GATES = {"core": gate_core, "members": gate_members, "mesh": gate_mesh,
-         "batch": gate_batch}
+         "batch": gate_batch, "chaos": gate_chaos}
 
 # -- committed-artifact gate --------------------------------------------------
 
@@ -291,7 +347,8 @@ def gate_committed() -> List[str]:
             failures.append(f"committed: {name} missing bench header")
             continue
         family = {"BENCH_core.json": "core", "BENCH_members.json": "members",
-                  "BENCH_mesh.json": "mesh", "BENCH_batch.json": "batch"}.get(name)
+                  "BENCH_mesh.json": "mesh", "BENCH_batch.json": "batch",
+                  "BENCH_chaos.json": "chaos"}.get(name)
         if family and not obj.get("smoke") and "smoke_ref" not in obj:
             failures.append(
                 f"committed: {name} is full-size but has no smoke_ref block — "

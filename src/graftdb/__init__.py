@@ -18,8 +18,10 @@ from repro.api import (
     BoundaryExplain,
     EngineConfig,
     ExecutionBackend,
+    FaultPlan,
     GraftExplain,
     PallasBackend,
+    QueryCancelled,
     QueryFuture,
     ReferenceBackend,
     RequestFuture,
@@ -41,6 +43,8 @@ __all__ = [
     "ServingSession",
     "EngineConfig",
     "ServingConfig",
+    "FaultPlan",
+    "QueryCancelled",
     "QueryFuture",
     "RequestFuture",
     "GraftExplain",

@@ -10,6 +10,7 @@ Everything under ``repro.core`` / ``repro.serve`` is internal; this package
 (re-exported at top level as ``graftdb``) is the supported surface.
 """
 
+from ..core.faults import FaultPlan
 from .backends import ExecutionBackend, PallasBackend, ReferenceBackend, resolve_backend
 from .config import EngineConfig, ServingConfig
 from .explain import (
@@ -19,7 +20,7 @@ from .explain import (
     analyze_cohort,
     analyze_query,
 )
-from .futures import QueryFuture, RequestFuture
+from .futures import QueryCancelled, QueryFuture, RequestFuture
 from .serving import ServingSession, connect_serving
 from .session import Session, connect
 
@@ -30,6 +31,8 @@ __all__ = [
     "ServingSession",
     "EngineConfig",
     "ServingConfig",
+    "FaultPlan",
+    "QueryCancelled",
     "QueryFuture",
     "RequestFuture",
     "GraftExplain",

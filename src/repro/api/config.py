@@ -125,6 +125,11 @@ class EngineConfig:
     * ``batch_window`` — arrival window (seconds) of one cohort: arrivals
       within this span of the cohort's earliest member plan jointly. 0.0
       batches only same-instant ties.
+    * ``faults`` — deterministic chaos injection (DESIGN.md §16): a seeded
+      ``core.faults.FaultPlan`` arms the engine's fault hooks (morsel /
+      exchange / rehydrate / stall sites), replayed bit-identically under
+      the virtual clock. ``None`` (default) disarms every hook — the
+      fault-free path is byte-identical to prior releases.
     * ``member_major`` — the fused packed-mask morsel pipeline (DESIGN.md
       §11): per-morsel data-plane cost independent of the folded member
       count. False selects the retained per-member loops — the
@@ -154,6 +159,7 @@ class EngineConfig:
     mesh: Union[None, str, int, object] = None
     batch_planning: bool = False
     batch_window: float = 0.0
+    faults: Optional[object] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -293,6 +299,13 @@ class EngineConfig:
                 f"batch_window must be a non-negative number (seconds), "
                 f"got {self.batch_window!r}"
             )
+        if self.faults is not None:
+            from ..core.faults import FaultPlan
+
+            if not isinstance(self.faults, FaultPlan):
+                raise ValueError(
+                    f"faults must be a FaultPlan or None, got {self.faults!r}"
+                )
 
     def _wall_clocked(self) -> bool:
         """The configured clock is real-time: the 'wall' name, the

@@ -91,6 +91,9 @@ class GraftExplain:
     # rehydrates from the reuse plane, §12) | 'new'
     agg_decision: str
     boundaries: Tuple[BoundaryExplain, ...] = ()
+    # §16: the query unfolded to isolated execution after a fault (set on
+    # the captured report by QueryFuture.explain, never at admission)
+    degraded: bool = False
 
     # -- totals --------------------------------------------------------------
     def _all(self) -> List[BoundaryExplain]:
@@ -140,6 +143,7 @@ class GraftExplain:
             "mode": self.mode,
             "spine_scan": self.spine_scan,
             "agg_decision": self.agg_decision,
+            "degraded": self.degraded,
             "total_demand_rows": self.total_demand_rows,
             "represented_rows": self.represented_rows,
             "residual_rows": self.residual_rows,
@@ -169,8 +173,9 @@ class GraftExplain:
 
     def render(self) -> str:
         """Human-readable EXPLAIN GRAFT block."""
+        tag = " DEGRADED" if self.degraded else ""
         lines = [
-            f"EXPLAIN GRAFT q{self.qid} [{self.template}] mode={self.mode}",
+            f"EXPLAIN GRAFT q{self.qid} [{self.template}] mode={self.mode}{tag}",
             f"  spine scan: {self.spine_scan}  aggregate: {self.agg_decision}",
             f"  demand {self.total_demand_rows:,} rows = represented {self.represented_rows:,}"
             f" + residual {self.residual_rows:,} + unattached {self.unattached_rows:,}",
@@ -330,7 +335,7 @@ def _explain_boundary(engine, join: HashJoin, depth: int) -> BoundaryExplain:
             sel = engine.reuse.select_hash(engine, sig, b_q, demand)
             if sel is not None:
                 candidate = engine.reuse.ghost_hash(sel[0])
-                cached = True
+                cached = candidate is not None  # None: corrupt at load
     retired = bool(candidate is not None and candidate.retired_epoch is not None)
 
     # Represented extent: proven containment against allowed coverage.

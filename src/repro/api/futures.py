@@ -14,11 +14,25 @@ import numpy as np
 from ..core.plans import Query
 
 
+class QueryCancelled(RuntimeError):
+    """Raised by ``QueryFuture.result()`` when the query was cancelled —
+    explicitly, by a deadline, or by fault escalation (§16). The ``status``
+    attribute carries the terminal reason (``"cancelled"`` / ``"deadline"``
+    / ``"failed"``)."""
+
+    def __init__(self, message: str, status: str):
+        super().__init__(message)
+        self.status = status
+
+
 class QueryFuture:
     """Completion handle for one submitted query.
 
     * ``result()``  — the query's output columns; drives the session until
-      this query completes (or raises if the session cannot finish it).
+      this query completes (or raises ``QueryCancelled`` for a query that
+      terminated without one — §16).
+    * ``cancel()``  — cancel the query (§16); ``status`` / ``cancelled``
+      report the lifecycle outcome.
     * ``latency()`` — arrival -> completion seconds (session clock).
     * ``stats()``   — per-query execution stats (members, rows sunk, states).
     * ``explain()`` — the EXPLAIN GRAFT report captured at admission
@@ -40,10 +54,43 @@ class QueryFuture:
         h = self._handle
         return bool(h is not None and h.done)
 
+    @property
+    def status(self) -> str:
+        """Lifecycle status: ``"queued"`` (not yet admitted), ``"active"``,
+        ``"done"``, or a terminal §16 reason — ``"cancelled"`` /
+        ``"deadline"`` / ``"failed"``."""
+        reason = self._session._runner.cancelled_qids.get(self.qid)
+        if reason is not None:
+            return reason  # cancelled before admission: no handle exists
+        h = self._handle
+        if h is None:
+            return "queued"
+        if h.done:
+            return "done"
+        return h.status
+
+    @property
+    def cancelled(self) -> bool:
+        return self.status in ("cancelled", "deadline", "failed")
+
+    def cancel(self) -> bool:
+        """Cancel this query at the current morsel boundary (§16). False —
+        a no-op — once it completed or already cancelled, and always on a
+        closed session."""
+        return self._session.cancel(self.qid)
+
     # -- results --------------------------------------------------------------
     def result(self, wait: bool = True) -> Dict[str, np.ndarray]:
+        if self.cancelled:
+            raise QueryCancelled(
+                f"query q{self.qid} was cancelled ({self.status})", self.status
+            )
         if not self.done and wait:
             self._session.run()
+        if self.cancelled:
+            raise QueryCancelled(
+                f"query q{self.qid} was cancelled ({self.status})", self.status
+            )
         h = self._handle
         if h is None or not h.done:
             raise RuntimeError(
@@ -61,7 +108,12 @@ class QueryFuture:
     def stats(self) -> Dict[str, object]:
         h = self._handle
         if h is None:
-            return {"qid": self.qid, "template": self.query.template, "submitted": False}
+            return {
+                "qid": self.qid,
+                "template": self.query.template,
+                "submitted": False,
+                "status": self.status,
+            }
         kinds: Dict[str, int] = {}
         rows_sunk = 0
         for m in h.members:
@@ -74,6 +126,20 @@ class QueryFuture:
             "template": self.query.template,
             "submitted": True,
             "done": h.done,
+            # per-query lifecycle + degradation (§16)
+            "status": self.status,
+            "degraded": bool(h.degraded),
+            "faults": {
+                "faults_injected": int(eng_counters.get("faults_injected", 0)),
+                "retries": int(eng_counters.get("fault_retries", 0)),
+                "producer_handoffs": int(eng_counters.get("producer_handoffs", 0)),
+                "quarantined_states": int(eng_counters.get("quarantined_states", 0)),
+                "unfolds": int(eng_counters.get("unfolds", 0)),
+                "cancelled": int(eng_counters.get("cancelled", 0)),
+                "deadline_cancellations": int(
+                    eng_counters.get("deadline_cancellations", 0)
+                ),
+            },
             "t_submit": h.t_submit,
             "t_complete": h.t_complete,
             "latency_s": (h.t_complete - self.query.arrival) if h.done else None,
@@ -126,6 +192,7 @@ class QueryFuture:
                     "cache_spills",
                     "cache_evictions",
                     "rehydrate_bytes",
+                    "cache_corrupt",
                 )
             },
             # per-query admission record (§10): decision ('graft'/'fresh'/
@@ -138,7 +205,9 @@ class QueryFuture:
         }
 
     def explain(self):
-        """EXPLAIN GRAFT captured at this query's admission."""
+        """EXPLAIN GRAFT captured at this query's admission. A query that
+        unfolded after a fault (§16) reports ``degraded=True`` on top of
+        its admission-time plan."""
         exp = self._session._explains.get(self.qid)
         if exp is None:
             raise RuntimeError(
@@ -146,6 +215,11 @@ class QueryFuture:
                 "EngineConfig(capture_explain=True), or use "
                 "Session.explain_graft(query) pre-flight"
             )
+        h = self._handle
+        if h is not None and h.degraded and not exp.degraded:
+            import dataclasses
+
+            exp = dataclasses.replace(exp, degraded=True)
         return exp
 
     def __repr__(self) -> str:

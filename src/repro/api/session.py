@@ -11,6 +11,7 @@ never hand-assemble ``GraftEngine`` + ``Runner`` pairs.
 
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict, Iterable, List, Optional
 
 from ..core.engine import GraftEngine
@@ -59,6 +60,7 @@ class Session:
             reuse_cache_budget=self.config.reuse_cache_budget,
             reuse_disk_budget=self.config.reuse_disk_budget,
             mesh_plan=self._mesh_plan,
+            faults=self.config.faults,
         )
         if self._mesh_plan is not None and hasattr(self.backend, "probe_chain"):
             # single-device data mesh: the fused stage chain runs inside
@@ -93,18 +95,29 @@ class Session:
         self._closed = False
 
     # -- admission -----------------------------------------------------------
-    def submit(self, query: Query) -> QueryFuture:
+    def submit(self, query: Query, deadline: Optional[float] = None) -> QueryFuture:
         """Admit (or schedule) one query; returns its future.
 
         Queries with ``arrival <= now`` are grafted onto the shared
         execution immediately; later arrivals are admitted by ``run()``
-        when the clock reaches them.
+        when the clock reaches them. ``deadline`` (virtual seconds, §16)
+        cancels the query at the first morsel boundary at or past it —
+        still-queued arrivals never admit, in-flight ones tear down with
+        producer handoff; the future then reports status ``"deadline"``.
         """
         self._check_open()
         if query.qid in self._futures:
             raise ValueError(
                 f"duplicate query id q{query.qid}: build a fresh Query per submission"
             )
+        if deadline is not None:
+            if isinstance(deadline, bool) or not isinstance(deadline, (int, float)) \
+                    or not math.isfinite(deadline):
+                raise ValueError(
+                    f"deadline must be a finite number (virtual seconds) or "
+                    f"None, got {deadline!r}"
+                )
+            self._runner.deadlines[query.qid] = float(deadline)
         fut = QueryFuture(self, query)
         self._futures[query.qid] = fut
         if self.config.batch_planning:
@@ -121,6 +134,17 @@ class Session:
 
     def submit_all(self, queries: Iterable[Query]) -> List[QueryFuture]:
         return [self.submit(q) for q in queries]
+
+    def cancel(self, query) -> bool:
+        """Cancel one query by future, qid, or Query (§16). Queued arrivals
+        are removed before they ever admit; in-flight queries tear down at
+        the current morsel boundary with producer handoff. False — a
+        no-op — for unknown, completed, or already-cancelled queries, and
+        always after ``close()``."""
+        if self._closed:
+            return False
+        qid = getattr(query, "qid", query)
+        return self._runner.cancel(int(qid))
 
     def _capture_explain(self, query: Query) -> None:
         self._explains[query.qid] = analyze_query(self._engine, query)
@@ -320,11 +344,24 @@ class Session:
         if self._closed:
             return
         self._closed = True
-        # external pins first: a pinned state is never evictable
-        for qid in list(self._runner._queued_pins):
-            self._runner._unpin_candidates(qid)
-        self._runner._admit_queue.clear()
+        runner = self._runner
         eng = self._engine
+        # queued arrivals resolve as cancelled — they never got a handle
+        for entry in list(runner._heap) + list(runner._admit_queue):
+            runner.cancelled_qids[entry[1]] = "cancelled"
+            eng.counters["cancelled"] += 1
+        runner._heap.clear()
+        runner.deadlines.clear()
+        # external pins first: a pinned state is never evictable
+        for qid in list(runner._queued_pins):
+            runner._unpin_candidates(qid)
+        runner._admit_queue.clear()
+        # in-flight queries cancel jointly: the whole active set is doomed
+        # at once, so teardown never hands a producer to a dying peer
+        active = [h for h in list(eng.active_handles) if h.status == "active"]
+        doomed = {h.qid for h in active}
+        for h in active:
+            eng.cancel_query(h, doomed=doomed)
         if eng.reuse is not None:
             # flush BEFORE the final eviction pass so the force-evicted
             # states are destroyed, not respilled into a store we just

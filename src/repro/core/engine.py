@@ -26,11 +26,12 @@ import numpy as np
 
 from ..relational.table import Database
 from .descriptors import StateSignature, aggregate_signature
+from .faults import FaultPlan, FaultPlane
 from .grafting import all_boundaries, estimate_demand, plan_spine, resolve_boundary
 from .plans import Aggregate, OrderBy, Query
-from .predicates import TRUE
+from .predicates import TRUE, Conjunction
 from .reuse import ReusePlane
-from .runtime import AggGate, AggSink, Member, Pipeline, ProbeOp, ScanNode
+from .runtime import AggGate, AggSink, Gate, Member, Pipeline, ProbeOp, ScanNode
 from .state import SharedAggregateState, SharedHashBuildState, StateLifecycle
 
 
@@ -109,6 +110,14 @@ class QueryHandle:
         self.done = False
         # boundaries this query served by rehydrating a cached artifact (§12)
         self.cache_hits = 0
+        # lifecycle (§16): 'active' until completion or a terminal verdict —
+        # 'cancelled' (QueryFuture.cancel / Session.close), 'deadline'
+        # (submit(deadline=) expired), or 'failed' (fault escalation after
+        # the query already unfolded once).
+        self.status = "active"
+        # the query unfolded to isolated execution after a fault (§16):
+        # surfaced in stats() and as the EXPLAIN GRAFT ``degraded`` flag
+        self.degraded = False
 
     @property
     def latency(self) -> float:
@@ -131,6 +140,7 @@ class GraftEngine:
         reuse_cache_budget: Optional[int] = None,
         reuse_disk_budget: Optional[int] = None,
         mesh_plan=None,
+        faults: Optional[FaultPlan] = None,
     ):
         self.db = db
         self.mode = MODES[mode]
@@ -239,9 +249,29 @@ class GraftEngine:
             "cache_high_water_bytes",
             "cache_disk_bytes",
             "cache_disk_high_water_bytes",
+            # fault plane + query lifecycle (§16) — present (zero) from the
+            # start so stats dicts stay shape-stable with faults=None
+            "faults_injected",
+            "fault_retries",
+            "producer_handoffs",
+            "quarantined_states",
+            "unfolds",
+            "cancelled",
+            "deadline_cancellations",
+            "cache_corrupt",
         ):
             self.counters[k] = 0.0
         self.lifecycle = StateLifecycle(retention, memory_budget, self.counters)
+        # Fault plane (§16): None keeps every hook compiled out of the hot
+        # paths — the faults=None engine is fingerprint-identical to the
+        # pre-fault-plane engine (locked by the chaos overhead leg).
+        self.faults: Optional[FaultPlane] = None
+        if faults is not None:
+            if not isinstance(faults, FaultPlan):
+                raise ValueError(
+                    f"faults must be a FaultPlan or None, got {faults!r}"
+                )
+            self.faults = FaultPlane(faults, self.counters)
         # Reuse plane (DESIGN.md §12): evicted retired states spill into a
         # tiered artifact cache instead of being destroyed. Only meaningful
         # under epoch retention — refcount release never evicts.
@@ -254,6 +284,7 @@ class GraftEngine:
                 reuse_cache_budget,
                 disk_budget=reuse_disk_budget,
                 counters=self.counters,
+                faults=self.faults,
             )
         elif reuse_disk_budget is not None:
             raise ValueError("reuse_disk_budget requires reuse_cache_budget")
@@ -279,6 +310,12 @@ class GraftEngine:
         self._next_mid = 0
         self._next_pid = 0
         self._next_sid = 0
+        # §16 producer handoff: lens leases keep a dead query's attachment
+        # (slot visibility + grants + ref) alive on the upstream states its
+        # adopted replacement members still probe through ``lens_qid``.
+        # (lens_qid, state_id) -> (state, {replacement members}); released
+        # — detaching the dead lens — once every holder finishes.
+        self._lens_leases: Dict[Tuple[int, int], Tuple[object, set]] = {}
 
         # clock is attached by the scheduler
         self.clock = None
@@ -333,7 +370,15 @@ class GraftEngine:
         self.handles[query.qid] = handle
         self.active_handles.append(handle)
         self.counters["submitted"] += 1
+        self._install_query(handle)
+        return handle
 
+    def _install_query(self, handle: QueryHandle) -> None:
+        """Resolve one active handle's plan against the engine's current
+        shared state: the grafting admission body of ``submit``, factored
+        so unfolding (§16) can re-install a torn-down query under a
+        temporary isolated-mode override."""
+        query = handle.query
         scan, joins, agg, orderby = plan_spine(query.plan)
         handle.orderby = orderby
 
@@ -360,7 +405,7 @@ class GraftEngine:
                     self.counters["eliminated_rows"] += d
                 self.state_gen += 1
                 self._maybe_complete(handle)
-                return handle
+                return
 
         # -- per-boundary grafting admission (Algorithm 1), bottom-up
         ops: List[ProbeOp] = []
@@ -422,7 +467,6 @@ class GraftEngine:
 
         self.state_gen += 1
         self.check_activations()
-        return handle
 
     def _agg_attachable(self, agg_state: SharedAggregateState) -> bool:
         share = self.mode.agg_share
@@ -462,6 +506,8 @@ class GraftEngine:
     _dirty = False
 
     def check_activations(self) -> None:
+        if self._lens_leases:
+            self._release_lens_leases()
         now = self.clock.now if self.clock is not None else 0.0
         for pipeline in list(self.pipelines.values()):
             for m in pipeline.members:
@@ -520,6 +566,330 @@ class GraftEngine:
                     self._remove_from_indexes(agg)
         if self.retention == "epoch":
             self.enforce_memory_budget()
+
+    # -- fault tolerance: cancellation, handoff, quarantine, unfold (§16) ----
+    def cancel_query(self, handle: QueryHandle, reason: str = "cancelled",
+                     doomed: Optional[set] = None) -> bool:
+        """Terminate one active query at a morsel boundary: hand its
+        incomplete shared-state producers to surviving folded beneficiaries
+        (or seal the state at its last complete extent), detach its lenses
+        (detach-clears-visibility keeps retained rows sound, §10), and mark
+        the handle with a terminal status. ``doomed`` widens the
+        no-adoption set (Session.close cancels everything at once). Riders
+        of an aggregate this query was producing unfold to isolated
+        execution — no beneficiary is ever stranded."""
+        if handle.done or handle.status != "active":
+            return False
+        dm = set(doomed) if doomed is not None else set()
+        dm.add(handle.qid)
+        riders = self._teardown(handle, dm)
+        handle.status = reason
+        if handle in self.active_handles:
+            self.active_handles.remove(handle)
+        self.counters["cancelled"] += 1
+        if reason == "deadline":
+            self.counters["deadline_cancellations"] += 1
+        self.state_gen += 1
+        for rh in riders:
+            self.unfold(rh)
+        if self.retention == "epoch":
+            self.enforce_memory_budget()
+        self.check_activations()
+        return True
+
+    def unfold(self, handle: QueryHandle) -> bool:
+        """Degrade one active query to isolated execution (§16): tear down
+        its folded plan — producers hand off to surviving beneficiaries
+        exactly as under cancellation, so the cohort keeps its coverage —
+        and re-install it under a private-everything isolated plan. The §4
+        soundness argument is preserved trivially: the unfolded plan
+        observes only states it produces itself."""
+        if handle.done or handle.status != "active":
+            return False
+        riders = self._teardown(handle, {handle.qid})
+        handle.degraded = True
+        self.counters["unfolds"] += 1
+        self._install_isolated(handle)
+        self.state_gen += 1
+        for rh in riders:
+            self.unfold(rh)
+        self.check_activations()
+        return True
+
+    def quarantine_state(self, state) -> int:
+        """Tombstone one shared hash state after fault escalation (§16):
+        every impacted active query is torn down (their producers on OTHER
+        states still hand off to outside beneficiaries), the state dies
+        through the §10 eviction path — but never spills into the reuse
+        plane, its fragments are suspect — and the impacted queries unfold
+        to isolated execution. A query that already unfolded once fails
+        instead (bounded degradation ⇒ chaos runs terminate). Returns the
+        number of impacted queries."""
+        if state.quarantined or state.evicted:
+            return 0
+        state.quarantined = True
+        impacted = [
+            h for h in self.active_handles
+            if not h.done and h.status == "active" and state in h.attached_states
+        ]
+        impacted.sort(key=lambda h: h.qid)
+        doomed = {h.qid for h in impacted}
+        riders: List[QueryHandle] = []
+        for h in impacted:
+            riders.extend(self._teardown(h, doomed))
+        self.lifecycle.drop(state)
+        state.evicted = True
+        self._remove_from_indexes(state)
+        self.counters["quarantined_states"] += 1
+        self.state_gen += 1
+        for h in impacted:
+            if h.done or h.status != "active":
+                continue
+            if h.degraded:
+                self.cancel_query(h, "failed")
+            else:
+                h.degraded = True
+                self.counters["unfolds"] += 1
+                self._install_isolated(h)
+        for rh in riders:
+            if rh.qid not in doomed:
+                self.unfold(rh)
+        self.check_activations()
+        return len(impacted)
+
+    def _install_isolated(self, handle: QueryHandle) -> None:
+        """Re-install a torn-down handle under a temporary isolated-mode
+        override: private scan, private pipelines, private states, private
+        aggregate — no index registration, so nothing later folds onto a
+        degraded execution."""
+        prev = self.mode
+        self.mode = MODES["isolated"]
+        try:
+            self._install_query(handle)
+        finally:
+            self.mode = prev
+
+    def _teardown(self, handle: QueryHandle, doomed: set) -> List[QueryHandle]:
+        """Dismantle one active handle's execution. ``doomed`` is the set of
+        qids dying in this event — adoption never targets them. Returns the
+        surviving riders of an aggregate this handle was producing (the
+        caller unfolds them once its own teardown settles)."""
+        replaced: Dict[int, Member] = {}
+        agg = handle.agg_state
+        was_producer = agg is not None and any(
+            self._agg_producers.get(m.mid) is agg and not m.done
+            for m in handle.members
+        )
+        # outermost first (members are appended bottom-up): a downstream
+        # producer adopts its doomed upstream chain before the loop reaches
+        # those upstream members, so they are never wrongly sealed
+        for m in reversed(list(handle.members)):
+            if m.done:
+                self._agg_producers.pop(m.mid, None)
+                continue
+            self._retire_member(m, doomed, replaced)
+        # lens-owner tagging is only needed on target states a replacement
+        # actually probes through the dead lens (= the leased states, all
+        # registered by now); everywhere else it would re-allocate the dead
+        # query a visibility slot at sink time and leak it
+        for m2 in replaced.values():
+            lq = m2.lens_qid
+            tgt = m2.pipeline.build_target.state
+            if lq in m2.beneficiaries and (lq, tgt.state_id) not in self._lens_leases:
+                m2.beneficiaries.remove(lq)
+        handle.members = []
+        for s in list(handle.attached_states):
+            if (handle.qid, s.state_id) in self._lens_leases:
+                # a replacement member probes this state through the dying
+                # query's lens: keep the attachment (slot, vis, grants, ref)
+                # alive — the lease release detaches it once the
+                # replacement finishes
+                continue
+            s.detach(handle.qid)
+            if s.quarantined or s.evicted:
+                continue
+            if not s.refs:
+                if self.retention == "epoch":
+                    self.lifecycle.retire(s)
+                else:
+                    self._remove_from_indexes(s)
+        handle.attached_states = []
+        riders: List[QueryHandle] = []
+        if agg is not None:
+            agg.detach(handle.qid)
+            if was_producer and not agg.complete:
+                # the shared aggregate lost its producer mid-accumulation:
+                # partial sums can never complete and redelivery would
+                # double-count, so the identity leaves the index and its
+                # surviving riders unfold
+                self._remove_from_indexes(agg)
+                for q in sorted(agg.refs):
+                    if q in doomed:
+                        continue
+                    rh = self.handles.get(q)
+                    if rh is not None and not rh.done and rh.status == "active":
+                        riders.append(rh)
+            if not agg.refs and agg.sig is not None and self.agg_index.get(agg.sig) is agg:
+                if self.retention == "epoch":
+                    self.lifecycle.retire(agg)
+                else:
+                    self._remove_from_indexes(agg)
+            handle.agg_state = None
+            handle.agg_gate = None
+        return riders
+
+    def _retire_member(self, m: Member, doomed: set, replaced: Dict[int, Member]) -> None:
+        """Remove one incomplete member of a dying/unfolding query. A
+        state-producing member with surviving beneficiaries is adopted
+        (producer handoff); with none, its incomplete extent is voided —
+        the state seals at its last complete extent."""
+        pipeline = m.pipeline
+        bt = pipeline.build_target if pipeline is not None else None
+        if bt is not None:
+            state = bt.state
+            survivors = []
+            for g in m.waiting_gates:
+                if m not in g.pending or g.owner_qid is None or g.owner_qid in doomed:
+                    continue
+                oh = self.handles.get(g.owner_qid)
+                if oh is None or oh.done or oh.status != "active":
+                    continue
+                survivors.append(g)
+            m2 = replaced.get(m.mid)
+            if m2 is None and survivors and not state.quarantined:
+                adopter = self.handles[min(g.owner_qid for g in survivors)]
+                m2 = self._adopt_producer(m, adopter, doomed, replaced)
+                self.counters["producer_handoffs"] += 1
+            if m2 is not None:
+                for g in survivors:
+                    g.pending.discard(m)
+                    if m2 not in g.pending:
+                        g.pending.add(m2)
+                        m2.waiting_gates.append(g)
+            else:
+                for g in m.waiting_gates:
+                    g.pending.discard(m)
+                if not state.quarantined:
+                    state.void_extent(m.eid)
+        else:
+            for g in m.waiting_gates:
+                g.pending.discard(m)
+        self._drop_member(m)
+
+    def _adopt_producer(self, m: Member, adopter: QueryHandle, doomed: set,
+                        replaced: Dict[int, Member]) -> Member:
+        """Producer handoff (§16): the surviving beneficiary ``adopter``
+        re-installs the doomed member's delivery obligation as its own.
+        The replacement reuses the SAME extent id — redelivery of the full
+        scan cycle dedups through ``insert_or_mark`` (existing rows are
+        re-marked under the adopter's visibility bit, the extent's
+        provenance bit is unchanged for every grant holder) and
+        ``Gate.open`` re-proves coverage at completion, so adoption is
+        sound and deterministic. Upstream gates are cloned for the adopter;
+        doomed upstream producers are adopted recursively.
+
+        The replacement probes upstream states through the DEAD query's
+        lens (``lens_qid``): the adopter typically holds no slot or grant
+        on the producer's upstream states, and any grant it does hold
+        scopes a different visible set — only the dead lens reproduces the
+        dead member's rows exactly. A lens lease keeps the dead query
+        attached to those states until every replacement holding the lens
+        finishes. The lens owner also stays a beneficiary so that sibling
+        replacements downstream (which probe through the same dead lens)
+        observe rows this replacement redelivers."""
+        existing = replaced.get(m.mid)
+        if existing is not None:
+            return existing
+        pipeline = m.pipeline
+        state = pipeline.build_target.state
+        new_gates = []
+        for g in m.gates:
+            if g.open():
+                new_gates.append(g)  # immutable once open: share it
+                continue
+            g2 = Gate(g.state, g.conj, g.allowed_emask)
+            g2.owner_qid = adopter.qid
+            for p in sorted(g.pending, key=lambda x: x.mid):
+                if p.qid in doomed and not p.done:
+                    p2 = self._adopt_producer(p, adopter, doomed, replaced)
+                    if p2 not in g2.pending:
+                        g2.pending.add(p2)
+                        p2.waiting_gates.append(g2)
+                else:
+                    g2.pending.add(p)
+                    p.waiting_gates.append(g2)
+            if g.state not in adopter.attached_states:
+                self.attach_shared(adopter, g.state)
+            new_gates.append(g2)
+        benes = [q for q in m.beneficiaries if q not in doomed]
+        if adopter.qid not in benes:
+            benes.append(adopter.qid)
+        if m.lens_qid not in benes:
+            benes.append(m.lens_qid)
+        m2 = Member(
+            self.next_member_id(),
+            adopter.qid,
+            m.pred,
+            new_gates,
+            sink=None,
+            stage_filters=m.stage_filters,
+            kind=m.kind,
+            eid=m.eid,
+            conj=m.conj,
+            beneficiaries=benes,
+        )
+        m2.waiting_gates = []
+        m2.pipeline = pipeline
+        m2.lens_qid = m.lens_qid
+        pipeline.add_member(m2)
+        adopter.members.append(m2)
+        if state not in adopter.attached_states:
+            self.attach_shared(adopter, state)
+        for op in pipeline.ops:
+            key = (m2.lens_qid, op.state.state_id)
+            lease = self._lens_leases.get(key)
+            if lease is None:
+                self._lens_leases[key] = (op.state, {m2})
+            else:
+                lease[1].add(m2)
+        replaced[m.mid] = m2
+        return m2
+
+    def _drop_member(self, m: Member) -> None:
+        """Physically remove one member from its pipeline (empty pipelines
+        die and detach from their scan, exactly as at completion)."""
+        pipeline = m.pipeline
+        self._agg_producers.pop(m.mid, None)
+        if pipeline is not None and m in pipeline.members:
+            pipeline.slots.release(m.mid)
+            pipeline.release_member(m)
+            pipeline.members.remove(m)
+            if not pipeline.members:
+                self.pipelines.pop(pipeline.key, None)
+                pipeline.source.detach(pipeline)
+        m.done = True
+        m.active = False
+
+    def _release_lens_leases(self) -> None:
+        """Drop lens leases whose replacement members all finished (§16):
+        detach the dead query's lens from the upstream state — clearing its
+        visibility bit before the slot recycles, exactly as a live detach
+        would — and retire the state if nothing else references it."""
+        for key in list(self._lens_leases):
+            state, members = self._lens_leases[key]
+            live = {m for m in members if not m.done}
+            if live:
+                self._lens_leases[key] = (state, live)
+                continue
+            del self._lens_leases[key]
+            state.detach(key[0])
+            if state.quarantined or state.evicted:
+                continue
+            if not state.refs:
+                if self.retention == "epoch":
+                    self.lifecycle.retire(state)
+                else:
+                    self._remove_from_indexes(state)
 
     # -- lifecycle: eviction + memory accounting (§10) -----------------------
     def _remove_from_indexes(self, state) -> None:

@@ -361,6 +361,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
                 engine.counters["demand_rows"] += d
                 engine.counters["eliminated_rows"] += d
             gate = Gate(candidate, b_q, allowed)
+            gate.owner_qid = qid
             return Attachment(candidate, gate, created=False)
         if pend_mask and candidate.covers_with_pending(b_q, allowed, pend_conjs):
             # Fully represented once the cohort-mates' producers complete:
@@ -378,6 +379,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
                 engine.counters["demand_rows"] += d
                 engine.counters["eliminated_rows"] += d
             gate = Gate(candidate, b_q, allowed | pend_mask)
+            gate.owner_qid = qid
             for p_member in pend_members:
                 gate.pending.add(p_member)
                 p_member.waiting_gates.append(gate)
@@ -400,6 +402,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
                 # query's own visibility bit, so its completion alone is a
                 # sound gate — only coverage-based accounting is lost.
                 gate = Gate(candidate, None)
+            gate.owner_qid = qid
             gate.pending.add(member)
             member.waiting_gates.append(gate)
             return Attachment(candidate, gate, created=False, producer_member=member)
@@ -410,6 +413,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
         member, eid = _install_producer(engine, handle, join, candidate, b_q, kind="residual")
         _record_cohort_extent(engine, candidate, eid, b_q, member)
         gate = Gate(candidate, None)  # own producer completion suffices
+        gate.owner_qid = qid
         gate.pending.add(member)
         member.waiting_gates.append(gate)
         return Attachment(candidate, gate, created=False, producer_member=member)
@@ -429,6 +433,7 @@ def resolve_boundary(engine, handle, join: HashJoin) -> Attachment:
     member, eid = _install_producer(engine, handle, join, state, b_q, kind="ordinary")
     _record_cohort_extent(engine, state, eid, b_q, member)
     gate = Gate(state, None)
+    gate.owner_qid = qid
     gate.pending.add(member)
     member.waiting_gates.append(gate)
     if mode.qpipe:
@@ -537,6 +542,7 @@ def _qpipe_try_merge(engine, handle, join, sig, b_q) -> Optional[Attachment]:
     engine.attach_shared(handle, state)
     member.beneficiaries.append(handle.qid)
     gate = Gate(state, None)
+    gate.owner_qid = handle.qid
     gate.pending.add(member)
     member.waiting_gates.append(gate)
     engine.counters["qpipe_merges"] += 1

@@ -39,9 +39,13 @@ spill into it and rehydrate as live ``PrefixState``s (serve/folding.py).
 
 from __future__ import annotations
 
+import io
 import os
 import shutil
 import tempfile
+import time
+import weakref
+import zlib
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -97,6 +101,12 @@ def prefix_fingerprint(tokens: Tuple[int, ...]) -> tuple:
 # ---------------------------------------------------------------------------
 
 
+class CorruptArtifact(Exception):
+    """A disk-tier artifact failed its integrity check (checksum mismatch,
+    truncation, or an unreadable archive). Never escapes the store: ``get``
+    converts it to a cache miss (§16)."""
+
+
 class StateArtifact:
     """One spilled state: small always-resident ``meta`` (fingerprint,
     signature, extent registry, scalar counters) plus the bulk ``arrays``
@@ -143,10 +153,14 @@ class ArtifactStore:
         self._paths: Dict[tuple, str] = {}
         self._by_sig: Dict[tuple, List[tuple]] = {}  # (kind, sig.key) -> [fingerprint]
         self._dir: Optional[str] = None
+        self._finalizer = None  # rmtree-on-GC guard for the temp dir
+        self._sums: Dict[tuple, int] = {}  # fingerprint -> crc32 of the .npz bytes
         self._seq = 0
         self.mem_bytes = 0
         self.disk_bytes = 0
         self.closed = False
+        if disk_budget is not None:
+            self._sweep_stale()
 
     # -- bookkeeping ---------------------------------------------------------
     def _bump(self, key: str, v: float) -> None:
@@ -175,9 +189,54 @@ class ArtifactStore:
                 self._by_sig.pop(self._sig_key(fp), None)
 
     # -- disk tier -----------------------------------------------------------
+    @staticmethod
+    def _sweep_stale() -> None:
+        """Best-effort reclamation of ``graftdb-reuse-*`` temp dirs whose
+        owning process is gone (crashed or SIGKILLed before its finalizer
+        ran). Each dir carries an ``owner.pid`` marker; a dir with no
+        marker is only swept once comfortably stale, so a sibling store
+        mid-``mkdtemp`` is never raced."""
+        root = tempfile.gettempdir()
+        try:
+            names = os.listdir(root)
+        except OSError:
+            return
+        for name in sorted(names):
+            if not name.startswith("graftdb-reuse-"):
+                continue
+            d = os.path.join(root, name)
+            if not os.path.isdir(d):
+                continue
+            try:
+                with open(os.path.join(d, "owner.pid")) as f:
+                    pid = int(f.read().strip())
+            except (OSError, ValueError):
+                try:
+                    stale = time.time() - os.path.getmtime(d) > 3600.0
+                except OSError:
+                    continue
+                if stale:
+                    shutil.rmtree(d, ignore_errors=True)
+                continue
+            if pid == os.getpid():
+                continue
+            try:
+                os.kill(pid, 0)
+            except ProcessLookupError:
+                shutil.rmtree(d, ignore_errors=True)
+            except OSError:
+                continue  # alive but not ours (EPERM) — leave it
+
     def _disk_path(self, art: StateArtifact) -> str:
         if self._dir is None:
             self._dir = tempfile.mkdtemp(prefix="graftdb-reuse-")
+            with open(os.path.join(self._dir, "owner.pid"), "w") as f:
+                f.write(str(os.getpid()))
+            # the dir dies with the store even when close() is never
+            # called (interpreter exit, store dropped without flush)
+            self._finalizer = weakref.finalize(
+                self, shutil.rmtree, self._dir, True
+            )
         return os.path.join(self._dir, f"art{art.seq}.npz")
 
     def _demote(self, art: StateArtifact) -> bool:
@@ -189,6 +248,8 @@ class ArtifactStore:
             self._evict_disk_oldest()
         path = self._disk_path(art)
         np.savez(path, **art.arrays)
+        with open(path, "rb") as f:
+            self._sums[art.fingerprint] = zlib.crc32(f.read())
         shadow = StateArtifact(art.fingerprint, art.kind, art.sig, art.nbytes,
                                art.meta, arrays=None)
         shadow.seq = art.seq
@@ -206,13 +267,40 @@ class ArtifactStore:
         self._bump("cache_evictions", 1)
 
     def _remove_file(self, fp: tuple) -> None:
+        self._sums.pop(fp, None)
         path = self._paths.pop(fp, None)
         if path is not None and os.path.exists(path):
             os.unlink(path)
 
     def _load_arrays(self, fp: tuple) -> Dict[str, np.ndarray]:
-        with np.load(self._paths[fp]) as z:
-            return {k: z[k] for k in z.files}
+        """Read one disk-tier payload, verified against its spill-time
+        crc32. Truncation, bit flips, or an unreadable archive raise
+        ``CorruptArtifact`` — callers convert that to a cache miss."""
+        path = self._paths[fp]
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except OSError as e:
+            raise CorruptArtifact(f"unreadable artifact {path}: {e}") from None
+        want = self._sums.get(fp)
+        if want is not None and zlib.crc32(raw) != want:
+            raise CorruptArtifact(f"checksum mismatch for {path}")
+        try:
+            with np.load(io.BytesIO(raw)) as z:
+                return {k: z[k] for k in z.files}
+        except Exception as e:
+            raise CorruptArtifact(f"undecodable artifact {path}: {e}") from None
+
+    def _drop_corrupt(self, fp: tuple, shadow: StateArtifact) -> None:
+        """Integrity failure ⇒ cache miss (§16): the entry leaves both
+        tiers and the miss falls through to recompute — never an error on
+        the arrival path."""
+        self._disk.pop(fp, None)
+        self.disk_bytes -= shadow.nbytes
+        self._remove_file(fp)
+        self._index_drop(fp)
+        self._bump("cache_corrupt", 1)
+        self._gauge()
 
     # -- public surface ------------------------------------------------------
     def put(self, art: StateArtifact) -> bool:
@@ -259,8 +347,13 @@ class ArtifactStore:
         shadow = self._disk.get(fp)
         if shadow is None:
             return None
+        try:
+            arrays = self._load_arrays(fp)
+        except CorruptArtifact:
+            self._drop_corrupt(fp, shadow)
+            return None
         art = StateArtifact(shadow.fingerprint, shadow.kind, shadow.sig,
-                            shadow.nbytes, shadow.meta, self._load_arrays(fp))
+                            shadow.nbytes, shadow.meta, arrays)
         art.seq = shadow.seq
         return art
 
@@ -309,12 +402,17 @@ class ArtifactStore:
         return len(self._mem) + len(self._disk)
 
     def flush(self) -> None:
-        """Drop every artifact (both tiers) and reset the gauges."""
+        """Drop every artifact (both tiers) and reset the gauges. The temp
+        dir is removed here, not left for interpreter exit."""
         self._mem.clear()
         self._disk.clear()
         self._by_sig.clear()
+        self._sums.clear()
         for fp in list(self._paths):
             self._remove_file(fp)
+        if self._finalizer is not None:
+            self._finalizer.detach()
+            self._finalizer = None
         if self._dir is not None and os.path.isdir(self._dir):
             shutil.rmtree(self._dir, ignore_errors=True)
         self._dir = None
@@ -374,9 +472,11 @@ class ReusePlane:
     and the PoolClock determinism argument both survive unchanged."""
 
     def __init__(self, cost_model: Dict[str, float], budget: int,
-                 disk_budget: Optional[int] = None, counters: Optional[Dict] = None):
+                 disk_budget: Optional[int] = None, counters: Optional[Dict] = None,
+                 faults=None):
         self.cost_model = cost_model
         self.counters = counters if counters is not None else {}
+        self.faults = faults  # engine's FaultPlane (rehydrate site), or None
         self.store = ArtifactStore(budget, disk_budget, counters=self.counters)
         # (fingerprint, b_q.key()) -> (fully_covered, granted_entries);
         # artifacts are immutable once spilled, so entries never go stale —
@@ -596,14 +696,28 @@ class ReusePlane:
         }
         return st
 
-    def ghost_hash(self, art: StateArtifact) -> SharedHashBuildState:
+    def ghost_hash(self, art: StateArtifact) -> Optional[SharedHashBuildState]:
         """Unregistered rehydration for EXPLAIN: a throwaway state object
         carrying the artifact's coverage + entries so the read-only
         decision ladder can score it exactly like a live candidate. Never
-        touches the engine (fresh ids, no counters, no did index)."""
+        touches the engine (fresh ids, no counters, no did index). None
+        when the artifact turns out corrupt at load."""
         if art.arrays is None:
-            art = self.store.get(art.fingerprint) or art
+            art = self.store.get(art.fingerprint)
+            if art is None:
+                return None
         return self._build_hash(art.meta["state_id"], art, 1, None, index=False)
+
+    def _rehydrate_faulted(self, fp: tuple) -> bool:
+        """§16 ``rehydrate`` fault site: one draw per rehydration attempt.
+        A hit simulates artifact corruption — the entry is dropped and
+        counted exactly as a failed integrity check, and the caller falls
+        through to recompute."""
+        if self.faults is None or not self.faults.fire("rehydrate"):
+            return False
+        self.store.remove(fp)
+        self.counters["cache_corrupt"] = self.counters.get("cache_corrupt", 0) + 1
+        return True
 
     def try_rehydrate_hash(self, engine, handle, sig: StateSignature,
                            b_q: Optional[Conjunction], demand: int
@@ -618,6 +732,8 @@ class ReusePlane:
         if sel is None:
             return None
         art, _covered = sel
+        if self._rehydrate_faulted(art.fingerprint):
+            return None
         if art.arrays is None:
             art = self.store.get(art.fingerprint)
             if art is None:
@@ -642,6 +758,8 @@ class ReusePlane:
         caller's attach path then collapses the whole plan onto it."""
         art = self.peek_agg(engine, plan, agg, agg_sig)
         if art is None:
+            return None
+        if self._rehydrate_faulted(art.fingerprint):
             return None
         if art.arrays is None:
             art = self.store.get(art.fingerprint)

@@ -363,6 +363,10 @@ class Gate:
         self.allowed_emask = allowed_emask
         self.pending: set = set()  # producer Member objects still owed
         self._open_cache = False
+        # owning query (stamped at resolve_boundary): producer handoff
+        # (§16) reads it to find the surviving beneficiaries of a doomed
+        # producer — a gate's owner is the query its edge serves.
+        self.owner_qid: Optional[int] = None
 
     def open(self) -> bool:
         if self._open_cache:
@@ -460,6 +464,12 @@ class Member:
         self.eid = eid
         self.conj = conj
         self.beneficiaries = beneficiaries or [qid]
+        # §16 producer handoff: the qid whose state lens this member probes
+        # with. Equal to ``qid`` except for adopted replacement members,
+        # which continue a dead query's delivery obligation and must
+        # observe upstream states through the dead query's exact lens
+        # (slot visibility + grants) to reproduce its rows bit-identically.
+        self.lens_qid = qid
 
         self.active = False
         self.done = False
@@ -671,11 +681,11 @@ class Pipeline:
             grant_members: List[Member] = []
             kernelable = True
             for m in act:
-                if op.state.grants.get(m.qid):
+                if op.state.grants.get(m.lens_qid):
                     grant_members.append(m)
                     kernelable = False
                     continue
-                slot = op.state.slots.peek(m.qid)
+                slot = op.state.slots.peek(m.lens_qid)
                 if slot is not None:
                     # any slot 0..63 serves: the kernel lens mirrors are
                     # (lo, hi) uint32 pairs (DESIGN.md §13)
@@ -774,10 +784,10 @@ class Pipeline:
             grants = []
             n_grant_members = 0
             for m in act:
-                slot = op.state.slots.peek(m.qid)
+                slot = op.state.slots.peek(m.lens_qid)
                 if slot is not None:
                     target[slot] |= m.bitval
-                gs = op.state.grants.get(m.qid)
+                gs = op.state.grants.get(m.lens_qid)
                 if gs:
                     n_grant_members += 1
                     for allowed, conj in gs:
@@ -816,7 +826,7 @@ class Pipeline:
             use_post = (
                 n_members == 1
                 and n_grant_members == 0
-                and op.state.slots.peek(act[0].qid) is not None
+                and op.state.slots.peek(act[0].lens_qid) is not None
             )
             stages_meta.append(
                 {
@@ -955,7 +965,7 @@ class Pipeline:
                 if len(act) == 1 and not grant_members:
                     probe_visible = getattr(backend, "probe_visible", None)
                     if probe_visible is not None:
-                        fused_pair = probe_visible(op.state, keycodes, act[0].qid)
+                        fused_pair = probe_visible(op.state, keycodes, act[0].lens_qid)
                         if fused_pair is not None:
                             probe_idx, entry_idx = fused_pair
                             lens_fused = True
@@ -992,7 +1002,7 @@ class Pipeline:
                     words = op.state.vis.data[entry_idx]
                 vis_pl = translate_bits(words, vis_tables)
                 for m in grant_members:
-                    vm = op.state.visible_mask(m.qid, entry_idx)
+                    vm = op.state.visible_mask(m.lens_qid, entry_idx)
                     vis_pl = vis_pl | np.where(vm, m.bitval, U64_0)
                 new_bits = bits_in & vis_pl
                 engine.counters["fused_vis_rows"] += len(probe_idx) * (
@@ -1318,7 +1328,7 @@ class Pipeline:
                 if len(act) == 1:
                     probe_visible = getattr(backend, "probe_visible", None)
                     if probe_visible is not None:
-                        fused_pair = probe_visible(op.state, keycodes, act[0].qid)
+                        fused_pair = probe_visible(op.state, keycodes, act[0].lens_qid)
                         if fused_pair is not None:
                             probe_idx, entry_idx = fused_pair
                             lens_fused = True
@@ -1343,7 +1353,7 @@ class Pipeline:
                 if lens_fused:
                     bm = bit_of(bits_in, m.slot)
                 else:
-                    vis = op.state.visible_mask(m.qid, entry_idx)
+                    vis = op.state.visible_mask(m.lens_qid, entry_idx)
                     bm = bit_of(bits_in, m.slot) & vis
                 new_bits |= np.where(bm, m.bitval, U64_0)
             cols = {k: v[probe_idx] for k, v in cols.items()}
@@ -1441,7 +1451,7 @@ class Pipeline:
                 engine.counters["mesh_exchange_rows"] += xr
             cost += cm["probe"] * len(keycodes) + cm["match"] * len(probe_idx)
             engine.counters["probe_rows"] += len(keycodes)
-            vis = op.state.visible_mask(m.qid, entry_idx)
+            vis = op.state.visible_mask(m.lens_qid, entry_idx)
             ksel = np.flatnonzero(vis)
             probe_idx, entry_idx = probe_idx[ksel], entry_idx[ksel]
             mcols = {k: v[probe_idx] for k, v in mcols.items()}

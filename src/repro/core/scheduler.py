@@ -360,6 +360,13 @@ class Runner:
         # Called with the query right before each admission (the Session
         # facade captures EXPLAIN GRAFT snapshots through this).
         self.submit_hook: Optional[Callable[[Query], None]] = None
+        # fault tolerance + per-query lifecycle (§16): the engine's fault
+        # plane (None = hooks disarmed, zero overhead), virtual-time
+        # deadlines enforced at decision-step boundaries, and the terminal
+        # reason of arrivals cancelled before they ever got a handle.
+        self.faults = getattr(engine, "faults", None)
+        self.deadlines: Dict[int, float] = {}
+        self.cancelled_qids: Dict[int, str] = {}
 
     def add_arrival(self, query: Query) -> None:
         # keyed by (arrival, qid): permuted add_arrival orders of one trace
@@ -463,6 +470,116 @@ class Runner:
             "t_admitted": now,
         }
         self.submit_now(q)
+        self._after_events(on_complete)
+
+    # -- per-query lifecycle (§16) -------------------------------------------
+    def _remove_queued(self, qid: int) -> bool:
+        """Strip one not-yet-admitted arrival from the heap / admit queue
+        (dropping its eviction pins). True iff it was found."""
+        found = False
+        kept = [e for e in self._heap if e[1] != qid]
+        if len(kept) != len(self._heap):
+            self._heap = kept
+            heapq.heapify(self._heap)
+            found = True
+        kept_q = [e for e in self._admit_queue if e[1] != qid]
+        if len(kept_q) != len(self._admit_queue):
+            self._admit_queue = kept_q
+            found = True
+        if found:
+            self._unpin_candidates(qid)
+            self._drain_ver = None
+        return found
+
+    def cancel(self, qid: int, reason: str = "cancelled") -> bool:
+        """Cancel one query. Queued arrivals are removed before they ever
+        admit; an in-flight query tears down at this morsel boundary
+        (engine.cancel_query: producer handoff / seal, detach, riders
+        unfold). False for unknown or already-terminal qids — cancelling a
+        completed query is a no-op, its result stays valid."""
+        handle = self.engine.handles.get(qid)
+        self.deadlines.pop(qid, None)
+        if handle is None:
+            if not self._remove_queued(qid):
+                return False
+            self.cancelled_qids[qid] = reason
+            c = self.engine.counters
+            c["cancelled"] += 1
+            if reason == "deadline":
+                c["deadline_cancellations"] += 1
+            return True
+        if handle.done or handle.status != "active":
+            return False
+        ok = self.engine.cancel_query(handle, reason)
+        if ok:
+            self._drain_ver = None
+        return ok
+
+    def _apply_deadlines(self, now: float, on_complete) -> bool:
+        """Enforce due deadlines at a decision-step boundary — exactly an
+        explicit ``cancel(qid, "deadline")`` per expired query. Returns
+        True when anything was cancelled (the caller re-extracts its ready
+        units: a torn-down pipeline must not execute)."""
+        if not self.deadlines:
+            return False
+        expired = sorted(q for q, d in self.deadlines.items() if d <= now)
+        acted = False
+        for qid in expired:
+            if self.cancel(qid, "deadline"):
+                acted = True
+        if acted:
+            self._after_events(on_complete)
+        return acted
+
+    def _fault_gate(self, node, part, wclock, on_complete) -> bool:
+        """§16 fault hooks around one morsel advance. True ⇒ the morsel may
+        execute. A stall only delays the worker; a fault that survives the
+        bounded retries escalates — the morsel never runs, no state
+        mutates, and the impacted queries quarantine/unfold/fail."""
+        fp = self.faults
+        stall = fp.stall()
+        if stall > 0.0:
+            wclock.tick(stall)
+        site = "exchange" if self.engine.mesh_plan is not None else "morsel"
+        if fp.attempt(site, wclock):
+            return True
+        self._escalate(node, part, on_complete)
+        return False
+
+    def _escalate(self, node, part, on_complete) -> None:
+        """Retry exhaustion at one (scan × partition) unit. Every pipeline
+        that would have consumed the faulted morsel is affected: shared
+        build targets are quarantined (their fragments are suspect — the
+        engine tombstones them and unfolds the attached queries), and
+        main-pipeline queries not already handled by a quarantine unfold
+        to isolated execution (first escalation) or fail (second)."""
+        engine = self.engine
+        states: List = []
+        qids = set()
+        for pipeline in list(node.pipelines):
+            if not pipeline.active_members_for(part):
+                continue
+            bt = pipeline.build_target
+            if bt is not None:
+                if bt.state not in states:
+                    states.append(bt.state)
+            else:
+                qids.update(m.qid for m in pipeline.active_members_for(part))
+        handled = set()
+        for st in states:
+            handled.update(
+                h.qid for h in engine.active_handles if st in h.attached_states
+            )
+            engine.quarantine_state(st)
+        for qid in sorted(qids - handled):
+            h = engine.handles.get(qid)
+            if h is None or h.done or h.status != "active":
+                continue
+            if h.degraded:
+                engine.cancel_query(h, "failed")
+            else:
+                engine.unfold(h)
+        self._drain_ver = None
         self._after_events(on_complete)
 
     def worker_stats(self) -> Dict[str, object]:
@@ -631,6 +748,8 @@ class Runner:
                 wi = min(range(self.workers), key=lambda i: self.clocks[i].now)
                 wclock = self.clocks[wi]
                 self.clock.current = wclock
+                # due deadlines cancel before anything else at this step
+                self._apply_deadlines(wclock.now, on_complete)
                 # admit due arrivals (query grafting happens at submit)
                 self._admit_due(wclock.now, on_complete)
                 units = extract_ready_units(engine)
@@ -685,6 +804,12 @@ class Runner:
                 # re-admit anything that became due during the wait
                 wclock.advance_to(unit_ready_time(node, part))
                 self._admit_due(wclock.now, on_complete)
+                if self._apply_deadlines(wclock.now, on_complete):
+                    continue  # the unit may be gone: re-extract
+                if self.faults is not None and not self._fault_gate(
+                    node, part, wclock, on_complete
+                ):
+                    continue
                 cost = node.advance(engine, part)
                 wclock.tick(cost)
                 self.busy_s[wi] += cost

@@ -303,6 +303,10 @@ class SharedHashBuildState:
         self.pins: set = set()
         self.retired_epoch: Optional[int] = None
         self.evicted = False
+        # fault plane (§16): a quarantined state is mid-tombstone — its
+        # fragments may be corrupt, so teardown must neither retire it for
+        # later grafts nor spill it into the reuse plane.
+        self.quarantined = False
 
         # incremental multi-match probe index shards (DESIGN.md §8/§9),
         # synced lazily at probe time — build-only phases pay nothing.
@@ -367,9 +371,22 @@ class SharedHashBuildState:
         return eid
 
     def complete_extent(self, eid: int) -> None:
-        if eid >= 0:
+        if eid >= 0 and eid in self.extents:  # voided extents (§16) are gone
             conj, _ = self.extents[eid]
             self.extents[eid] = (conj, True)
+
+    def void_extent(self, eid: int) -> None:
+        """Seal the state at its last complete extent (§16): a cancelled or
+        failed producer with no surviving adopter withdraws its incomplete
+        extent from the registry. Sound because provenance bit ids are
+        monotonic (``_next_eid`` never reuses a voided bit), coverage and
+        grant evaluation iterate the registry (a missing eid simply grants
+        nothing), and the producer's partially delivered rows stay physical
+        but carry only the voided emask bit + doomed vis bits — invisible
+        to every lens."""
+        if eid >= 0:
+            self.extents.pop(eid, None)
+            self.extent_parts.pop(eid, None)
 
     def complete_extent_partition(self, eid: int, part: int, n_parts: int) -> None:
         """Record one scan partition of a producer extent as fully
@@ -921,6 +938,10 @@ class SharedAggregateState:
         self.pins: set = set()
         self.retired_epoch: Optional[int] = None
         self.evicted = False
+        # fault plane (§16): a quarantined state is mid-tombstone — its
+        # fragments may be corrupt, so teardown must neither retire it for
+        # later grafts nor spill it into the reuse plane.
+        self.quarantined = False
 
     def update(
         self,

@@ -1,0 +1,565 @@
+"""Fault-tolerant folded execution (DESIGN.md §16): seeded fault injection,
+per-query lifecycle (cancel / deadline), producer handoff, quarantine +
+unfold degradation, and the chaos differential-fuzz leg.
+
+The chaos fuzzer replays seeded random TPC-H workloads under seeded fault
+schedules across every sharing mode and worker count, with cancellation and
+deadline mixes folded in. Every query that survives must be bit-identical
+to the fault-free reference executor; every query that does not must carry
+a terminal §16 status and raise ``QueryCancelled`` — no silent wrong
+answers, no stranded beneficiaries, no leaked lens leases. Replaying the
+same (workload seed, fault seed) pair must reproduce statuses, results,
+and fault counters exactly: injection is a pure function of the virtual
+clock's schedule, never of wall time.
+
+Also covers the §16 satellites: checksum-verified disk artifacts (corrupt
+or truncated ``.npz`` = cache miss, never an arrival-path error), stale
+reuse temp-dir sweeping, and ``Session.close`` with queued + in-flight
+arrivals.
+
+Uses ``tests/_hypothesis_compat.py`` so tier-1 passes without hypothesis.
+"""
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+import graftdb
+from graftdb import EngineConfig, FaultPlan, QueryCancelled
+from repro.core.faults import SITES, FaultPlane
+from repro.core.reuse import ArtifactStore, StateArtifact
+from repro.relational import queries, refexec
+
+ALL_MODES = ["isolated", "scan_sharing", "qpipe_osp", "residual", "graft"]
+
+#: chaos workload seeds (base 31_000); each seed runs a mode x fault-mix
+#: sub-matrix, so the sweep covers every mode and every fault site
+CHAOS_SEEDS = range(6)
+
+#: same-plan pair under batch planning: the only admission shape where a
+#: query pends on a FOREIGN producer (§15 cohorts), i.e. where cancelling
+#: the producer exercises producer handoff rather than sealing
+BATCHED = dict(mode="graft", morsel_size=2048, batch_planning=True, batch_window=0.001)
+
+
+def _canon(res):
+    keys = sorted(res)
+    order = np.lexsort([np.asarray(res[k]) for k in keys])
+    return {k: np.asarray(res[k])[order] for k in keys}
+
+
+def _assert_parity(engine_res, ref_res, ctx):
+    ca, cb = _canon(engine_res), _canon(ref_res)
+    assert set(ca) == set(cb), ctx
+    for k in ca:
+        assert ca[k].shape == cb[k].shape, (ctx, k)
+        np.testing.assert_allclose(
+            ca[k], cb[k], rtol=1e-12, atol=1e-12, err_msg=f"{ctx}/{k}"
+        )
+
+
+def _workload(db, rng, n_lo=3, n_hi=6):
+    n = int(rng.integers(n_lo, n_hi))
+    qs, t = [], 0.0
+    for _ in range(n):
+        t += float(rng.choice([0.0, 0.002, 0.02]))
+        qs.append(queries.sample_query(db, rng, arrival=t))
+    return qs
+
+
+def _rebuild(db, qs):
+    return [
+        queries.make_query(db, q.template, q.params, arrival=q.arrival) for q in qs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlane: seeded deterministic injection
+# ---------------------------------------------------------------------------
+
+
+class _TickClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def tick(self, dt):
+        self.now += dt
+
+
+def test_fault_plane_is_deterministic_per_site():
+    plan = FaultPlan(seed=7, schedule={s: 0.3 for s in SITES})
+    seqs = []
+    for _ in range(2):
+        fp = FaultPlane(plan, counters={})
+        seqs.append([(s, fp.fire(s)) for _ in range(50) for s in SITES])
+    assert seqs[0] == seqs[1], "same (seed, site, index) must draw identically"
+    other = FaultPlane(FaultPlan(seed=8, schedule={s: 0.3 for s in SITES}), counters={})
+    assert seqs[0] != [(s, other.fire(s)) for _ in range(50) for s in SITES]
+
+
+def test_fault_plane_schedule_forms_and_caps():
+    c = {}
+    fp = FaultPlane(FaultPlan(seed=1, schedule={"morsel": {0, 2}}), counters=c)
+    assert [fp.fire("morsel") for _ in range(4)] == [True, False, True, False]
+    assert all(not fp.fire("exchange") for _ in range(10))  # unscheduled site
+    assert c["faults_injected"] == 2
+    capped = FaultPlane(
+        FaultPlan(seed=1, schedule={"morsel": 1.0}, max_injections=3), counters={}
+    )
+    assert sum(capped.fire("morsel") for _ in range(10)) == 3
+    assert not FaultPlane(FaultPlan(seed=1, schedule={"morsel": 0.0}), {}).fire("morsel")
+
+
+def test_fault_plan_validates():
+    with pytest.raises(ValueError):
+        FaultPlan(schedule={"warp_drive": 0.5})
+    with pytest.raises(ValueError):
+        FaultPlan(schedule={"morsel": 1.5})
+    with pytest.raises(ValueError):
+        FaultPlan(schedule={"morsel": 0.1}, retry_limit=-1)
+    with pytest.raises(ValueError):
+        EngineConfig(faults="chaos")  # must be a FaultPlan
+
+
+def test_attempt_retries_charge_virtual_clock():
+    clock = _TickClock()
+    c = {}
+    fp = FaultPlane(
+        FaultPlan(seed=3, schedule={"morsel": 1.0}, retry_limit=2, backoff_s=1e-4),
+        counters=c,
+    )
+    assert not fp.attempt("morsel", clock)  # rate 1.0: every retry faults too
+    assert c["faults_injected"] == 3  # initial + 2 retries
+    assert c["fault_retries"] == 2
+    assert clock.now == pytest.approx(1e-4 * (1 + 2))  # 2**0 + 2**1 backoff
+    ok_clock = _TickClock()
+    ok = FaultPlane(FaultPlan(seed=3, schedule={"morsel": 0.0}, retry_limit=2), {})
+    assert ok.attempt("morsel", ok_clock) and ok_clock.now == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Zero-perturbation identity: hooks must cost nothing semantically
+# ---------------------------------------------------------------------------
+
+
+def test_empty_schedule_bit_identical_to_no_faults(db):
+    rng = np.random.default_rng(31_000)
+    qs = _workload(db, rng)
+    outs = []
+    for faults in (None, FaultPlan(seed=123, schedule={})):
+        session = graftdb.connect(
+            db, EngineConfig(mode="graft", morsel_size=4096, faults=faults)
+        )
+        futs = session.submit_all(_rebuild(db, qs))
+        session.run()
+        outs.append(
+            (
+                [{k: np.asarray(v) for k, v in f.result().items()} for f in futs],
+                session.now,
+                {k: v for k, v in session._engine.counters.items()},
+            )
+        )
+        session.close()
+    (res_a, now_a, c_a), (res_b, now_b, c_b) = outs
+    assert now_a == now_b, "armed-but-empty FaultPlane perturbed the clock"
+    for ra, rb in zip(res_a, res_b):
+        assert set(ra) == set(rb)
+        for k in ra:
+            np.testing.assert_array_equal(ra[k], rb[k])
+    assert c_b["faults_injected"] == 0 and c_b["fault_retries"] == 0
+    for k in set(c_a) | set(c_b):
+        assert c_a.get(k, 0) == c_b.get(k, 0), f"counter {k} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Per-query lifecycle: cancel, deadline, QueryCancelled
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_and_deadline_lifecycle(db):
+    rng = np.random.default_rng(31_100)
+    q0, q1, q2 = (queries.sample_query(db, rng, arrival=0.0) for _ in range(3))
+    session = graftdb.connect(db, EngineConfig(mode="graft", morsel_size=2048))
+    f0 = session.submit(q0)
+    f1 = session.submit(q1, deadline=1e-7)  # expires before any progress
+    f2 = session.submit(q2, deadline=1e9)  # never expires
+    assert f0.status in ("queued", "active")
+    assert f0.cancel() is True
+    assert f0.status == "cancelled" and f0.cancelled
+    session.run()
+    assert f1.status == "deadline" and f1.cancelled
+    assert f2.status == "done" and not f2.cancelled
+    _assert_parity(f2.result(), refexec.execute(db, q2.plan), "deadline-met")
+    for f, status in ((f0, "cancelled"), (f1, "deadline")):
+        with pytest.raises(QueryCancelled) as ei:
+            f.result()
+        assert ei.value.status == status
+        assert f.stats()["status"] == status
+        assert f.cancel() is False  # terminal: cancel is a no-op
+    assert f2.cancel() is False  # completed: cancel is a no-op
+    stats = f2.stats()
+    assert stats["faults"]["cancelled"] >= 2
+    assert stats["faults"]["deadline_cancellations"] == 1
+    session.close()
+
+
+def test_submit_deadline_validation(db):
+    rng = np.random.default_rng(31_101)
+    session = graftdb.connect(db, EngineConfig(mode="graft"))
+    for bad in (float("nan"), float("inf"), "soon", True):
+        with pytest.raises((TypeError, ValueError)):
+            session.submit(queries.sample_query(db, rng), deadline=bad)
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Producer handoff: a dead producer's extents adopt to survivors
+# ---------------------------------------------------------------------------
+
+
+def test_producer_handoff_preserves_survivor_results(db):
+    """Batched same-plan pairs where the producing query hits its deadline
+    mid-delivery: surviving beneficiaries adopt the residual extents and
+    finish bit-identical to the fault-free oracle. The machinery assertion
+    (handoffs > 0) keeps the scenario honest — if admission shape changes
+    and nothing pends on a foreign producer, this test must fail loudly."""
+    handoffs = 0
+    deep = {"q3", "q4", "q5", "q7", "q9", "q10"}  # multi-join: several producers
+    for trial in range(8):
+        rng = np.random.default_rng(31_200 + trial)
+        q = queries.sample_query(db, rng)
+        while q.template not in deep:
+            q = queries.sample_query(db, rng)
+        oracle = refexec.execute(db, q.plan)
+        for deadline in (2e-5, 1e-4):
+            session = graftdb.connect(db, EngineConfig(**BATCHED))
+            fa = session.submit(
+                queries.make_query(db, q.template, q.params, arrival=0.0),
+                deadline=deadline,
+            )
+            fb = session.submit(queries.make_query(db, q.template, q.params, arrival=0.0))
+            session.run()
+            eng = session._engine
+            handoffs += int(eng.counters["producer_handoffs"])
+            assert not eng._lens_leases, "lens leases must drain by idle"
+            assert fb.status == "done", (trial, deadline, fb.status)
+            _assert_parity(fb.result(), oracle, f"handoff t{trial} dl={deadline}")
+            if fa.status == "done":
+                _assert_parity(fa.result(), oracle, f"handoff t{trial} fa")
+            else:
+                assert fa.status == "deadline"
+            session.close()
+    assert handoffs > 0, "no producer handoff exercised — scenario went stale"
+
+
+def test_unfold_marks_degraded_and_stays_correct(db):
+    """One injected morsel fault with retries exhausted: the impacted
+    queries unfold to isolated execution, finish correct, and report
+    ``degraded`` through stats() and EXPLAIN GRAFT."""
+    rng = np.random.default_rng(31_300)
+    qs = [queries.sample_query(db, rng, arrival=0.0) for _ in range(2)]
+    refs = [refexec.execute(db, q.plan) for q in qs]
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft",
+            morsel_size=4096,
+            capture_explain=True,
+            faults=FaultPlan(seed=5, schedule={"morsel": {0}}, retry_limit=0),
+        ),
+    )
+    futs = session.submit_all(_rebuild(db, qs))
+    session.run()
+    eng = session._engine
+    assert eng.counters["faults_injected"] >= 1
+    assert eng.counters["quarantined_states"] >= 1
+    assert eng.counters["unfolds"] >= 1
+    degraded = 0
+    for f, ref in zip(futs, refs):
+        assert f.status == "done", f.status
+        _assert_parity(f.result(), ref, "unfolded")
+        if f.stats()["degraded"]:
+            degraded += 1
+            assert f.explain().degraded
+            assert "DEGRADED" in f.explain().render()
+    assert degraded >= 1, "no query degraded — the fault never escalated"
+    session.close()
+
+
+def test_rate_one_fault_storm_terminates(db):
+    """Unit fault rate with one retry: bounded degradation guarantees the
+    run terminates and every query lands on a terminal status."""
+    for trial in range(3):
+        rng = np.random.default_rng(31_400 + trial)
+        qs = [queries.sample_query(db, rng, arrival=i * 0.001) for i in range(4)]
+        session = graftdb.connect(
+            db,
+            EngineConfig(
+                mode="graft",
+                morsel_size=4096,
+                faults=FaultPlan(seed=trial, schedule={"morsel": 1.0}, retry_limit=1),
+            ),
+        )
+        futs = session.submit_all(_rebuild(db, qs))
+        session.run()
+        for f in futs:
+            assert f.status == "failed", (trial, f.status)
+            with pytest.raises(QueryCancelled):
+                f.result()
+        assert not session._engine._lens_leases
+        session.close()
+
+
+# ---------------------------------------------------------------------------
+# Chaos differential fuzz: the §16 acceptance leg
+# ---------------------------------------------------------------------------
+
+FAULT_MIXES = (
+    ("morsel-light", {"morsel": 0.01}),
+    ("morsel-stall", {"morsel": 0.02, "stall": 0.05}),
+    ("rehydrate", {"rehydrate": 0.3, "morsel": 0.01}),
+)
+
+
+def _chaos_run(db, qs, mode, workers, sched, fault_seed, cancel_ix, deadline_ix):
+    cfg = dict(
+        mode=mode,
+        morsel_size=4096,
+        workers=workers,
+        partitions=workers,
+        faults=FaultPlan(seed=fault_seed, schedule=sched, retry_limit=2),
+    )
+    if "rehydrate" in sched:
+        cfg.update(retention="epoch", memory_budget=150_000,
+                   reuse_cache_budget=400_000)
+    session = graftdb.connect(db, EngineConfig(**cfg))
+    futs = []
+    for i, q in enumerate(_rebuild(db, qs)):
+        futs.append(
+            session.submit(q, deadline=(2e-4 if i in deadline_ix else None))
+        )
+    for i in cancel_ix:
+        futs[i].cancel()
+    session.run()
+    statuses = [f.status for f in futs]
+    results = [f.result() if s == "done" else None for f, s in zip(futs, statuses)]
+    counters = {
+        k: session._engine.counters.get(k, 0)
+        for k in ("faults_injected", "fault_retries", "producer_handoffs",
+                  "quarantined_states", "unfolds", "cancelled",
+                  "deadline_cancellations", "cache_corrupt")
+    }
+    assert not session._engine._lens_leases, "lens leases leaked"
+    session.close()
+    return statuses, results, counters
+
+
+def test_chaos_differential_fuzz(db):
+    """Seeded fault schedules x all five modes x workers {1, 4} x
+    cancellation/deadline mixes. Every surviving query is bit-identical to
+    the fault-free reference; every non-survivor is terminal. The sweep
+    self-checks that it actually injected faults and exercised retries."""
+    terminal = {"cancelled", "deadline", "failed"}
+    injected = retried = survived = killed = 0
+    for seed in CHAOS_SEEDS:
+        rng = np.random.default_rng(31_000 + seed)
+        qs = _workload(db, rng)
+        refs = [refexec.execute(db, q.plan) for q in qs]
+        mode = ALL_MODES[seed % len(ALL_MODES)]
+        mix_name, sched = FAULT_MIXES[seed % len(FAULT_MIXES)]
+        cancel_ix = {int(rng.integers(len(qs)))} if seed % 2 else set()
+        deadline_ix = {int(rng.integers(len(qs)))} if seed % 3 == 0 else set()
+        for workers in (1, 4):
+            statuses, results, counters = _chaos_run(
+                db, qs, mode, workers, sched, 900 + seed, cancel_ix, deadline_ix
+            )
+            injected += counters["faults_injected"]
+            retried += counters["fault_retries"]
+            for i, (status, res) in enumerate(zip(statuses, results)):
+                ctx = f"seed{seed}/{mode}/{mix_name}/w{workers}/q{i}"
+                if status == "done":
+                    survived += 1
+                    _assert_parity(res, refs[i], ctx)
+                else:
+                    killed += 1
+                    assert status in terminal, ctx
+                    if i in cancel_ix:
+                        continue  # explicitly cancelled: any terminal reason
+    assert injected > 0, "chaos sweep never injected a fault"
+    assert retried > 0, "chaos sweep never exercised a retry"
+    assert survived >= 20, f"too few survivors ({survived}) to claim parity coverage"
+    assert killed > 0, "no query was ever cancelled/failed — mixes too gentle"
+
+
+def test_chaos_replay_is_deterministic(db):
+    """Same (workload seed, fault seed): statuses, results, and fault
+    counters replay exactly — injection depends only on the virtual clock
+    schedule."""
+    rng = np.random.default_rng(31_900)
+    qs = _workload(db, rng)
+    runs = [
+        _chaos_run(db, qs, "graft", 4, {"morsel": 0.03, "stall": 0.05}, 42,
+                   cancel_ix=set(), deadline_ix={0})
+        for _ in range(2)
+    ]
+    (st_a, res_a, c_a), (st_b, res_b, c_b) = runs
+    assert st_a == st_b
+    assert c_a == c_b
+    for ra, rb in zip(res_a, res_b):
+        assert (ra is None) == (rb is None)
+        if ra is not None:
+            for k in ra:
+                np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]))
+
+
+# ---------------------------------------------------------------------------
+# Session.close with queued + in-flight arrivals (§16 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_session_close_cancels_queued_and_inflight(db):
+    rng = np.random.default_rng(31_500)
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft",
+            morsel_size=2048,
+            admission="adaptive",
+            admission_max_inflight=1,
+        ),
+    )
+    futs = [
+        session.submit(queries.sample_query(db, rng, arrival=i * 0.001))
+        for i in range(4)
+    ]
+    # a few scheduler steps: first query in flight, the rest queued
+    with pytest.raises(RuntimeError):
+        session._runner.run((), max_steps=4)
+    assert any(f.status == "active" for f in futs)
+    assert any(f.status == "queued" for f in futs)
+    session.close()
+    for f in futs:
+        assert f.status in ("cancelled", "done"), f.status
+        if f.status == "cancelled":
+            with pytest.raises(QueryCancelled):
+                f.result()
+        assert f.cancel() is False  # post-close: always a no-op
+    assert not session._runner._heap and not session._runner.deadlines
+    eng = session._engine
+    assert not eng.active_handles and not eng._lens_leases
+    assert not any(s.pins for h in eng.handles.values() for s in h.attached_states)
+
+
+def test_close_is_idempotent_and_post_close_submit_fails(db):
+    session = graftdb.connect(db, EngineConfig(mode="graft"))
+    session.close()
+    session.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        session.submit(queries.sample_query(db, np.random.default_rng(0)))
+
+
+# ---------------------------------------------------------------------------
+# Artifact integrity + temp-dir hygiene (§16 satellites)
+# ---------------------------------------------------------------------------
+
+
+def _disk_art(store, key, nbytes=400):
+    fp = ("hash_build", (key,), ())
+    art = StateArtifact(fp, "hash_build", None, nbytes, {},
+                       {"x": np.arange(max(1, nbytes // 8), dtype=np.float64)})
+    assert store.put(art)
+    return fp
+
+
+def test_corrupt_artifact_is_a_cache_miss():
+    c = {}
+    store = ArtifactStore(budget=100, disk_budget=10_000, counters=c)
+    fp = _disk_art(store, "flip")  # budget 100 < 400: lands on disk
+    path = store._paths[fp]
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    assert store.get(fp) is None  # miss, not an exception
+    assert c["cache_corrupt"] == 1
+    assert store.get(fp) is None  # entry fully dropped
+    assert c["cache_corrupt"] == 1
+    # truncation is also a miss
+    fp2 = _disk_art(store, "trunc")
+    path2 = store._paths[fp2]
+    open(path2, "wb").write(open(path2, "rb").read()[:16])
+    assert store.get(fp2) is None
+    assert c["cache_corrupt"] == 2
+    # deletion out from under the store is an unreadable-artifact miss
+    fp3 = _disk_art(store, "gone")
+    os.unlink(store._paths[fp3])
+    assert store.get(fp3) is None
+    assert c["cache_corrupt"] == 3
+    # the store remains fully serviceable after every corruption
+    fp4 = _disk_art(store, "fresh")
+    assert store.get(fp4) is not None
+    store.close()
+
+
+def test_rehydrate_fault_injection_counts_as_corrupt(db):
+    """``rehydrate`` site faults surface as artifact corruption: the cache
+    entry dies, the query recomputes, results stay correct."""
+    rng = np.random.default_rng(31_600)
+    qs = [queries.sample_query(db, rng, arrival=float(i)) for i in range(3)]
+    # repeat the same query so retirements spill and repeats rehydrate
+    qs = [queries.make_query(db, qs[0].template, qs[0].params, arrival=float(i))
+          for i in range(3)]
+    refs = [refexec.execute(db, q.plan) for q in qs]
+    session = graftdb.connect(
+        db,
+        EngineConfig(
+            mode="graft",
+            morsel_size=4096,
+            retention="epoch",
+            memory_budget=0,
+            reuse_cache_budget=64_000_000,
+            faults=FaultPlan(seed=9, schedule={"rehydrate": 1.0}),
+        ),
+    )
+    futs = session.submit_all(qs)
+    session.run()
+    c = session._engine.counters
+    assert c["cache_corrupt"] >= 1, "no rehydrate fault fired"
+    for f, ref in zip(futs, refs):
+        assert f.status == "done"
+        _assert_parity(f.result(), ref, "rehydrate-fault")
+    session.close()
+
+
+def test_disk_tier_temp_dir_cleanup_and_stale_sweep():
+    # close() removes this store's temp dir
+    store = ArtifactStore(budget=100, disk_budget=10_000)
+    _disk_art(store, "a")
+    d = store._dir
+    assert d is not None and os.path.isdir(d)
+    store.close()
+    assert not os.path.exists(d)
+
+    root = tempfile.gettempdir()
+    # a dir owned by a dead process is swept on the next store open
+    dead = tempfile.mkdtemp(prefix="graftdb-reuse-", dir=root)
+    with open(os.path.join(dead, "owner.pid"), "w") as f:
+        f.write("999999999")  # beyond pid_max: guaranteed dead
+    # a dir owned by THIS process is never touched
+    mine = tempfile.mkdtemp(prefix="graftdb-reuse-", dir=root)
+    with open(os.path.join(mine, "owner.pid"), "w") as f:
+        f.write(str(os.getpid()))
+    # a fresh un-marked dir (sibling mid-mkdtemp) is never raced
+    fresh = tempfile.mkdtemp(prefix="graftdb-reuse-", dir=root)
+    try:
+        s2 = ArtifactStore(budget=100, disk_budget=10_000)
+        assert not os.path.exists(dead), "dead-owner dir survived the sweep"
+        assert os.path.isdir(mine), "live-owner dir was swept"
+        assert os.path.isdir(fresh), "unmarked fresh dir was raced"
+        s2.close()
+    finally:
+        shutil.rmtree(mine, ignore_errors=True)
+        shutil.rmtree(fresh, ignore_errors=True)
+        shutil.rmtree(dead, ignore_errors=True)

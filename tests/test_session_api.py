@@ -290,6 +290,7 @@ def test_stats_expose_data_plane_counters(db):
         "cache_hits",
         "cache_spills",
         "cache_evictions",
+        "cache_corrupt",
         "rehydrate_bytes",
     }
     assert counters["fused_filter_rows"] > 0  # source predicates ran fused
